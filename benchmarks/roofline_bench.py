@@ -1,0 +1,34 @@
+"""Roofline benchmark: the 40-cell (arch x shape) table from the dry-run
+cache (launch/dryrun.py must have populated experiments/dryrun)."""
+from __future__ import annotations
+
+import os
+from typing import List
+
+from repro.launch.roofline import analyze_all, rows
+
+OUT_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def main() -> List[str]:
+    if not os.path.isdir(OUT_DIR) or not os.listdir(OUT_DIR):
+        return ["roofline/missing,0,run `python -m repro.launch.dryrun` first"]
+    cells = analyze_all(OUT_DIR, "single")
+    lines = []
+    for c in cells:
+        if c.status == "skipped":
+            lines.append(f"roofline/{c.arch}/{c.shape},0,skipped")
+            continue
+        if c.status != "ok":
+            lines.append(f"roofline/{c.arch}/{c.shape},0,{c.status}")
+            continue
+        lines.append(
+            f"roofline/{c.arch}/{c.shape},{c.bound_s*1e6:.1f},"
+            f"bound={c.bound};frac={c.roofline_fraction:.3f};"
+            f"useful={c.useful_ratio:.3f};fits={c.fits_hbm}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

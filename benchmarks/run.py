@@ -1,0 +1,69 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness runner.
+
+  PYTHONPATH=src python -m benchmarks.run          # all tables
+  PYTHONPATH=src python -m benchmarks.run table2   # one table
+
+Tables map to the paper: table1 (twin parameters), table2 (year
+simulations), table3 (engineering comparison), table4 (retention costs),
+plus the roofline table over the assigned (arch x shape) grid and a core
+micro-benchmark of the wind-tunnel primitives.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _micro() -> list:
+    """Micro-benchmarks of wind-tunnel primitives (span overhead etc.)."""
+    from repro.core.spans import SpanCollector, span
+    from repro.core.loadpattern import LoadPattern
+    col = SpanCollector()
+    n = 2000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with span("x", col):
+            pass
+    span_us = (time.perf_counter() - t0) / n * 1e6
+    lp = LoadPattern.ramp("r", 120, 40)
+    t0 = time.perf_counter()
+    for i in range(200):
+        lp.records_between(i % 100, i % 100 + 1)
+    lp_us = (time.perf_counter() - t0) / 200 * 1e6
+    return [f"micro/span_overhead,{span_us:.2f},per-span",
+            f"micro/loadpattern_integral,{lp_us:.2f},per-second-window"]
+
+
+TABLES = {
+    "micro": _micro,
+    "table1": lambda: __import__("benchmarks.table1_twins",
+                                 fromlist=["main"]).main(),
+    "table2": lambda: __import__("benchmarks.table2_sims",
+                                 fromlist=["main"]).main(),
+    "table3": lambda: __import__("benchmarks.table3_experiments",
+                                 fromlist=["main"]).main(),
+    "table4": lambda: __import__("benchmarks.table4_retention",
+                                 fromlist=["main"]).main(),
+    "roofline": lambda: __import__("benchmarks.roofline_bench",
+                                   fromlist=["main"]).main(),
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(TABLES)
+    print("name,us_per_call,derived")
+    for name in which:
+        fn = TABLES.get(name)
+        if fn is None:
+            print(f"{name},0,unknown-table")
+            continue
+        try:
+            for line in fn():
+                print(line, flush=True)
+        except Exception as e:   # noqa: BLE001 — report, keep going
+            print(f"{name}/error,0,{type(e).__name__}:{str(e)[:120]}")
+
+
+if __name__ == "__main__":
+    main()

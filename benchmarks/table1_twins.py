@@ -1,0 +1,64 @@
+"""Paper Table I: twin parameters fit from wind-tunnel experiments on the
+three telemetry pipeline variants (our measured CPU numbers, alongside the
+paper's published cloud numbers for reference)."""
+from __future__ import annotations
+
+import tempfile
+import time
+from typing import Dict, List
+
+from repro.core.experiment import Experiment
+from repro.core.loadpattern import LoadPattern
+from repro.core.twin import fit_simple_twin
+from repro.pipelines.telemetry import (TELEMETRY_VARIANTS,
+                                       make_telemetry_dataset,
+                                       make_telemetry_pipeline)
+
+PAPER = {  # variant -> (max rec/s, cents/hr, avg latency s)
+    "blocking-write": (1.95, 0.82, 0.15),
+    "no-blocking-write": (6.15, 7.03, 0.06),
+    "cpu-limited": (0.66, 0.27, 0.29),
+}
+
+
+def run(records: int = 40, peak_rate: float = 120.0, duration_s: float = 3.0
+        ) -> List[Dict]:
+    ds = make_telemetry_dataset(records, seed=11)
+    rows = []
+    for variant in TELEMETRY_VARIANTS:
+        pipe = make_telemetry_pipeline(variant,
+                                       blob_dir=tempfile.mkdtemp())
+        load = LoadPattern.ramp("ramp", duration_s=duration_s,
+                                peak_rate=peak_rate)
+        t0 = time.perf_counter()
+        res = Experiment(f"t1-{variant}", pipe, load, ds,
+                         drain_timeout_s=120).run()
+        wall = time.perf_counter() - t0
+        tw = fit_simple_twin(res)
+        p = PAPER[variant]
+        rows.append({
+            "model": variant,
+            "max_rps": round(tw.max_rps, 2),
+            "usd_per_hr": round(tw.usd_per_hour, 4),
+            "avg_latency_ms": round(tw.base_latency_s * 1e3, 3),
+            "policy": tw.policy,
+            "paper_rps": p[0], "paper_cents_hr": p[1],
+            "paper_latency_s": p[2],
+            "wall_s": round(wall, 2),
+        })
+    return rows
+
+
+def main() -> List[str]:
+    rows = run()
+    lines = []
+    for r in rows:
+        lines.append(f"table1/{r['model']},{r['wall_s']*1e6:.0f},"
+                     f"rps={r['max_rps']};usd_hr={r['usd_per_hr']};"
+                     f"lat_ms={r['avg_latency_ms']}")
+    return lines
+
+
+if __name__ == "__main__":
+    from repro.core.report import render_table
+    print(render_table(run(), "Table I (measured twins vs paper)"))

@@ -1,0 +1,70 @@
+"""Paper Table II: six (twin x traffic) year-long simulations using the
+paper's published twin parameters; validated against the published costs,
+SLO pattern and backlogs. Also times simulate_year ("the simulation is
+quite fast" — here ~1 ms/year after jit)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core.slo import SLO
+from repro.core.traffic import TrafficModel
+from repro.core.twin import SimpleTwin
+from repro.core.simulate import simulate_year
+from repro.core.whatif import run_grid, table2_rows
+
+TWINS = [
+    SimpleTwin("block", 1.9512, 0.0082, 0.15),
+    SimpleTwin("non-block", 6.15, 0.0703, 0.06),
+    SimpleTwin("cpu-lim", 0.6612, 0.0027, 0.29),
+]
+PAPER_COST = {"nom block": 71.87, "nom non-block": 614.19,
+              "nom cpu-lim": 50.56, "high block": 74.71,
+              "high non-block": 614.19, "high cpu-lim": 63.98}
+PAPER_SLO = {"nom block": True, "nom non-block": True, "nom cpu-lim": False,
+             "high block": False, "high non-block": True,
+             "high cpu-lim": False}
+
+
+def run() -> List[Dict]:
+    nom = TrafficModel.honda_default("nom", R=3.5, G=1.0)
+    high = TrafficModel.honda_default("high", R=3.5, G=1.5)
+    slo = SLO(limit_s=4 * 3600, met_fraction=0.95)
+    sims = run_grid(TWINS, [nom, high], slo=slo)
+    rows = table2_rows(sims)
+    for r in rows:
+        r["paper_cost"] = PAPER_COST[r["run"]]
+        r["cost_err_pct"] = round(100 * abs(r["cost_usd"] - r["paper_cost"])
+                                  / r["paper_cost"], 2)
+        r["slo_matches_paper"] = (r["slo_met"] == PAPER_SLO[r["run"]])
+    return rows
+
+
+def sim_speed_us() -> float:
+    nom = TrafficModel.honda_default("nom")
+    loads = nom.hourly_loads()
+    tw = TWINS[0]
+    simulate_year(tw, loads)                       # warm the jit cache
+    t0 = time.perf_counter()
+    n = 20
+    for _ in range(n):
+        simulate_year(tw, loads)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main() -> List[str]:
+    us = sim_speed_us()
+    rows = run()
+    lines = [f"table2/simulate_year,{us:.0f},8736h-fifo-scan"]
+    for r in rows:
+        lines.append(
+            f"table2/{r['run'].replace(' ', '_')},{us:.0f},"
+            f"cost={r['cost_usd']};paper={r['paper_cost']};"
+            f"err_pct={r['cost_err_pct']};slo_match={r['slo_matches_paper']}")
+    return lines
+
+
+if __name__ == "__main__":
+    from repro.core.report import render_table
+    print(render_table(run(), "Table II (simulations vs paper)"))
+    print(f"simulate_year: {sim_speed_us():.0f} us per simulated year")

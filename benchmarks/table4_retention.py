@@ -1,0 +1,51 @@
+"""Paper Table IV: monthly cloud/network/storage costs for the nominal
+no-blocking model at 3- vs 6-month retention. Record size calibrated so the
+3-month storage-year total matches the published 552.56 USD."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core.cost import CostModel
+from repro.core.traffic import TrafficModel
+from repro.core.twin import SimpleTwin
+from repro.core.whatif import retention_whatif
+
+# Calibrated from Table IV's storage column: avg stored ~151.8 GB at 91-day
+# retention over a ~44M-record year -> 0.0141 MB per record transmission.
+# (The paper's own network column implies ~0.0007 MB/record — its net and
+# storage figures are mutually inconsistent; we calibrate to storage, the
+# dominant cost, and report the network overshoot. See EXPERIMENTS.md.)
+RECORD_MB = 0.0141
+
+PAPER_TOTALS_3MO = {"cloud": 614.19, "network": 6.01, "storage": 552.56}
+
+
+def run() -> Dict[int, List[Dict]]:
+    tw = SimpleTwin("non-block", 6.15, 0.0703, 0.06)
+    nom = TrafficModel.honda_default("nom", R=3.5, G=1.0)
+    return retention_whatif(tw, nom, RECORD_MB, retentions_days=(91, 182),
+                            cost_model=CostModel())
+
+
+def main() -> List[str]:
+    t0 = time.perf_counter()
+    tables = run()
+    us = (time.perf_counter() - t0) * 1e6
+    lines = []
+    for ret, rows in tables.items():
+        tot_cloud = sum(r["cloud_usd"] for r in rows)
+        tot_net = sum(r["network_usd"] for r in rows)
+        tot_stor = sum(r["storage_usd"] for r in rows)
+        lines.append(
+            f"table4/retention_{ret}d,{us:.0f},"
+            f"cloud={tot_cloud:.2f};net={tot_net:.2f};storage={tot_stor:.2f};"
+            f"total={tot_cloud + tot_net + tot_stor:.2f}")
+    return lines
+
+
+if __name__ == "__main__":
+    from repro.core.report import render_table
+    for ret, rows in run().items():
+        print(render_table(rows, f"Table IV — {ret}-day retention"))
+    print("paper 3-mo totals:", PAPER_TOTALS_3MO)

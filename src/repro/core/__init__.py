@@ -1,0 +1,19 @@
+"""PlantD core — the paper's contribution, adapted to JAX pipelines.
+
+The "data pipeline wind tunnel": schema-driven synthetic data, shaped load
+generation, span instrumentation, a time-series metric store, experiment
+management, cost capture, and the business-analysis layer (traffic models,
+digital twins, year-long simulation, SLOs, what-if comparison).
+"""
+from repro.core.schema import Schema, FieldSpec                    # noqa: F401
+from repro.core.datagen import DataGenerator, DataSet              # noqa: F401
+from repro.core.loadpattern import LoadPattern, Segment            # noqa: F401
+from repro.core.spans import Span, SpanCollector, span             # noqa: F401
+from repro.core.metrics import MetricStore                         # noqa: F401
+from repro.core.pipeline import Pipeline, PipelineStage            # noqa: F401
+from repro.core.experiment import Experiment, ExperimentResult     # noqa: F401
+from repro.core.traffic import TrafficModel                        # noqa: F401
+from repro.core.twin import SimpleTwin, QuickscalingTwin, fit_simple_twin  # noqa: F401
+from repro.core.simulate import simulate_year, SimulationResult    # noqa: F401
+from repro.core.slo import SLO                                     # noqa: F401
+from repro.core.cost import CostModel, TPU_V5E_USD_PER_CHIP_HOUR   # noqa: F401

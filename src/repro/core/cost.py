@@ -1,0 +1,47 @@
+"""Cost capture + modeling (the paper's OpenCost / billing-log analogue).
+
+On a cloud, PlantD prorates hourly billing records over the experiment
+window and allocates shared-cluster cost by container utilisation. Here the
+"cluster" is this process plus (virtually) the TPU slice the pipeline
+targets, so the price book is explicit and the allocation exact — we keep
+the same prorating API so the business layer is unchanged.
+
+Rates are public on-demand list prices (July 2025-ish): TPU v5e $1.20 per
+chip-hour; generic vCPU $0.0425/hr; RAM $0.0057/GB-hr. Network and storage
+rates default to the paper's business-analysis assumptions: 0.02 cents/MB
+network, 1 cent/GB/day storage, 3-month retention.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+TPU_V5E_USD_PER_CHIP_HOUR = 1.20
+VCPU_USD_PER_HOUR = 0.0425
+RAM_USD_PER_GB_HOUR = 0.0057
+
+
+@dataclass(frozen=True)
+class CostModel:
+    """Business cost assumptions (paper Sec. VI-B defaults)."""
+    network_usd_per_mb: float = 0.0002          # 0.02 cents / MB
+    storage_usd_per_gb_day: float = 0.01        # 1 cent / GB / day
+    retention_days: int = 91                    # 3 months
+    chip_usd_per_hour: float = TPU_V5E_USD_PER_CHIP_HOUR
+    vcpu_usd_per_hour: float = VCPU_USD_PER_HOUR
+    ram_usd_per_gb_hour: float = RAM_USD_PER_GB_HOUR
+
+    def pipeline_usd_per_hour(self, resources) -> float:
+        return (resources.chips * self.chip_usd_per_hour
+                + resources.vcpus * self.vcpu_usd_per_hour
+                + resources.ram_gb * self.ram_usd_per_gb_hour)
+
+    def experiment_cost(self, resources, duration_s: float,
+                        ingest_mb: float = 0.0) -> Dict[str, float]:
+        """Prorated cost of one experiment window (the paper prorates the
+        provider's hourly billing granularity over the run length)."""
+        hourly = self.pipeline_usd_per_hour(resources)
+        compute = hourly * duration_s / 3600.0
+        network = ingest_mb * self.network_usd_per_mb
+        return {"compute_usd": compute, "network_usd": network,
+                "total_usd": compute + network, "usd_per_hour": hourly}

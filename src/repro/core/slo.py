@@ -1,0 +1,26 @@
+"""Service-level objectives (paper Sec. V-G): a measurement type, a limit,
+and the required fraction of compliance. Example from the paper: processing
+latency may not exceed 4 hours more than 5% of the time."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SLO:
+    metric: str = "latency"        # latency | error_rate
+    limit_s: float = 4 * 3600.0
+    met_fraction: float = 0.95     # required proportion within the limit
+
+    def evaluate(self, values: np.ndarray, weights: np.ndarray | None = None):
+        """Returns (pct_met, met_bool); weights for record-weighted checks."""
+        values = np.asarray(values, float)
+        ok = values <= self.limit_s
+        if weights is None:
+            pct = float(ok.mean() * 100.0)
+        else:
+            w = np.asarray(weights, float)
+            pct = float((ok * w).sum() / max(w.sum(), 1e-12) * 100.0)
+        return pct, bool(pct >= self.met_fraction * 100.0)

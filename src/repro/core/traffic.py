@@ -1,0 +1,99 @@
+"""Traffic models (paper Sec. V-G): projected hourly load over a year.
+
+Load_h = R * growth(dayofyear) * H[hour, dow] * M[month]
+
+R — records/s at the start of the year; G — annual growth factor (1.0 = flat,
+1.5 = +50 % by year end; the paper's formula reads `1 + doy*G/365` but its
+own Nominal case uses G=1.0 with *no* growth, so the intended multiplier is
+`1 + doy*(G-1)/365`, which we use and note in EXPERIMENTS.md); M — monthly
+seasonal factors; H — 168 hour-of-week factors.
+
+The paper's exact 168-entry H table is unpublished; ``honda_default``
+synthesizes factors matching every published constraint: month range
+0.84 (Jan) … 1.14 (Aug), hour-of-week range 0.04 (Wed 6am) … 2.26 (Fri 8pm),
+and the Table II mean load of 5035.8 records/hour at R = 3.5 rec/s.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import numpy as np
+
+HOURS_PER_YEAR = 8736            # 52 weeks, the paper's year (cost tables)
+DAYS_PER_YEAR = 364
+# calendar months over a 364-day year (Dec truncated to 30 days)
+MONTH_DAYS = (31, 28, 31, 30, 31, 30, 31, 31, 30, 31, 30, 30)
+START_DOW = 3                    # Jan 1 is a Thursday (2026); 0 = Monday
+
+# Published anchor points. The paper's hour-of-week pins (2.26 Fri 8pm,
+# 0.04 Wed 6am) are on a mean-normalized scale: Table II's peak nominal load
+# (13191.79 rec/h = max non-block throughput) / mean (5035.8) = 2.62 =
+# 2.26 * maxM/meanM — i.e. mean(H_rel) == 1 and the absolute multiplier is
+# folded into the calibration constant alpha below.
+M_MONTH = np.array([0.84, 0.86, 0.92, 0.98, 1.04, 1.09, 1.12, 1.14,
+                    1.08, 1.00, 0.92, 0.87])
+PIN_FRI20 = 2.26                 # Friday 20:00 (relative, mean(H_rel)=1)
+PIN_WED06 = 0.04                 # Wednesday 06:00 (relative)
+TARGET_MEAN_RPH = 5035.8         # Table II mean throughput @ R=3.5 rec/s
+
+
+def _base_hour_curve() -> np.ndarray:
+    """One weekday's 24-hour shape (relative; normalized later)."""
+    return np.array([
+        0.30, 0.18, 0.10, 0.07, 0.05, 0.045, 0.05, 0.30,   # 00-07
+        0.70, 0.95, 1.05, 1.10, 1.15, 1.10, 1.05, 1.10,    # 08-15
+        1.25, 1.50, 1.75, 1.95, 2.05, 1.55, 0.95, 0.55])   # 16-23
+
+
+def _dow_scale() -> np.ndarray:
+    # Mon..Sun; Friday evening spike, quieter Sunday
+    return np.array([0.97, 0.99, 1.01, 1.03, 1.10, 1.05, 0.85])
+
+
+@dataclass(frozen=True)
+class TrafficModel:
+    name: str
+    R: float                          # records/s at year start
+    G: float = 1.0                    # annual growth factor
+    M: Tuple[float, ...] = tuple(M_MONTH)
+    H: Tuple[float, ...] = ()         # 168 entries, Mon 00:00 first
+
+    def month_of_day(self, day: int) -> int:
+        acc = 0
+        for m, nd in enumerate(MONTH_DAYS):
+            acc += nd
+            if day < acc:
+                return m
+        return 11
+
+    def hourly_loads(self) -> np.ndarray:
+        """Records per hour for each of the 8736 hours."""
+        H = np.asarray(self.H, float)
+        M = np.asarray(self.M, float)
+        hours = np.arange(HOURS_PER_YEAR)
+        day = hours // 24
+        hod = hours % 24
+        dow = (START_DOW + day) % 7
+        how = dow * 24 + hod
+        months = np.array([self.month_of_day(int(d)) for d in range(DAYS_PER_YEAR)])
+        growth = 1.0 + day * (self.G - 1.0) / 365.0
+        return (self.R * 3600.0) * growth * H[how] * M[months[day]]
+
+    @staticmethod
+    def honda_default(name: str = "nominal", R: float = 3.5,
+                      G: float = 1.0) -> "TrafficModel":
+        """Synthesized Honda-like factors calibrated to published anchors."""
+        base = np.outer(_dow_scale(), _base_hour_curve()).reshape(168)
+        # relative curve with mean 1 and the published pins
+        H_rel = base / base.mean()
+        fri20, wed06 = 4 * 24 + 20, 2 * 24 + 6
+        for _ in range(4):
+            H_rel[fri20], H_rel[wed06] = PIN_FRI20, PIN_WED06
+            free = np.ones(168, bool)
+            free[[fri20, wed06]] = False
+            H_rel[free] *= (168 - PIN_FRI20 - PIN_WED06) / H_rel[free].sum()
+        # absolute calibration to the published mean load at R=3.5
+        tm = TrafficModel(name, R=R, G=1.0, H=tuple(H_rel))
+        alpha = TARGET_MEAN_RPH * (R / 3.5) / tm.hourly_loads().mean()
+        return TrafficModel(name, R=R, G=G, H=tuple(H_rel * alpha))

@@ -1,0 +1,71 @@
+"""Digital twins (paper Sec. V-G): explainable pipeline models fit from
+experiments, applied to traffic projections by the simulator.
+
+SimpleTwin      — fixed capacity, fixed $/hr, FIFO infinite queue (the
+                  paper's proof-of-concept model, Table I).
+QuickscalingTwin— optimal horizontal scaling: no queueing; cost scales with
+                  ceil(load / capacity) instances.
+RooflineTwin    — beyond-paper: capacity derived *analytically* from the
+                  compiled dry-run roofline terms of a JAX serving pipeline,
+                  so cost/performance can be forecast before the pipeline is
+                  ever run at scale.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.experiment import ExperimentResult
+
+
+@dataclass(frozen=True)
+class SimpleTwin:
+    name: str
+    max_rps: float               # sustained capacity, records/s
+    usd_per_hour: float          # fixed resource cost
+    base_latency_s: float        # per-record latency with no queueing
+    policy: str = "fifo"
+    kind: str = "simple"
+
+
+@dataclass(frozen=True)
+class QuickscalingTwin:
+    name: str
+    max_rps: float               # capacity of ONE instance
+    usd_per_hour: float          # cost of ONE instance
+    base_latency_s: float
+    policy: str = "scale"
+    kind: str = "quickscaling"
+
+
+def fit_simple_twin(result: ExperimentResult, name: Optional[str] = None
+                    ) -> SimpleTwin:
+    """The paper's fit: apparent sustained throughput over the whole
+    experiment, fixed hourly cost, no-queue latency from stage medians."""
+    return SimpleTwin(
+        name=name or result.pipeline_name,
+        max_rps=result.sustained_rps,
+        usd_per_hour=result.cost["usd_per_hour"],
+        base_latency_s=result.base_latency_s)
+
+
+def fit_quickscaling_twin(result: ExperimentResult, name: Optional[str] = None
+                          ) -> QuickscalingTwin:
+    return QuickscalingTwin(
+        name=name or result.pipeline_name,
+        max_rps=result.sustained_rps,
+        usd_per_hour=result.cost["usd_per_hour"],
+        base_latency_s=result.base_latency_s)
+
+
+def roofline_twin(name: str, *, step_seconds: float, records_per_step: float,
+                  chips: int, chip_usd_per_hour: float = 1.20,
+                  base_latency_s: Optional[float] = None) -> SimpleTwin:
+    """Capacity from the dry-run roofline bound: one serving step processes
+    ``records_per_step`` requests in ``step_seconds`` (max of the three
+    roofline terms). See launch/roofline.py for the term derivation."""
+    cap = records_per_step / step_seconds
+    return SimpleTwin(name=name, max_rps=cap,
+                      usd_per_hour=chips * chip_usd_per_hour,
+                      base_latency_s=base_latency_s or step_seconds,
+                      kind="roofline")

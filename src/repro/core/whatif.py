@@ -1,0 +1,72 @@
+"""What-if scenario engine (paper Sec. VII): run (twin x traffic) grids,
+compare retention policies, and render Table II / Table IV style results."""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.cost import CostModel
+from repro.core.simulate import SimulationResult, monthly_table, simulate_year
+from repro.core.slo import SLO
+from repro.core.traffic import TrafficModel
+from repro.core.twin import QuickscalingTwin, SimpleTwin
+
+Twin = Union[SimpleTwin, QuickscalingTwin]
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    twin: Twin
+    traffic: TrafficModel
+
+
+def run_grid(twins: Sequence[Twin], traffics: Sequence[TrafficModel],
+             slo: Optional[SLO] = None,
+             cost_model: Optional[CostModel] = None,
+             record_mb: float = 0.0) -> List[SimulationResult]:
+    """Every (traffic x twin) combination — the paper's Table II grid."""
+    out = []
+    for tr in traffics:
+        loads = tr.hourly_loads()
+        for tw in twins:
+            out.append(simulate_year(
+                tw, loads, slo=slo, cost_model=cost_model,
+                record_mb=record_mb, name=f"{tr.name} {tw.name}"))
+    return out
+
+
+def table2_rows(sims: Sequence[SimulationResult]) -> List[Dict]:
+    rows = []
+    for s in sims:
+        rows.append({
+            "run": s.name,
+            "cost_usd": round(s.total_cost_usd, 2),
+            "latency_median_s": round(s.median_latency_s, 2),
+            "latency_mean_s": round(s.mean_latency_s, 2),
+            "latency_backlog_s": round(s.backlog_s, 2),
+            "thruput_mean_rph": round(s.mean_throughput_rph, 2),
+            "thruput_max_rph": round(s.max_throughput_rph, 2),
+            "pct_latency_met": round(s.pct_latency_met, 2),
+            "slo_met": s.slo_met,
+        })
+    return rows
+
+
+def retention_whatif(twin: Twin, traffic: TrafficModel, record_mb: float,
+                     retentions_days: Sequence[int] = (91, 182),
+                     cost_model: Optional[CostModel] = None,
+                     slo: Optional[SLO] = None) -> Dict[int, List[Dict]]:
+    """The paper's 3-month vs 6-month retention comparison (Table IV)."""
+    cm = cost_model or CostModel()
+    loads = traffic.hourly_loads()
+    out = {}
+    for ret in retentions_days:
+        cmr = replace(cm, retention_days=ret)
+        sim = simulate_year(twin, loads, slo=slo, cost_model=cmr,
+                            record_mb=record_mb,
+                            name=f"{traffic.name} {twin.name} ret{ret}")
+        out[ret] = monthly_table(sim, cmr, record_mb)
+    return out

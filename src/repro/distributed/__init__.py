@@ -1,0 +1,3 @@
+from repro.distributed.sharding import (  # noqa: F401
+    build_rules, mesh_shape_dict, batch_partition,
+)

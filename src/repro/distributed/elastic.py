@@ -1,0 +1,46 @@
+"""Elastic scaling: resume a run on a different mesh/device count.
+
+Checkpoints store global (host) arrays, so elasticity is a placement
+problem: rebuild shardings for the new mesh and device_put the restored
+tree. ``elastic_restore`` is the one-call path used after losing (or
+gaining) a pod: train state, optimizer state and data position all carry
+over; only the layout changes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.ckpt import restore_checkpoint
+from repro.config import ModelConfig, OptimizerConfig, ParallelConfig
+from repro.distributed.sharding import build_rules, mesh_shape_dict
+from repro.models import model as M
+from repro.optim.adamw import abstract_opt_state, init_opt_state, opt_state_specs
+
+
+def state_shardings(cfg: ModelConfig, ocfg: OptimizerConfig,
+                    parallel: ParallelConfig, mesh: Mesh):
+    rules = build_rules(parallel, mesh)
+    mshape = mesh_shape_dict(mesh)
+    pspecs = M.partition_specs(cfg, rules, mshape)
+    ospecs = opt_state_specs(pspecs, ocfg, M.abstract_params(cfg),
+                             parallel.fsdp_axis or "data", mshape)
+    ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,  # noqa: E731
+                                is_leaf=lambda x: isinstance(x, P))
+    return ns(pspecs), ns(ospecs)
+
+
+def elastic_restore(ckpt_dir: str, cfg: ModelConfig, ocfg: OptimizerConfig,
+                    parallel: ParallelConfig, new_mesh: Mesh,
+                    step: Optional[int] = None):
+    """Restore the latest checkpoint onto ``new_mesh`` (any device count
+    whose axis sizes still divide the sharded dims — non-divisible dims
+    fall back to replication automatically)."""
+    params_like = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt_like = init_opt_state(params_like, ocfg)
+    pshard, oshard = state_shardings(cfg, ocfg, parallel, new_mesh)
+    (params, opt_state), step_r, extra = restore_checkpoint(
+        ckpt_dir, step, (params_like, opt_like), (pshard, oshard))
+    return params, opt_state, step_r, extra

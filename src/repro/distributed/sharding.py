@@ -1,0 +1,126 @@
+"""Logical-axis -> mesh-axis rule table (MaxText-style).
+
+Every parameter/cache leaf declares logical axes in its schema; these rules
+map them onto the production mesh. Rules silently fall back to replication
+when a dim is not divisible by the mesh axis (specs_from_schema), so a
+single rule table serves all ten architectures — the per-arch hillclimb
+overrides live in ParallelConfig.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ParallelConfig
+
+
+def mesh_shape_dict(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def build_rules(parallel: ParallelConfig, mesh: Mesh) -> Dict[str, Optional[str]]:
+    axes = set(mesh.axis_names)
+
+    def ax(a):
+        return a if a in axes else None
+
+    batch = tuple(a for a in parallel.batch_axes if a in axes)
+    seq_ax = parallel.seq_axis
+    if isinstance(seq_ax, tuple):
+        seq_ax = tuple(a for a in seq_ax if a in axes) or None
+    else:
+        seq_ax = ax(seq_ax)
+    return {
+        "vocab": ax(parallel.tp_axis),
+        "embed": ax(parallel.fsdp_axis),
+        "mlp": ax(parallel.tp_axis),
+        "heads": ax(parallel.tp_axis),
+        "kv": ax(parallel.tp_axis),
+        "kv_heads": ax(parallel.tp_axis),
+        "expert": ax(parallel.expert_axis),
+        "batch": batch if batch else None,
+        "cache_seq": seq_ax if parallel.shard_cache_seq else None,
+        # activation-only logical axes (constrain() checks divisibility)
+        "heads_act": ax(parallel.tp_axis),
+        "kv_heads_act": ax(parallel.tp_axis),
+        "vocab_act": ax(parallel.tp_axis),
+        "mlp_act": ax(parallel.tp_axis),
+        "expert_act": ax(parallel.expert_axis),
+        "seq_act": None,   # sequence parallelism (hillclimb override)
+        # small/replicated dims
+        "rank": None, "state": None, "conv": None, "norm": None,
+        "layers": None, "groups": None,
+    }
+
+
+def batch_partition(parallel: ParallelConfig, mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in parallel.batch_axes if a in set(mesh.axis_names))
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints
+#
+# GSPMD's propagation is a global solve: without anchors it may pick
+# different activation layouts for near-identical programs (observed:
+# 1-group vs 2-group probes sharding attention differently). Model code
+# calls ``constrain(x, ...logical axes)``; the step factories install the
+# mesh + rules here before tracing. No-op when nothing is installed, so
+# model code stays mesh-free.
+# ---------------------------------------------------------------------------
+
+_ACT = {"mesh": None, "rules": None}
+
+
+def set_activation_mesh(mesh: Optional[Mesh], rules: Optional[Dict] = None):
+    _ACT["mesh"] = mesh
+    _ACT["rules"] = rules
+
+
+def constrain(x, *logical_axes):
+    """with_sharding_constraint by logical axis names (None = replicated).
+    Drops any axis whose dim is not divisible by the mesh axis size."""
+    mesh, rules = _ACT["mesh"], _ACT["rules"]
+    if mesh is None or rules is None:
+        return x
+    import jax
+    shape_d = mesh_shape_dict(mesh)
+    spec, used = [], set()
+    for dim, ax in zip(x.shape, logical_axes):
+        mesh_ax = rules.get(ax) if ax is not None else None
+        if mesh_ax is None:
+            spec.append(None)
+            continue
+        axes_t = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+        if any(a in used for a in axes_t):
+            spec.append(None)
+            continue
+        size = 1
+        for a in axes_t:
+            size *= shape_d.get(a, 1)
+        if size > 1 and dim % size == 0:
+            spec.append(mesh_ax)
+            used.update(axes_t)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def input_batch_specs(batch_abstract: Dict, parallel: ParallelConfig,
+                      mesh: Mesh) -> Dict:
+    """PartitionSpecs for a model input batch: shard dim 0 (batch) over the
+    dp axes when divisible; positions [3, b, s] shard dim 1."""
+    dp = batch_partition(parallel, mesh)
+    size = 1
+    for a in dp:
+        size *= mesh_shape_dict(mesh)[a]
+    out = {}
+    for k, v in batch_abstract.items():
+        if k == "positions" and len(v.shape) == 3:
+            out[k] = P(None, dp, None) if v.shape[1] % size == 0 else P()
+        elif v.ndim >= 1 and v.shape[0] % size == 0 and size > 1:
+            out[k] = P(dp, *([None] * (v.ndim - 1)))
+        else:
+            out[k] = P()
+    return out

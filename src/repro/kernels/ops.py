@@ -1,0 +1,82 @@
+"""jit'd dispatch layer between Pallas kernels and jnp references.
+
+``use_pallas(True)`` flips attention / rwkv6 / ssm hot paths to their
+Pallas implementations (TPU target; ``interpret=True`` on CPU for tests).
+The default is the XLA reference path so the 512-device dry-run lowers on
+the CPU container. Model code imports ONLY from this module.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_state = threading.local()
+_state.pallas = False
+_state.interpret = True
+# XLA-path attention chunking: 0 = exact quadratic einsum; >0 = flash-style
+# blocked online softmax with this chunk (dry-run memfit mode; ref of the
+# Pallas kernel). Applies when seq_len is a multiple of the chunk.
+_state.attn_chunk = 0
+
+
+def use_pallas(enable: bool = True, interpret: bool = True):
+    _state.pallas = enable
+    _state.interpret = interpret
+
+
+def set_attn_chunk(chunk: int):
+    _state.attn_chunk = chunk
+
+
+def get_attn_chunk() -> int:
+    return getattr(_state, "attn_chunk", 0)
+
+
+def pallas_enabled() -> bool:
+    return getattr(_state, "pallas", False)
+
+
+@contextlib.contextmanager
+def pallas_mode(enable: bool = True, interpret: bool = True):
+    prev = (getattr(_state, "pallas", False), getattr(_state, "interpret", True))
+    use_pallas(enable, interpret)
+    try:
+        yield
+    finally:
+        use_pallas(*prev)
+
+
+def sdpa(q, k, v, *, causal=True, scale=None, logit_cap=0.0, kv_len=None):
+    if pallas_enabled() and kv_len is None and logit_cap == 0.0 and q.shape[1] > 1:
+        from repro.kernels import flash_attention
+        return flash_attention.flash_attention(
+            q, k, v, causal=causal, scale=scale,
+            interpret=getattr(_state, "interpret", True))
+    chunk = get_attn_chunk()
+    if (chunk > 0 and kv_len is None and logit_cap == 0.0
+            and q.shape[1] > chunk and q.shape[1] % chunk == 0
+            and k.shape[1] % chunk == 0):
+        return ref.sdpa_blocked(q, k, v, causal=causal, scale=scale,
+                                chunk=chunk)
+    return ref.sdpa(q, k, v, causal=causal, scale=scale,
+                    logit_cap=logit_cap, kv_len=kv_len)
+
+
+def rwkv6_scan(r, k, v, w, u, state=None):
+    if pallas_enabled():
+        from repro.kernels import rwkv6_kernel
+        return rwkv6_kernel.rwkv6(r, k, v, w, u, state,
+                                  interpret=getattr(_state, "interpret", True))
+    return ref.rwkv6_scan(r, k, v, w, u, state)
+
+
+def ssm_scan(x, dt, A, B, C, D, state=None):
+    if pallas_enabled():
+        from repro.kernels import ssm_scan as ssm_kernel
+        return ssm_kernel.ssm(x, dt, A, B, C, D, state,
+                              interpret=getattr(_state, "interpret", True))
+    return ref.ssm_scan(x, dt, A, B, C, D, state)

@@ -1,0 +1,154 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the *semantics* of the kernels: small, obviously-correct jnp code.
+Kernel tests sweep shapes/dtypes and assert_allclose against these. The
+dry-run lowers these XLA paths (CPU container); on real TPU `ops.py` flips to
+the Pallas implementations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+         causal: bool = True, scale: float | None = None,
+         logit_cap: float = 0.0, kv_len: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Grouped-query scaled dot-product attention.
+
+    q: [b, sq, h, dq]   k: [b, sk, kh, dq]   v: [b, sk, kh, dv]
+    h must be a multiple of kh. kv_len: [b] optional valid KV prefix length
+    (decode masking). Returns [b, sq, h, dv].
+    """
+    b, sq, h, dq = q.shape
+    _, sk, kh, _ = k.shape
+    g = h // kh
+    scale = scale if scale is not None else dq ** -0.5
+    qg = q.reshape(b, sq, kh, g, dq)
+    # operands stay in model dtype (a bf16 KV cache must cross the network
+    # in bf16); accumulation is fp32 via preferred_element_type.
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if logit_cap > 0.0:
+        logits = logit_cap * jnp.tanh(logits / logit_cap)
+    mask = None
+    if causal and sq > 1:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+    if kv_len is not None:
+        valid = jnp.arange(sk)[None, :] < kv_len[:, None]          # [b, sk]
+        vmask = valid[:, None, None, None, :]
+        mask = vmask if mask is None else (mask[None, None, None] & vmask)
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, -1)
+
+
+def sdpa_blocked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                 causal: bool = True, scale: float | None = None,
+                 chunk: int = 1024) -> jnp.ndarray:
+    """Flash-style online-softmax attention in pure jnp: O(s*chunk) memory
+    instead of O(s^2). Same semantics as sdpa (no kv_len/logit_cap support).
+    This is the XLA fallback of the Pallas flash kernel — the dry-run lowers
+    this for long-sequence prefill so memory_analysis reflects the deployed
+    algorithm."""
+    b, sq, h, dq = q.shape
+    _, sk, kh, dv = k.shape[0], k.shape[1], k.shape[2], v.shape[3]
+    g = h // kh
+    scale = scale if scale is not None else dq ** -0.5
+    nq, nk = sq // chunk, sk // chunk
+    assert nq * chunk == sq and nk * chunk == sk, (sq, sk, chunk)
+    qg = q.reshape(b, nq, chunk, kh, g, dq)
+    kc = k.reshape(b, nk, chunk, kh, dq)
+    vc = v.reshape(b, nk, chunk, kh, dv)
+
+    def q_block(qi, qb):
+        # qb: [b, chunk, kh, g, dq]
+        m0 = jnp.full((b, kh, g, chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, chunk), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, chunk, dv), jnp.float32)
+
+        def kv_block(carry, ki):
+            m, l, acc = carry
+            logits = jnp.einsum("bckgd,bskd->bkgcs", qb.astype(jnp.float32),
+                                kc[:, ki].astype(jnp.float32)) * scale
+            if causal:
+                qpos = qi * chunk + jnp.arange(chunk)
+                kpos = ki * chunk + jnp.arange(chunk)
+                mask = qpos[:, None] >= kpos[None, :]
+                logits = jnp.where(mask[None, None, None], logits, -1e30)
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgcs,bskd->bkgcd", p, vc[:, ki].astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1)        # [b, chunk, kh, g, dv]
+
+    outs = jax.lax.map(lambda i: q_block(i, qg[:, i]), jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, kh, g, dv)
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def rwkv6_scan(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               w: jnp.ndarray, u: jnp.ndarray,
+               state: jnp.ndarray | None = None):
+    """RWKV-6 linear-attention recurrence with data-dependent decay.
+
+    r,k,v,w: [b, s, h, n] (w is the *decay*, already exp(-exp(.)) in (0,1));
+    u: [h, n] bonus. state: [b, h, n, n] (key x value). Returns (out, state):
+    out [b, s, h, n], final state.
+      o_t = r_t . (S + u * k_t v_t^T);  S' = diag(w_t) S + k_t v_t^T
+    """
+    b, s, h, n = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, n, n), jnp.float32)
+    state = state.astype(jnp.float32)
+
+    def step(S, t):
+        rt, kt, vt, wt = (x[:, t].astype(jnp.float32) for x in (r, k, v, w))
+        kv = kt[..., :, None] * vt[..., None, :]                   # [b,h,n,n]
+        ot = jnp.einsum("bhi,bhij->bhj", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, ot
+
+    state, outs = jax.lax.scan(step, state, jnp.arange(s))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, n)             # [b,s,h,n]
+    return out.astype(r.dtype), state
+
+
+def ssm_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray,
+             state: jnp.ndarray | None = None):
+    """Mamba selective-scan.
+
+    x, dt: [b, s, di]; A: [di, n]; B, C: [b, s, n]; D: [di].
+    state: [b, di, n]. h' = exp(dt A) h + dt B x ; y = C.h + D x.
+    Returns (y [b, s, di], final state).
+    """
+    b, s, di = x.shape
+    n = A.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, di, n), jnp.float32)
+    state = state.astype(jnp.float32)
+
+    def step(h, t):
+        xt = x[:, t].astype(jnp.float32)                           # [b,di]
+        dtt = dt[:, t].astype(jnp.float32)                         # [b,di]
+        Bt = B[:, t].astype(jnp.float32)                           # [b,n]
+        Ct = C[:, t].astype(jnp.float32)                           # [b,n]
+        dA = jnp.exp(dtt[..., None] * A[None])                     # [b,di,n]
+        dBx = (dtt * xt)[..., None] * Bt[:, None, :]               # [b,di,n]
+        h = dA * h + dBx
+        yt = jnp.einsum("bdn,bn->bd", h, Ct) + D[None] * xt
+        return h, yt
+
+    state, ys = jax.lax.scan(step, state, jnp.arange(s))
+    y = jnp.moveaxis(ys, 0, 1)                                     # [b,s,di]
+    return y.astype(x.dtype), state

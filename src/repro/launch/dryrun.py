@@ -1,0 +1,299 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: sharding
+mismatches, compile-time OOM and unsupported collectives all fail here.
+
+Per cell we produce up to five compiles:
+  memfit  — FULL config, rolled layer scan, flash-blocked attention:
+            memory_analysis (fits 16 GB/chip?) + collective schedule.
+  probe1/probe2 (exact)  — 1-group / 2-group model, scan fully unrolled,
+            exact quadratic attention: faithful HLO FLOPs + collective bytes
+            (XLA's cost_analysis counts a while-loop body once, so the
+            dry-run unrolls; stack totals extrapolate linearly:
+            total = B + (n_groups-1) * (C - B)).
+  probe1/probe2 (chunked) — same, flash-blocked attention: faithful HBM
+            bytes for the deployed (VMEM-resident) attention algorithm.
+
+Results are cached as JSON under experiments/dryrun/ for the roofline layer.
+
+NOTE the XLA_FLAGS line below MUST run before any jax import anywhere in
+the process — run this module as a fresh `python -m repro.launch.dryrun`.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Dict, Optional, Tuple  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.config import (OptimizerConfig, ParallelConfig, ShapeConfig,  # noqa: E402
+                          get_shape, SHAPES)
+from repro.configs import all_archs, get_config  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import decode_input_specs, input_specs  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.models import transformer as tf  # noqa: E402
+from repro.optim.adamw import abstract_opt_state  # noqa: E402
+from repro.serve.steps import make_decode_step, make_prefill_step  # noqa: E402
+from repro.train.steps import make_train_step  # noqa: E402
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+               "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+               "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+               "c128": 16, "token": 0}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_TYPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo: str) -> Dict[str, Dict[str, float]]:
+    """Sum result-operand bytes of every collective in the optimized HLO.
+    Async pairs count the -start only. Returns {kind: {bytes, count}}."""
+    out = {k: {"bytes": 0, "count": 0} for k in COLLECTIVES}
+    for line in hlo.splitlines():
+        if "=" not in line:
+            continue
+        for kind in COLLECTIVES:
+            tok = f" {kind}("
+            tok_start = f" {kind}-start("
+            if tok in line or tok_start in line:
+                lhs = line.split("=", 1)[1]
+                op_pos = lhs.find(kind)
+                type_part = lhs[:op_pos]
+                b = _type_bytes(type_part)
+                out[kind]["bytes"] += b
+                out[kind]["count"] += 1
+                break
+        else:
+            continue
+    return out
+
+
+def default_parallel(shape: ShapeConfig) -> ParallelConfig:
+    """Production-default layouts per workload kind.
+
+    train:   FSDP over 'data' + TP over 'model', full remat (activation
+             memory at 1M-token global batches would blow HBM otherwise).
+    serve:   TP over 'model' + EP over 'data' for experts; NO FSDP — weights
+             replicated over 'data' (bf16) so decode never all-gathers
+             parameters. Long-context batch-1 cells shard the cache seq dim
+             over 'data' (sequence parallelism).
+    """
+    if shape.kind == "train":
+        return ParallelConfig(remat="full", microbatches=4)
+    if shape.kind == "decode":
+        # flash-decoding layout: KV cache 2D-sharded (batch over dp, seq
+        # over 'model' — or over everything when batch=1); the softmax
+        # reduction distributes instead of gathering the cache.
+        seq_axis = "model" if shape.global_batch >= 16 else ("data", "model")
+        return ParallelConfig(fsdp_axis=None, shard_cache_seq=True,
+                              seq_axis=seq_axis)
+    return ParallelConfig(fsdp_axis=None)
+
+
+def skip_reason(arch: str, shape: ShapeConfig) -> Optional[str]:
+    cfg = get_config(arch)
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("pure full-attention arch: 500k-token decode needs "
+                "sub-quadratic attention (run only for ssm/hybrid)")
+    return None
+
+
+def reduced_cfg(cfg, groups: int):
+    return dataclasses.replace(cfg,
+                               num_layers=groups * len(cfg.block_pattern))
+
+
+def build_lowered(cfg, shape: ShapeConfig, parallel: ParallelConfig, mesh,
+                  ocfg: OptimizerConfig):
+    """Lower the right step for the cell; returns jax.stages.Lowered."""
+    if shape.kind == "train":
+        batch_abs = input_specs(cfg, shape)
+        step, _ = make_train_step(cfg, ocfg, parallel, mesh, batch_abs,
+                                  donate=True)
+        params_abs = M.abstract_params(cfg)
+        opt_abs = abstract_opt_state(params_abs, ocfg)
+        return step.lower(params_abs, opt_abs, batch_abs)
+    if shape.kind == "prefill":
+        batch_abs = input_specs(cfg, shape)
+        step, _ = make_prefill_step(cfg, parallel, mesh, batch_abs,
+                                    shape.global_batch, shape.seq_len)
+        params_abs = M.abstract_params(cfg)
+        cache_abs = M.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        return step.lower(params_abs, batch_abs, cache_abs)
+    # decode
+    batch_abs = decode_input_specs(cfg, shape)
+    step, _ = make_decode_step(cfg, parallel, mesh, batch_abs,
+                               shape.global_batch, shape.seq_len)
+    params_abs = M.abstract_params(cfg)
+    cache_abs = M.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    return step.lower(params_abs, cache_abs, batch_abs)
+
+
+def memory_dict(compiled) -> Dict[str, float]:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:   # noqa: BLE001
+        return {"error": str(e)}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes",
+              "host_argument_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_mode(arch: str, shape: ShapeConfig, mesh_kind: str, mode: str,
+             remat: str = "none", parallel_over: Optional[dict] = None
+             ) -> Dict:
+    cfg = get_config(arch)
+    if shape.kind != "train":
+        # serving runs bf16 weights (production inference numerics);
+        # perf iterations may override (e.g. float8_e4m3fn W8 serving)
+        cfg = dataclasses.replace(
+            cfg, param_dtype=os.environ.get("REPRO_SERVE_PARAM_DTYPE",
+                                            "bfloat16"))
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    parallel = default_parallel(shape)
+    if remat != "none":
+        parallel = dataclasses.replace(parallel, remat=remat)
+    if parallel_over:
+        parallel = dataclasses.replace(parallel, **parallel_over)
+    ocfg = OptimizerConfig()
+
+    if mode == "memfit":
+        run_cfg = cfg
+        tf.set_scan_unroll(1)
+        ops.set_attn_chunk(1024 if shape.seq_len >= 4096 else 0)
+    else:
+        groups = 1 if mode.startswith("probe1") else 2
+        run_cfg = reduced_cfg(cfg, groups)
+        tf.set_scan_unroll(groups)
+        ops.set_attn_chunk(1024 if mode.endswith("chunked") else 0)
+        # probes must not hide per-step cost inside the microbatch scan;
+        # the roofline layer re-adds per-microbatch weight traffic.
+        parallel = dataclasses.replace(parallel, microbatches=1)
+
+    rec = {"arch": arch, "shape": shape.name, "mesh": mesh_kind, "mode": mode,
+           "n_groups_full": tf.n_groups(cfg),
+           "pattern_len": len(cfg.block_pattern), "status": "ok",
+           "microbatches": parallel.microbatches, "remat": parallel.remat,
+           "fsdp": parallel.fsdp_axis,
+           "param_dtype": cfg.param_dtype}
+    t0 = time.time()
+    try:
+        with mesh:
+            lowered = build_lowered(run_cfg, shape, parallel, mesh, ocfg)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_comp = time.time()
+            ca = compiled.cost_analysis() or {}
+            rec["cost"] = {"flops": float(ca.get("flops", 0.0)),
+                           "bytes": float(ca.get("bytes accessed", 0.0))}
+            rec["memory"] = memory_dict(compiled)
+            hlo = compiled.as_text()
+            rec["collectives"] = parse_collectives(hlo)
+            rec["hlo_has_while"] = " while(" in hlo
+            rec["lower_s"] = round(t_lower - t0, 2)
+            rec["compile_s"] = round(t_comp - t_lower, 2)
+    except Exception as e:   # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    finally:
+        tf.set_scan_unroll(1)
+        ops.set_attn_chunk(0)
+        tf.set_remat("none")
+    return rec
+
+
+MODES = ("memfit", "probe1_exact", "probe2_exact", "probe1_chunked",
+         "probe2_chunked")
+
+
+def cell_path(out_dir: str, arch: str, shape: str, mesh_kind: str,
+              mode: str, tag: str = "") -> str:
+    t = f".{tag}" if tag else ""
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh_kind}__{mode}{t}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=("single", "multi"))
+    ap.add_argument("--mode", default=None, choices=MODES)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--tag", default="", help="variant tag for perf iterations")
+    ap.add_argument("--parallel-json", default="",
+                    help="JSON dict of ParallelConfig overrides")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [args.arch] if args.arch else all_archs()
+    shapes = [get_shape(args.shape)] if args.shape else list(SHAPES)
+    modes = [args.mode] if args.mode else list(MODES)
+    overrides = json.loads(args.parallel_json) if args.parallel_json else None
+
+    for arch in archs:
+        for shape in shapes:
+            reason = skip_reason(arch, shape)
+            if reason:
+                rec = {"arch": arch, "shape": shape.name, "mesh": args.mesh,
+                       "mode": "memfit", "status": "skipped",
+                       "skip_reason": reason}
+                with open(cell_path(args.out, arch, shape.name, args.mesh,
+                                    "memfit", args.tag), "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"SKIP {arch} {shape.name}: {reason}")
+                continue
+            for mode in modes:
+                path = cell_path(args.out, arch, shape.name, args.mesh, mode,
+                                 args.tag)
+                if os.path.exists(path) and not args.force:
+                    print(f"cached {path}")
+                    continue
+                rec = run_mode(arch, shape, args.mesh, mode,
+                               remat=args.remat, parallel_over=overrides)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                ok = rec["status"]
+                extra = (f" flops={rec.get('cost', {}).get('flops', 0):.3e}"
+                         f" lower={rec.get('lower_s')}s"
+                         f" compile={rec.get('compile_s')}s"
+                         if ok == "ok" else f" {rec.get('error', '')[:200]}")
+                print(f"{ok:7s} {arch} {shape.name} {args.mesh} {mode}{extra}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""CLI serve driver: batched serving of a smoke model under a LoadPattern,
+measured by the wind tunnel (TTFT / latency / throughput per stage)."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.config import ParallelConfig
+from repro.configs import all_archs, get_smoke_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=all_archs())
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=4.0, help="requests/s")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    mesh = make_host_mesh(1, 1)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, mesh, ParallelConfig(batch_axes=("data",)), params,
+                      slots=args.slots, max_len=128)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=list(rng.integers(0, cfg.vocab_size, 8)),
+                    max_new=args.max_new, submitted=i / args.rate)
+            for i in range(args.requests)]
+    done = eng.serve(reqs)
+    ttfts = [r.ttft_s for r in done]
+    lats = [r.latency_s for r in done]
+    print(f"served {len(done)} requests")
+    print(f"TTFT   p50={np.median(ttfts)*1e3:8.1f} ms  p95={np.percentile(ttfts,95)*1e3:8.1f} ms")
+    print(f"E2E    p50={np.median(lats)*1e3:8.1f} ms  p95={np.percentile(lats,95)*1e3:8.1f} ms")
+    for name, v in eng.collector.summary().items():
+        print(f"  {name:12s} mean={v['mean_latency_s']*1e3:8.2f} ms "
+              f"thr={v['throughput_rps']:8.1f}/s busy={v['busy_s']:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

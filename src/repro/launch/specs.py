@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` builds the abstract batch for a (arch x shape)
+cell; ``abstract_cache`` lives in models.model. Modality frontends are
+stubs: for [vlm] the batch carries precomputed patch embeddings, for
+[audio] precomputed frames, both at model width.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, SDS]:
+    """Abstract inputs for train/prefill; decode uses decode_input_specs."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    batch: Dict[str, SDS] = {}
+    if cfg.frontend == "vision":
+        from repro.configs.qwen2_vl_7b import N_PATCHES
+        n_patch = min(N_PATCHES, s // 2)
+        batch["tokens"] = SDS((b, s - n_patch), jnp.int32)
+        batch["embeds"] = SDS((b, n_patch, cfg.d_model), dt)
+        batch["positions"] = SDS((3, b, s), jnp.int32)
+    elif cfg.encdec:
+        batch["tokens"] = SDS((b, s), jnp.int32)
+        batch["frames"] = SDS((b, cfg.encoder_seq, cfg.d_model), dt)
+    else:
+        batch["tokens"] = SDS((b, s), jnp.int32)
+    if shape.kind == "train":
+        batch["loss_mask"] = SDS(batch["tokens"].shape, jnp.float32)
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, SDS]:
+    return {"token": SDS((shape.global_batch, 1), jnp.int32)}
+
+
+def concrete_batch(cfg: ModelConfig, shape: ShapeConfig, key=None):
+    """Materialize a real batch matching input_specs (smoke tests/examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        if v.dtype == jnp.int32 and k == "tokens":
+            out[k] = jax.random.randint(key, v.shape, 0, cfg.vocab_size,
+                                        dtype=jnp.int32)
+        elif k == "positions":
+            pos = jnp.broadcast_to(jnp.arange(v.shape[-1], dtype=jnp.int32),
+                                   v.shape)
+            out[k] = pos
+        elif v.dtype == jnp.int32:
+            out[k] = jnp.zeros(v.shape, jnp.int32)
+        elif k == "loss_mask":
+            out[k] = jnp.ones(v.shape, jnp.float32)
+        else:
+            out[k] = jax.random.normal(key, v.shape, jnp.float32).astype(v.dtype)
+    return out

@@ -1,0 +1,11 @@
+from repro.models.model import (  # noqa: F401
+    abstract_params,
+    init_params,
+    loss_fn,
+    partition_specs,
+    prefill,
+    decode_step,
+    init_cache,
+    abstract_cache,
+    cache_partition_specs,
+)

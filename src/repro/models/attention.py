@@ -1,0 +1,235 @@
+"""Attention blocks: GQA (MHA/MQA special cases), MLA, cross-attention.
+
+Caches are dicts of arrays sized to the full serve context; decode writes
+new K/V at per-sequence positions and masks by valid length. MLA caches the
+*compressed latent* (kv_lora + rope dims) and uses the absorbed-matmul
+formulation at decode so the per-step cost is O(S * (r + rope) * H).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import AttentionConfig, ModelConfig
+from repro.distributed.sharding import constrain
+from repro.kernels import ops
+from repro.models.layers import ParamDef, Params, Schema, apply_rope
+
+Cache = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_schema(cfg: ModelConfig, name: str, cross: bool = False) -> Schema:
+    a = cfg.attention
+    d = cfg.d_model
+    s: Schema = {
+        f"{name}.wq": ParamDef((d, a.num_heads * a.head_dim), ("embed", "heads")),
+        f"{name}.wk": ParamDef((d, a.num_kv_heads * a.head_dim), ("embed", "kv")),
+        f"{name}.wv": ParamDef((d, a.num_kv_heads * a.head_dim), ("embed", "kv")),
+        f"{name}.wo": ParamDef((a.num_heads * a.head_dim, d), ("heads", "embed")),
+    }
+    return s
+
+
+def _write_kv(cache_k, cache_v, k_new, v_new, pos):
+    """Write k_new [b, t, kh, hd] into cache at per-batch offsets pos [b]."""
+    def upd(ck, cv, kn, vn, p):
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, kn.astype(ck.dtype), p, axis=0)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, vn.astype(cv.dtype), p, axis=0)
+        return ck, cv
+    return jax.vmap(upd)(cache_k, cache_v, k_new, v_new, pos)
+
+
+def apply_gqa(params: Params, name: str, x: jnp.ndarray,
+              positions: jnp.ndarray, cfg: ModelConfig,
+              cache: Optional[Cache] = None,
+              memory: Optional[jnp.ndarray] = None,
+              causal: Optional[bool] = None,
+              is_cross: bool = False) -> Tuple[jnp.ndarray, Optional[Cache]]:
+    """x: [b, t, d]. Train/prefill: t == full seq, cache built if requested.
+    Decode: t == 1 (or small), cache holds k/v + per-seq lengths.
+    memory: encoder output for cross-attention (whisper)."""
+    a = cfg.attention
+    b, t, _ = x.shape
+    dt = x.dtype
+    q = jnp.einsum("btd,dk->btk", x, params[f"{name}.wq"].astype(dt))
+    q = q.reshape(b, t, a.num_heads, a.head_dim)
+    causal = a.causal if causal is None else causal
+
+    if is_cross or memory is not None:
+        # cross-attention: K/V from encoder memory; computed at prefill,
+        # reused from the cache at decode (memory is None then).
+        if memory is None:
+            assert cache is not None and cache.get("decode", False)
+            k, v = cache["k"].astype(dt), cache["v"].astype(dt)
+        else:
+            k = jnp.einsum("bsd,dk->bsk", memory, params[f"{name}.wk"].astype(dt))
+            v = jnp.einsum("bsd,dk->bsk", memory, params[f"{name}.wv"].astype(dt))
+            k = k.reshape(b, -1, a.num_kv_heads, a.head_dim)
+            v = v.reshape(b, -1, a.num_kv_heads, a.head_dim)
+            if cache is not None:
+                cache = dict(cache)
+                cache["k"], cache["v"] = k, v
+        out = ops.sdpa(q, k, v, causal=False, logit_cap=a.logit_cap)
+        out = out.reshape(b, t, -1)
+        return jnp.einsum("btk,kd->btd", out, params[f"{name}.wo"].astype(dt)), cache
+
+    k = jnp.einsum("btd,dk->btk", x, params[f"{name}.wk"].astype(dt))
+    v = jnp.einsum("btd,dk->btk", x, params[f"{name}.wv"].astype(dt))
+    k = k.reshape(b, t, a.num_kv_heads, a.head_dim)
+    v = v.reshape(b, t, a.num_kv_heads, a.head_dim)
+    if a.rope != "none":
+        q = apply_rope(q, positions, a)
+        k = apply_rope(k, positions, a)
+    q = constrain(q, "batch", None, "heads_act", None)
+    k = constrain(k, "batch", None, "kv_heads_act", None)
+    v = constrain(v, "batch", None, "kv_heads_act", None)
+
+    if cache is not None and cache.get("decode", False):
+        pos = cache["length"]                                   # [b] int32
+        ck, cv = _write_kv(cache["k"], cache["v"], k, v, pos)
+        new_len = pos + t
+        out = ops.sdpa(q, ck.astype(dt), cv.astype(dt), causal=False,
+                       logit_cap=a.logit_cap, kv_len=new_len)
+        cache = dict(cache, k=ck, v=cv, length=new_len)
+    else:
+        out = ops.sdpa(q, k, v, causal=causal, logit_cap=a.logit_cap)
+        if cache is not None:                                   # prefill fill
+            ck, cv = _write_kv(cache["k"], cache["v"], k, v,
+                               jnp.zeros((b,), jnp.int32))
+            cache = dict(cache, k=ck, v=cv,
+                         length=jnp.full((b,), t, jnp.int32))
+    out = out.reshape(b, t, -1)
+    return jnp.einsum("btk,kd->btd", out, params[f"{name}.wo"].astype(dt)), cache
+
+
+def gqa_cache_schema(cfg: ModelConfig, name: str, batch: int, max_len: int,
+                     cross: bool = False) -> Schema:
+    a = cfg.attention
+    s_len = cfg.encoder_seq if cross else max_len
+    return {
+        f"{name}.k": ParamDef((batch, s_len, a.num_kv_heads, a.head_dim),
+                              ("batch", "cache_seq", "kv_heads", None), "zeros"),
+        f"{name}.v": ParamDef((batch, s_len, a.num_kv_heads, a.head_dim),
+                              ("batch", "cache_seq", "kv_heads", None), "zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_schema(cfg: ModelConfig, name: str) -> Schema:
+    a = cfg.attention
+    d = cfg.d_model
+    qk = a.qk_nope_head_dim + a.qk_rope_head_dim
+    s: Schema = {}
+    if a.q_lora_rank > 0:
+        s[f"{name}.wq_a"] = ParamDef((d, a.q_lora_rank), ("embed", "rank"))
+        s[f"{name}.q_norm"] = ParamDef((a.q_lora_rank,), ("rank",), "ones")
+        s[f"{name}.wq_b"] = ParamDef((a.q_lora_rank, a.num_heads * qk), ("rank", "heads"))
+    else:
+        s[f"{name}.wq"] = ParamDef((d, a.num_heads * qk), ("embed", "heads"))
+    s[f"{name}.wkv_a"] = ParamDef((d, a.kv_lora_rank + a.qk_rope_head_dim),
+                                  ("embed", "rank"))
+    s[f"{name}.kv_norm"] = ParamDef((a.kv_lora_rank,), ("rank",), "ones")
+    s[f"{name}.wkv_b"] = ParamDef(
+        (a.kv_lora_rank, a.num_heads * (a.qk_nope_head_dim + a.v_head_dim)),
+        ("rank", "heads"))
+    s[f"{name}.wo"] = ParamDef((a.num_heads * a.v_head_dim, d), ("heads", "embed"))
+    return s
+
+
+def _rms(x, scale, eps):
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(jnp.square(x32), -1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mla_q(params, name, x, positions, a: AttentionConfig, eps):
+    b, t, _ = x.shape
+    dt = x.dtype
+    qk = a.qk_nope_head_dim + a.qk_rope_head_dim
+    if a.q_lora_rank > 0:
+        ql = jnp.einsum("btd,dr->btr", x, params[f"{name}.wq_a"].astype(dt))
+        ql = _rms(ql, params[f"{name}.q_norm"], eps)
+        q = jnp.einsum("btr,rk->btk", ql, params[f"{name}.wq_b"].astype(dt))
+    else:
+        q = jnp.einsum("btd,dk->btk", x, params[f"{name}.wq"].astype(dt))
+    q = q.reshape(b, t, a.num_heads, qk)
+    q_nope, q_rope = q[..., :a.qk_nope_head_dim], q[..., a.qk_nope_head_dim:]
+    rope_cfg = AttentionConfig(rope="standard", rope_theta=a.rope_theta)
+    q_rope = apply_rope(q_rope, positions, rope_cfg)
+    return q_nope, q_rope
+
+
+def apply_mla(params: Params, name: str, x: jnp.ndarray,
+              positions: jnp.ndarray, cfg: ModelConfig,
+              cache: Optional[Cache] = None) -> Tuple[jnp.ndarray, Optional[Cache]]:
+    a = cfg.attention
+    b, t, _ = x.shape
+    dt = x.dtype
+    eps = cfg.norm_eps
+    n_nope, n_rope, n_v = a.qk_nope_head_dim, a.qk_rope_head_dim, a.v_head_dim
+    scale = (n_nope + n_rope) ** -0.5
+    rope_cfg = AttentionConfig(rope="standard", rope_theta=a.rope_theta)
+
+    kv_a = jnp.einsum("btd,dr->btr", x, params[f"{name}.wkv_a"].astype(dt))
+    ckv = _rms(kv_a[..., :a.kv_lora_rank], params[f"{name}.kv_norm"], eps)
+    k_rope = kv_a[..., None, a.kv_lora_rank:]                    # [b,t,1,rope]
+    k_rope = apply_rope(k_rope, positions, rope_cfg)
+    q_nope, q_rope = _mla_q(params, name, x, positions, a, eps)
+
+    wkv_b = params[f"{name}.wkv_b"].astype(dt).reshape(
+        a.kv_lora_rank, a.num_heads, n_nope + n_v)
+    wk_b, wv_b = wkv_b[..., :n_nope], wkv_b[..., n_nope:]        # [r,h,n],[r,h,v]
+
+    if cache is not None and cache.get("decode", False):
+        pos = cache["length"]
+        cckv, ckr = _write_kv(cache["ckv"][..., None], cache["k_rope"],
+                              ckv[..., None], k_rope, pos)
+        cckv = cckv[..., 0]
+        new_len = pos + t
+        # absorbed decode: scores over the latent directly
+        q_abs = jnp.einsum("bthn,rhn->bthr", q_nope, wk_b)       # [b,t,h,r]
+        logits = (jnp.einsum("bthr,bsr->bhts", q_abs.astype(jnp.float32),
+                             cckv.astype(jnp.float32))
+                  + jnp.einsum("bthn,bsn->bhts", q_rope.astype(jnp.float32),
+                               ckr[:, :, 0].astype(jnp.float32))) * scale
+        valid = jnp.arange(cckv.shape[1])[None, :] < new_len[:, None]
+        logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out_lat = jnp.einsum("bhts,bsr->bthr", probs.astype(dt), cckv.astype(dt))
+        out = jnp.einsum("bthr,rhv->bthv", out_lat, wv_b)
+        cache = dict(cache, ckv=cckv, k_rope=ckr, length=new_len)
+    else:
+        # expanded prefill
+        kv = jnp.einsum("btr,rhn->bthn", ckv, wkv_b)             # [b,t,h,nope+v]
+        k_nope, v = kv[..., :n_nope], kv[..., n_nope:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, t, a.num_heads, n_rope))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        out = ops.sdpa(q, k, v, causal=a.causal, scale=scale)
+        if cache is not None:
+            cckv, ckr = _write_kv(cache["ckv"][..., None], cache["k_rope"],
+                                  ckv[..., None], k_rope,
+                                  jnp.zeros((b,), jnp.int32))
+            cache = dict(cache, ckv=cckv[..., 0], k_rope=ckr,
+                         length=jnp.full((b,), t, jnp.int32))
+    out = out.reshape(b, t, a.num_heads * n_v)
+    return jnp.einsum("btk,kd->btd", out, params[f"{name}.wo"].astype(dt)), cache
+
+
+def mla_cache_schema(cfg: ModelConfig, name: str, batch: int, max_len: int) -> Schema:
+    a = cfg.attention
+    return {
+        f"{name}.ckv": ParamDef((batch, max_len, a.kv_lora_rank),
+                                ("batch", "cache_seq", None), "zeros"),
+        f"{name}.k_rope": ParamDef((batch, max_len, 1, a.qk_rope_head_dim),
+                                   ("batch", "cache_seq", None, None), "zeros"),
+    }

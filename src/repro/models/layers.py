@@ -1,0 +1,260 @@
+"""Shared layer primitives + the parameter-schema machinery.
+
+Every module declares its parameters as a *schema*: a flat dict mapping
+parameter path -> ParamDef(shape, logical_axes, init). From one schema we
+derive:
+  * concrete initialization  (init_from_schema)
+  * abstract ShapeDtypeStructs for the dry-run  (abstract_from_schema)
+  * PartitionSpecs under a rule table           (specs_from_schema)
+
+Logical axes used throughout:
+  layers / groups  — scan dimension, never sharded
+  vocab            — vocabulary dim (TP over 'model' for embed/logits)
+  embed            — d_model dim (FSDP over 'data')
+  mlp              — FFN hidden (TP over 'model')
+  heads            — fused attention head output dim (TP over 'model')
+  kv               — fused KV head output dim (TP if divisible)
+  expert           — MoE expert dim (EP over 'data')
+  rank / state / conv / norm / inner — replicated small dims
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import AttentionConfig, ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"      # normal | zeros | ones | embed | small
+    scale: Optional[float] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Schema = Dict[str, ParamDef]
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    if len(shape) == 1:
+        return shape[0]
+    # convention: last dim is fan-out, second-to-last (or product of the
+    # rest) is fan-in; good enough for init purposes.
+    return int(np.prod(shape[:-1])) if len(shape) == 2 else shape[-2]
+
+
+def init_from_schema(schema: Schema, key: jax.Array, dtype) -> Params:
+    params = {}
+    names = sorted(schema)
+    keys = jax.random.split(key, max(len(names), 1))
+    for k, name in zip(keys, names):
+        d = schema[name]
+        if d.init == "zeros":
+            params[name] = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            params[name] = jnp.ones(d.shape, dtype)
+        else:
+            if d.scale is not None:
+                std = d.scale
+            elif d.init == "embed":
+                std = 1.0
+            elif d.init == "small":
+                std = 0.02
+            else:
+                std = 1.0 / math.sqrt(max(_fan_in(d.shape), 1))
+            params[name] = (jax.random.normal(k, d.shape, jnp.float32) * std).astype(dtype)
+    return params
+
+
+def abstract_from_schema(schema: Schema, dtype) -> Params:
+    return {
+        name: jax.ShapeDtypeStruct(d.shape, dtype) for name, d in schema.items()
+    }
+
+
+def specs_from_schema(schema: Schema, rules: Dict[str, Optional[str]],
+                      mesh_shape: Dict[str, int]):
+    """Map logical axes to PartitionSpecs, dropping non-divisible shardings."""
+    from jax.sharding import PartitionSpec as P
+
+    specs = {}
+    for name, d in schema.items():
+        out = []
+        used = set()
+        for dim, ax in zip(d.shape, d.axes):
+            mesh_ax = rules.get(ax) if ax is not None else None
+            if mesh_ax is None or mesh_ax in used:
+                out.append(None)
+                continue
+            size = mesh_shape.get(mesh_ax, 1) if not isinstance(mesh_ax, tuple) else int(
+                np.prod([mesh_shape.get(a, 1) for a in mesh_ax]))
+            if size > 1 and dim % size == 0:
+                out.append(mesh_ax)
+                used.add(mesh_ax)
+            else:
+                out.append(None)
+        specs[name] = P(*out)
+    return specs
+
+
+def prefix_schema(prefix: str, schema: Schema) -> Schema:
+    return {f"{prefix}.{k}": v for k, v in schema.items()}
+
+
+def stack_schema(schema: Schema, n: int, axis_name: str = "layers") -> Schema:
+    """Prepend a stacked (scan) dimension to every leaf."""
+    return {
+        k: ParamDef((n,) + d.shape, (axis_name,) + d.axes, d.init, d.scale)
+        for k, d in schema.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_schema(cfg: ModelConfig, name: str) -> Schema:
+    s: Schema = {f"{name}.scale": ParamDef((cfg.d_model,), ("norm",), "ones")}
+    if cfg.norm == "layernorm":
+        s[f"{name}.bias"] = ParamDef((cfg.d_model,), ("norm",), "zeros")
+    return s
+
+
+def apply_norm(params: Params, name: str, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + cfg.norm_eps)
+    else:
+        mean = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mean) * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = y * params[f"{name}.scale"].astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        y = y + params[f"{name}.bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard, partial, M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(att: AttentionConfig, rot_dim: int) -> jnp.ndarray:
+    exponent = jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim
+    return 1.0 / (att.rope_theta ** exponent)          # [rot_dim//2]
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, att: AttentionConfig) -> jnp.ndarray:
+    """x: [b, s, h, hd]; positions: [b, s] or [rows, b, s] for M-RoPE."""
+    if att.rope == "none":
+        return x
+    hd = x.shape[-1]
+    rot_dim = int(hd * att.rotary_pct) // 2 * 2
+    inv = rope_freqs(att, rot_dim)                     # [rot/2]
+    if att.rope == "mrope":
+        # positions [3, b, s]; head_dim halves split into sections (t, h, w)
+        assert positions.ndim == 3, "M-RoPE needs [3, b, s] positions"
+        sections = att.mrope_sections                  # sums to rot_dim//2
+        parts = []
+        start = 0
+        for row, sec in enumerate(sections):
+            pos = positions[row].astype(jnp.float32)   # [b, s]
+            angles = pos[..., None] * inv[start:start + sec]  # [b, s, sec]
+            parts.append(angles)
+            start += sec
+        angles = jnp.concatenate(parts, axis=-1)       # [b, s, rot/2]
+    else:
+        pos = positions.astype(jnp.float32)            # [b, s]
+        angles = pos[..., None] * inv                  # [b, s, rot/2]
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = jnp.split(x_rot, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out, x_pass], axis=-1)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jnp.ndarray:
+    pos = np.arange(seq)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / dim)
+    emb = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(emb, dtype=jnp.float32)
+
+
+def sinusoidal_embed(positions: jnp.ndarray, dim: int) -> jnp.ndarray:
+    """Sinusoidal embedding for arbitrary (possibly traced) positions [...]."""
+    i = jnp.arange(dim // 2, dtype=jnp.float32)
+    angle = positions.astype(jnp.float32)[..., None] / jnp.power(10000.0, 2 * i / dim)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense)
+# ---------------------------------------------------------------------------
+
+def mlp_schema(cfg: ModelConfig, name: str, d_ff: Optional[int] = None) -> Schema:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    s: Schema = {}
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        s[f"{name}.w_gate"] = ParamDef((d, f), ("embed", "mlp"))
+        s[f"{name}.w_up"] = ParamDef((d, f), ("embed", "mlp"))
+    else:
+        s[f"{name}.w_up"] = ParamDef((d, f), ("embed", "mlp"))
+    s[f"{name}.w_down"] = ParamDef((f, d), ("mlp", "embed"))
+    return s
+
+
+def apply_mlp(params: Params, name: str, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    up = jnp.einsum("bsd,df->bsf", x, params[f"{name}.w_up"].astype(x.dtype))
+    if cfg.mlp_kind == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, params[f"{name}.w_gate"].astype(x.dtype))
+        h = jax.nn.silu(gate) * up
+    elif cfg.mlp_kind == "geglu":
+        gate = jnp.einsum("bsd,df->bsf", x, params[f"{name}.w_gate"].astype(x.dtype))
+        h = jax.nn.gelu(gate, approximate=True) * up
+    else:
+        h = jax.nn.gelu(up, approximate=True)
+    return jnp.einsum("bsf,fd->bsd", h, params[f"{name}.w_down"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embed_schema(cfg: ModelConfig) -> Schema:
+    s: Schema = {"embed.table": ParamDef((cfg.vocab_size, cfg.d_model),
+                                         ("vocab", "embed"), "small")}
+    if not cfg.tie_embeddings:
+        s["unembed.w"] = ParamDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return s
+
+
+def embed_tokens(params: Params, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    table = params["embed.table"]
+    x = table.astype(jnp.dtype(cfg.dtype))[tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    from repro.distributed.sharding import constrain
+    if cfg.tie_embeddings:
+        w = params["embed.table"].astype(x.dtype)      # [v, d]
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed.w"].astype(x.dtype))
+    return constrain(logits, "batch", None, "vocab_act")

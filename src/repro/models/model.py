@@ -1,0 +1,244 @@
+"""Top-level model API: schemas, init, loss, prefill, decode.
+
+Uniform batch convention across all ten architectures:
+  train/prefill: {"tokens": [b, s_text] i32, "positions": [b, s] or [3, b, s],
+                  "loss_mask": [b, s] (train only),
+                  "embeds":  [b, n_patch, d]  (vlm frontend stub, optional),
+                  "frames":  [b, enc_seq, d]  (audio frontend stub, optional)}
+  decode:        {"token": [b, 1] i32}  + cache (holds per-seq lengths)
+
+The modality frontends are stubs per the assignment: ``input_specs`` provides
+precomputed patch/frame embeddings at model width.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import AttentionConfig, ModelConfig
+from repro.models import transformer as tf
+from repro.models.layers import (ParamDef, Params, Schema,
+                                 abstract_from_schema, apply_norm,
+                                 embed_schema, embed_tokens,
+                                 init_from_schema, norm_schema,
+                                 sinusoidal_embed, specs_from_schema,
+                                 unembed)
+
+
+def encoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(
+        cfg,
+        num_layers=cfg.encoder_layers,
+        block_pattern=("attn",),
+        attention=dataclasses.replace(cfg.attention, causal=False, rope="none"),
+        moe=None, moe_every=0)
+
+
+def full_schema(cfg: ModelConfig) -> Schema:
+    s: Schema = {}
+    s.update(embed_schema(cfg))
+    s.update(tf.stack_params_schema(cfg, "stack", cross=cfg.encdec))
+    s.update(norm_schema(cfg, "final_norm"))
+    if cfg.encdec:
+        ecfg = encoder_cfg(cfg)
+        s.update(tf.stack_params_schema(ecfg, "encoder"))
+        s.update(norm_schema(ecfg, "encoder_norm"))
+    return s
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    return init_from_schema(full_schema(cfg), key, jnp.dtype(cfg.param_dtype))
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    return abstract_from_schema(full_schema(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def partition_specs(cfg: ModelConfig, rules: Dict[str, Optional[str]],
+                    mesh_shape: Dict[str, int]):
+    return specs_from_schema(full_schema(cfg), rules, mesh_shape)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    total = 0
+    for d in full_schema(cfg).values():
+        n = 1
+        for dim in d.shape:
+            n *= dim
+        total += n
+    return total
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE counts top_k + shared experts)."""
+    if cfg.moe is None:
+        return param_count(cfg)
+    total = 0
+    m = cfg.moe
+    for name, d in full_schema(cfg).items():
+        n = 1
+        for dim in d.shape:
+            n *= dim
+        if ".moe.w_" in name:          # routed expert weights
+            n = n * (m.top_k / m.num_experts)
+        total += int(n)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _default_positions(cfg: ModelConfig, b: int, s: int, offset=0):
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (b, s))
+    if cfg.attention.rope == "mrope":
+        return jnp.broadcast_to(pos[None], (3, b, s))
+    return pos
+
+
+def _encode(params: Params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    ecfg = encoder_cfg(cfg)
+    b, s, _ = frames.shape
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + sinusoidal_embed(jnp.arange(s), cfg.d_model)[None].astype(x.dtype)
+    pos = _default_positions(ecfg, b, s)
+    x, _, _ = tf.apply_stack(params, ecfg, x, pos, prefix="encoder")
+    return apply_norm(params, "encoder_norm", x, ecfg)
+
+
+def _embed_inputs(params: Params, cfg: ModelConfig, batch: Dict) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[jnp.ndarray]]:
+    """Returns (x [b, s, d], positions, memory or None)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg)
+    memory = None
+    if cfg.frontend == "vision" and "embeds" in batch:
+        emb = batch["embeds"].astype(x.dtype)
+        x = jnp.concatenate([emb, x], axis=1)
+    if cfg.encdec:
+        memory = _encode(params, cfg, batch["frames"])
+        # whisper-style absolute positions on decoder tokens
+        x = x + sinusoidal_embed(jnp.arange(x.shape[1]), cfg.d_model)[None].astype(x.dtype)
+    b, s, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _default_positions(cfg, b, s)
+    return x, positions, memory
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict,
+            cache: Optional[Params] = None, decode: bool = False
+            ) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    """Full forward. Returns (logits, new_cache, aux_loss)."""
+    if decode:
+        tokens = batch["token"]
+        b, t = tokens.shape
+        x = embed_tokens(params, tokens, cfg)
+        if cfg.encdec:
+            # absolute position at the current per-sequence length
+            pos_emb = sinusoidal_embed(cache["length"].astype(jnp.float32),
+                                       cfg.d_model)                 # [b, d]
+            x = x + pos_emb[:, None].astype(x.dtype)
+        lengths = cache["length"]
+        positions = lengths[:, None].astype(jnp.int32)
+        if cfg.attention.rope == "mrope":
+            positions = jnp.broadcast_to(positions[None], (3, b, t))
+        stack_cache = {k[len("stack."):]: v for k, v in cache.items()
+                       if k.startswith("stack.")}
+        y, new_sc, aux = tf.apply_stack(params, cfg, x, positions,
+                                        cache=stack_cache, decode=True,
+                                        lengths=lengths, prefix="stack",
+                                        cross=cfg.encdec)
+        new_cache = {f"stack.{k}": v for k, v in new_sc.items()}
+        new_cache["length"] = lengths + t
+    else:
+        x, positions, memory = _embed_inputs(params, cfg, batch)
+        lengths = None
+        stack_cache = None
+        if cache is not None:
+            stack_cache = {k[len("stack."):]: v for k, v in cache.items()
+                           if k.startswith("stack.")}
+            lengths = cache["length"]
+        y, new_sc, aux = tf.apply_stack(params, cfg, x, positions,
+                                        cache=stack_cache, decode=False,
+                                        memory=memory, lengths=lengths,
+                                        prefix="stack", cross=cfg.encdec)
+        new_cache = None
+        if new_sc is not None:
+            new_cache = {f"stack.{k}": v for k, v in new_sc.items()}
+            new_cache["length"] = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+    y = apply_norm(params, "final_norm", y, cfg)
+    logits = unembed(params, y, cfg)
+    return logits, new_cache, aux
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+    logits, _, aux = forward(params, cfg, batch)
+    # align: if vlm frontend prepended patches, only score token positions
+    n_text = batch["tokens"].shape[1]
+    logits = logits[:, -n_text:]
+    targets = batch["tokens"][:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    mask = batch.get("loss_mask")
+    mask = jnp.ones_like(targets, jnp.float32) if mask is None else \
+        mask[:, -n_text:][:, 1:].astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom + aux
+    metrics = {"loss": loss, "nll": nll.sum() / denom, "aux": aux,
+               "tokens": denom}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serve caches
+# ---------------------------------------------------------------------------
+
+def cache_schema(cfg: ModelConfig, batch: int, max_len: int) -> Schema:
+    s = tf.stack_cache_schema(cfg, batch, max_len, "stack", cross=cfg.encdec)
+    s["length"] = ParamDef((batch,), ("batch",), "zeros")
+    return s
+
+
+def _cache_dtype(cfg: ModelConfig, name: str):
+    if name == "length":
+        return jnp.int32
+    # recurrent states carry long-horizon accumulators -> fp32
+    if name.endswith(".wkv") or name.endswith(".ssm"):
+        return jnp.float32
+    return jnp.dtype(cfg.dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    sch = cache_schema(cfg, batch, max_len)
+    return {name: jnp.zeros(d.shape, _cache_dtype(cfg, name))
+            for name, d in sch.items()}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    sch = cache_schema(cfg, batch, max_len)
+    return {name: jax.ShapeDtypeStruct(d.shape, _cache_dtype(cfg, name))
+            for name, d in sch.items()}
+
+
+def cache_partition_specs(cfg: ModelConfig, batch: int, max_len: int,
+                          rules: Dict[str, Optional[str]],
+                          mesh_shape: Dict[str, int]):
+    return specs_from_schema(cache_schema(cfg, batch, max_len), rules, mesh_shape)
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict, cache: Params
+            ) -> Tuple[jnp.ndarray, Params]:
+    logits, new_cache, _ = forward(params, cfg, batch, cache=cache, decode=False)
+    return logits[:, -1:], new_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params, batch: Dict
+                ) -> Tuple[jnp.ndarray, Params]:
+    logits, new_cache, _ = forward(params, cfg, batch, cache=cache, decode=True)
+    return logits, new_cache

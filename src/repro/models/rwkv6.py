@@ -1,0 +1,146 @@
+"""RWKV-6 "Finch" blocks: time-mix with data-dependent decay + channel-mix.
+
+Faithful structure per arXiv:2404.05892: token-shift interpolation with
+data-dependent mix coefficients (LoRA-produced), per-channel decay
+w_t = exp(-exp(w0 + lora(x))), bonus u, per-head groupnorm on the WKV
+output, and squared-relu channel mix. The WKV recurrence itself lives in
+kernels (ops.rwkv6_scan -> Pallas kernel or jnp oracle).
+
+Serve state per layer: {x_att, x_ffn: [b, d] previous token activations;
+wkv: [b, H, n, n] recurrent state}.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import ParamDef, Params, Schema
+
+State = Dict[str, jnp.ndarray]
+MIXES = 5  # r, w, k, v, g
+
+
+def rwkv_schema(cfg: ModelConfig, name: str) -> Schema:
+    r = cfg.rwkv
+    d = cfg.d_model
+    H = d // r.head_dim
+    s: Schema = {
+        # token-shift data-dependent mixing
+        f"{name}.maa_x": ParamDef((d,), ("norm",), "zeros"),
+        f"{name}.maa_base": ParamDef((MIXES, d), (None, "norm"), "zeros"),
+        f"{name}.maa_w1": ParamDef((d, MIXES * r.mix_lora), ("embed", "rank"), "small"),
+        f"{name}.maa_w2": ParamDef((MIXES, r.mix_lora, d), (None, "rank", "embed"), "small"),
+        # data-dependent decay
+        f"{name}.decay_base": ParamDef((d,), ("norm",), "zeros"),
+        f"{name}.decay_w1": ParamDef((d, r.decay_lora), ("embed", "rank"), "small"),
+        f"{name}.decay_w2": ParamDef((r.decay_lora, d), ("rank", "embed"), "small"),
+        f"{name}.bonus": ParamDef((H, r.head_dim), ("kv_heads", None), "small"),
+        # projections
+        f"{name}.wr": ParamDef((d, d), ("embed", "heads")),
+        f"{name}.wk": ParamDef((d, d), ("embed", "heads")),
+        f"{name}.wv": ParamDef((d, d), ("embed", "heads")),
+        f"{name}.wg": ParamDef((d, d), ("embed", "heads")),
+        f"{name}.wo": ParamDef((d, d), ("heads", "embed")),
+        # per-head groupnorm
+        f"{name}.ln_x.scale": ParamDef((d,), ("norm",), "ones"),
+        f"{name}.ln_x.bias": ParamDef((d,), ("norm",), "zeros"),
+    }
+    return s
+
+
+def channel_mix_schema(cfg: ModelConfig, name: str) -> Schema:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        f"{name}.mix_k": ParamDef((d,), ("norm",), "zeros"),
+        f"{name}.mix_r": ParamDef((d,), ("norm",), "zeros"),
+        f"{name}.wk": ParamDef((d, f), ("embed", "mlp")),
+        f"{name}.wr": ParamDef((d, d), ("embed", "heads")),
+        f"{name}.wv": ParamDef((f, d), ("mlp", "embed")),
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """[b, s, d] -> previous-token x; position 0 uses `prev` (or zeros)."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None].astype(x.dtype)
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def apply_time_mix(params: Params, name: str, x: jnp.ndarray, cfg: ModelConfig,
+                   state: Optional[State] = None) -> Tuple[jnp.ndarray, Optional[State]]:
+    r_cfg = cfg.rwkv
+    b, s, d = x.shape
+    dt = x.dtype
+    H, n = d // r_cfg.head_dim, r_cfg.head_dim
+
+    prev = state["x_att"] if state is not None and state.get("decode", False) else None
+    xs = _token_shift(x, prev)
+    dx = xs - x
+    # data-dependent mix coefficients
+    xx = x + dx * params[f"{name}.maa_x"].astype(dt)
+    lora = jnp.einsum("bsd,dr->bsr", xx, params[f"{name}.maa_w1"].astype(dt))
+    lora = jnp.tanh(lora).reshape(b, s, MIXES, r_cfg.mix_lora)
+    mix = params[f"{name}.maa_base"].astype(dt)[None, None] + jnp.einsum(
+        "bsmr,mrd->bsmd", lora, params[f"{name}.maa_w2"].astype(dt))
+    xr, xw, xk, xv, xg = [x + dx * mix[:, :, i] for i in range(MIXES)]
+
+    rr = jnp.einsum("bsd,dk->bsk", xr, params[f"{name}.wr"].astype(dt)).reshape(b, s, H, n)
+    kk = jnp.einsum("bsd,dk->bsk", xk, params[f"{name}.wk"].astype(dt)).reshape(b, s, H, n)
+    vv = jnp.einsum("bsd,dk->bsk", xv, params[f"{name}.wv"].astype(dt)).reshape(b, s, H, n)
+    gg = jnp.einsum("bsd,dk->bsk", xg, params[f"{name}.wg"].astype(dt))
+
+    # data-dependent decay in (0, 1)
+    dlora = jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, params[f"{name}.decay_w1"].astype(dt)))
+    decay_log = params[f"{name}.decay_base"].astype(jnp.float32) + jnp.einsum(
+        "bsr,rd->bsd", dlora.astype(jnp.float32), params[f"{name}.decay_w2"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(decay_log)).reshape(b, s, H, n)
+
+    wkv_state = state["wkv"] if state is not None and state.get("decode", False) else None
+    u = params[f"{name}.bonus"].astype(jnp.float32)
+    out, new_wkv = ops.rwkv6_scan(rr, kk, vv, w.astype(rr.dtype), u, wkv_state)
+
+    # per-head groupnorm then gate
+    o = out.reshape(b, s, H, n).astype(jnp.float32)
+    mean = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = ((o - mean) * jax.lax.rsqrt(var + 64e-5)).reshape(b, s, d)
+    o = o * params[f"{name}.ln_x.scale"].astype(jnp.float32) + \
+        params[f"{name}.ln_x.bias"].astype(jnp.float32)
+    o = o.astype(dt) * jax.nn.silu(gg)
+    y = jnp.einsum("bsk,kd->bsd", o, params[f"{name}.wo"].astype(dt))
+
+    if state is not None:
+        state = dict(state, x_att=x[:, -1], wkv=new_wkv)
+    return y, state
+
+
+def apply_channel_mix(params: Params, name: str, x: jnp.ndarray, cfg: ModelConfig,
+                      state: Optional[State] = None) -> Tuple[jnp.ndarray, Optional[State]]:
+    dt = x.dtype
+    prev = state["x_ffn"] if state is not None and state.get("decode", False) else None
+    xs = _token_shift(x, prev)
+    dx = xs - x
+    xk = x + dx * params[f"{name}.mix_k"].astype(dt)
+    xr = x + dx * params[f"{name}.mix_r"].astype(dt)
+    k = jnp.einsum("bsd,df->bsf", xk, params[f"{name}.wk"].astype(dt))
+    k = jnp.square(jax.nn.relu(k))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,dk->bsk", xr, params[f"{name}.wr"].astype(dt)))
+    y = r * jnp.einsum("bsf,fd->bsd", k, params[f"{name}.wv"].astype(dt))
+    if state is not None:
+        state = dict(state, x_ffn=x[:, -1])
+    return y, state
+
+
+def rwkv_state_schema(cfg: ModelConfig, name: str, batch: int) -> Schema:
+    r = cfg.rwkv
+    d = cfg.d_model
+    H = d // r.head_dim
+    return {
+        f"{name}.x_att": ParamDef((batch, d), ("batch", None), "zeros"),
+        f"{name}.x_ffn": ParamDef((batch, d), ("batch", None), "zeros"),
+        f"{name}.wkv": ParamDef((batch, H, r.head_dim, r.head_dim),
+                                ("batch", "kv_heads", None, None), "zeros"),
+    }

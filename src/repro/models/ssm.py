@@ -1,0 +1,104 @@
+"""Mamba-1 selective-SSM block (jamba's recurrent layer).
+
+Structure per Gu & Dao 2023 / Jamba 2024: in_proj -> (x, z) gate split,
+depthwise causal conv1d + silu on x, input-dependent (dt, B, C) via x_proj,
+softplus dt with dt_proj, diagonal A = -exp(A_log), selective scan
+(ops.ssm_scan -> Pallas kernel or jnp oracle), gated output, out_proj.
+
+Serve state per layer: {conv: [b, d_conv-1, d_inner], ssm: [b, d_inner, n]}.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import ParamDef, Params, Schema
+
+State = Dict[str, jnp.ndarray]
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or max(1, math.ceil(cfg.d_model / 16))
+    return d_inner, dt_rank, s.d_state
+
+
+def mamba_schema(cfg: ModelConfig, name: str) -> Schema:
+    s = cfg.ssm
+    d = cfg.d_model
+    di, dtr, n = _dims(cfg)
+    return {
+        f"{name}.in_proj": ParamDef((d, 2 * di), ("embed", "heads")),
+        f"{name}.conv_w": ParamDef((s.d_conv, di), ("conv", "heads"), "small"),
+        f"{name}.conv_b": ParamDef((di,), ("heads",), "zeros"),
+        f"{name}.x_proj": ParamDef((di, dtr + 2 * n), ("heads", "rank")),
+        f"{name}.dt_proj": ParamDef((dtr, di), ("rank", "heads"), "small"),
+        f"{name}.dt_bias": ParamDef((di,), ("heads",), "zeros"),
+        f"{name}.A_log": ParamDef((di, n), ("heads", "state"), "ones"),
+        f"{name}.D": ParamDef((di,), ("heads",), "ones"),
+        f"{name}.out_proj": ParamDef((di, d), ("heads", "embed")),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 prev: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. x [b, s, di], w [k, di]. Returns (y, new_buffer)."""
+    k = w.shape[0]
+    if prev is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = prev.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                     # [b, s+k-1, di]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    y = y + b[None, None]
+    new_buf = xp[:, -(k - 1):] if k > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    return y, new_buf
+
+
+def apply_mamba(params: Params, name: str, x: jnp.ndarray, cfg: ModelConfig,
+                state: Optional[State] = None) -> Tuple[jnp.ndarray, Optional[State]]:
+    di, dtr, n = _dims(cfg)
+    b, s, d = x.shape
+    dt_ = x.dtype
+
+    xz = jnp.einsum("bsd,de->bse", x, params[f"{name}.in_proj"].astype(dt_))
+    xs, z = xz[..., :di], xz[..., di:]
+
+    decode = state is not None and state.get("decode", False)
+    conv_prev = state["conv"] if decode else None
+    xs, conv_buf = _causal_conv(xs, params[f"{name}.conv_w"].astype(dt_),
+                                params[f"{name}.conv_b"].astype(dt_), conv_prev)
+    xs = jax.nn.silu(xs)
+
+    proj = jnp.einsum("bsi,ir->bsr", xs, params[f"{name}.x_proj"].astype(dt_))
+    dt_raw, B, C = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_raw, params[f"{name}.dt_proj"].astype(dt_))
+        .astype(jnp.float32) + params[f"{name}.dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params[f"{name}.A_log"].astype(jnp.float32))   # [di, n]
+
+    ssm_prev = state["ssm"] if decode else None
+    y, new_ssm = ops.ssm_scan(xs, dt.astype(dt_), A, B, C,
+                              params[f"{name}.D"].astype(jnp.float32), ssm_prev)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, params[f"{name}.out_proj"].astype(dt_))
+
+    if state is not None:
+        state = dict(state, conv=conv_buf, ssm=new_ssm)
+    return out, state
+
+
+def mamba_state_schema(cfg: ModelConfig, name: str, batch: int) -> Schema:
+    s = cfg.ssm
+    di, _, n = _dims(cfg)
+    return {
+        f"{name}.conv": ParamDef((batch, s.d_conv - 1, di),
+                                 ("batch", None, "heads"), "zeros"),
+        f"{name}.ssm": ParamDef((batch, di, n), ("batch", "heads", "state"), "zeros"),
+    }

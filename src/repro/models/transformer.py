@@ -1,0 +1,250 @@
+"""Stack assembly: repeating block groups scanned with lax.scan.
+
+A model is ``num_layers`` layers arranged as ``n_groups`` repetitions of
+``cfg.block_pattern`` (a tuple of block kinds). Parameters for one group are
+a flat dict keyed ``blk{i}.<module>.<leaf>``; the whole stack stacks every
+leaf along a leading ``groups`` axis and scans over it — one compiled group
+body regardless of depth (compile-time and HLO size stay bounded for the
+72-layer jamba as much as the 16-layer llama).
+
+Block kinds:
+  attn   — norm, GQA/MLA attention, norm, MLP or MoE
+  mamba  — norm, selective SSM,     norm, MLP or MoE
+  rwkv   — norm, RWKV6 time-mix,    norm, RWKV channel-mix
+  xattn  — attn block + cross-attention sub-block (whisper decoder)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (ParamDef, Params, Schema, apply_mlp,
+                                 apply_norm, mlp_schema, norm_schema,
+                                 prefix_schema, stack_schema)
+
+# scan unroll factor for the dry-run (see launch/dryrun.py): XLA's
+# cost_analysis only counts a while-loop body ONCE, so the dry-run fully
+# unrolls the group scan to get faithful FLOP counts. Runtime paths keep
+# the rolled scan.
+_SCAN_UNROLL = {"value": 1}
+# activation-checkpoint policy applied to the scanned group body:
+# none | full (save nothing) | dots (save matmul outputs)
+_REMAT = {"policy": "none"}
+
+
+def set_scan_unroll(n: int):
+    _SCAN_UNROLL["value"] = n
+
+
+def set_remat(policy: str):
+    assert policy in ("none", "full", "dots"), policy
+    _REMAT["policy"] = policy
+
+
+def _maybe_remat(body):
+    pol = _REMAT["policy"]
+    if pol == "none":
+        return body
+    if pol == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(body)
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    p = len(cfg.block_pattern)
+    assert cfg.num_layers % p == 0, (cfg.num_layers, p)
+    return cfg.num_layers // p
+
+
+# ---------------------------------------------------------------------------
+# Schemas
+# ---------------------------------------------------------------------------
+
+def _block_schema(cfg: ModelConfig, kind: str, idx: int, cross: bool) -> Schema:
+    """Schema for pattern position ``idx`` of one group."""
+    pre = f"blk{idx}"
+    s: Schema = {}
+    s.update(norm_schema(cfg, f"{pre}.norm1"))
+    if kind == "attn" or kind == "xattn":
+        if cfg.attention.kind == "mla":
+            s.update(attn_mod.mla_schema(cfg, f"{pre}.attn"))
+        else:
+            s.update(attn_mod.gqa_schema(cfg, f"{pre}.attn"))
+    elif kind == "mamba":
+        s.update(ssm_mod.mamba_schema(cfg, f"{pre}.mixer"))
+    elif kind == "rwkv":
+        s.update(rwkv_mod.rwkv_schema(cfg, f"{pre}.mixer"))
+    else:
+        raise ValueError(kind)
+    if kind == "xattn":
+        s.update(norm_schema(cfg, f"{pre}.norm_x"))
+        s.update(attn_mod.gqa_schema(cfg, f"{pre}.cross", cross=True))
+    s.update(norm_schema(cfg, f"{pre}.norm2"))
+    if kind == "rwkv":
+        s.update(rwkv_mod.channel_mix_schema(cfg, f"{pre}.cmix"))
+    elif cfg.layer_uses_moe(idx):
+        s.update(moe_mod.moe_schema(cfg, f"{pre}.moe"))
+    else:
+        s.update(mlp_schema(cfg, f"{pre}.mlp"))
+    return s
+
+
+def group_schema(cfg: ModelConfig, cross: bool = False) -> Schema:
+    s: Schema = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        k = "xattn" if (cross and kind == "attn") else kind
+        s.update(_block_schema(cfg, k, i, cross))
+    return s
+
+
+def stack_params_schema(cfg: ModelConfig, prefix: str = "stack",
+                        cross: bool = False) -> Schema:
+    return prefix_schema(prefix, stack_schema(group_schema(cfg, cross),
+                                              n_groups(cfg), "groups"))
+
+
+def group_cache_schema(cfg: ModelConfig, batch: int, max_len: int,
+                       cross: bool = False) -> Schema:
+    """Serve-state schema for one group (stacked by caller)."""
+    s: Schema = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        pre = f"blk{i}"
+        if kind == "attn":
+            if cfg.attention.kind == "mla":
+                s.update(attn_mod.mla_cache_schema(cfg, f"{pre}.attn", batch, max_len))
+            else:
+                s.update(attn_mod.gqa_cache_schema(cfg, f"{pre}.attn", batch, max_len))
+            if cross:
+                s.update(attn_mod.gqa_cache_schema(cfg, f"{pre}.cross", batch,
+                                                   max_len, cross=True))
+        elif kind == "mamba":
+            s.update(ssm_mod.mamba_state_schema(cfg, f"{pre}.mixer", batch))
+        elif kind == "rwkv":
+            s.update(rwkv_mod.rwkv_state_schema(cfg, f"{pre}", batch))
+    return s
+
+
+def stack_cache_schema(cfg: ModelConfig, batch: int, max_len: int,
+                       prefix: str = "stack", cross: bool = False) -> Schema:
+    return prefix_schema(prefix, stack_schema(
+        group_cache_schema(cfg, batch, max_len, cross), n_groups(cfg), "groups"))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _subcache(cache: Optional[Params], name: str, extra: dict) -> Optional[dict]:
+    if cache is None:
+        return None
+    pre = f"{name}."
+    sub = {k[len(pre):]: v for k, v in cache.items() if k.startswith(pre)}
+    sub.update(extra)
+    return sub
+
+
+def _store(cache_out: dict, name: str, sub: Optional[dict], keys):
+    if sub is None:
+        return
+    for k in keys:
+        if k in sub:
+            cache_out[f"{name}.{k}"] = sub[k]
+
+
+def _apply_block(gp: Params, cfg: ModelConfig, idx: int, kind: str,
+                 x: jnp.ndarray, positions, cache: Optional[Params],
+                 cache_out: dict, decode: bool, memory, lengths):
+    pre = f"blk{idx}"
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(gp, f"{pre}.norm1", x, cfg)
+    extra = {"decode": decode, "length": lengths} if decode else (
+        {"length": lengths} if lengths is not None else {})
+    if kind in ("attn", "xattn"):
+        name = f"{pre}.attn"
+        sub = _subcache(cache, name, extra)
+        if cfg.attention.kind == "mla":
+            y, sub = attn_mod.apply_mla(gp, name, h, positions, cfg, sub)
+            _store(cache_out, name, sub, ("ckv", "k_rope"))
+        else:
+            y, sub = attn_mod.apply_gqa(gp, name, h, positions, cfg, sub)
+            _store(cache_out, name, sub, ("k", "v"))
+    elif kind == "mamba":
+        name = f"{pre}.mixer"
+        sub = _subcache(cache, name, {"decode": decode}) if cache is not None else None
+        y, sub = ssm_mod.apply_mamba(gp, name, h, cfg, sub)
+        _store(cache_out, name, sub, ("conv", "ssm"))
+    elif kind == "rwkv":
+        name = f"{pre}.mixer"
+        sub = _subcache(cache, pre, {"decode": decode}) if cache is not None else None
+        y, sub = rwkv_mod.apply_time_mix(gp, name, h, cfg, sub)
+        _store(cache_out, pre, sub, ("x_att", "wkv"))
+    else:
+        raise ValueError(kind)
+    x = x + y
+
+    if kind == "xattn":
+        h = apply_norm(gp, f"{pre}.norm_x", x, cfg)
+        name = f"{pre}.cross"
+        sub = _subcache(cache, name, {"decode": decode}) if cache is not None else None
+        y, sub = attn_mod.apply_gqa(gp, name, h, positions, cfg, sub,
+                                    memory=memory, is_cross=True)
+        _store(cache_out, name, sub, ("k", "v"))
+        x = x + y
+
+    h = apply_norm(gp, f"{pre}.norm2", x, cfg)
+    if kind == "rwkv":
+        sub = _subcache(cache, pre, {"decode": decode}) if cache is not None else None
+        y, sub = rwkv_mod.apply_channel_mix(gp, f"{pre}.cmix", h, cfg, sub)
+        _store(cache_out, pre, sub, ("x_ffn",))
+    elif cfg.layer_uses_moe(idx):
+        y, aux = moe_mod.apply_moe(gp, f"{pre}.moe", h, cfg)
+    else:
+        y = apply_mlp(gp, f"{pre}.mlp", h, cfg)
+    return x + y, aux
+
+
+def apply_stack(params: Params, cfg: ModelConfig, x: jnp.ndarray,
+                positions, cache: Optional[Params] = None,
+                decode: bool = False, memory: Optional[jnp.ndarray] = None,
+                lengths: Optional[jnp.ndarray] = None,
+                prefix: str = "stack", cross: bool = False
+                ) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    """Run the full stack. Returns (y, new_cache (stacked) or None, aux)."""
+    pre = f"{prefix}."
+    stacked = {k[len(pre):]: v for k, v in params.items() if k.startswith(pre)}
+    pattern = cfg.block_pattern
+
+    def body(carry, xs):
+        x, aux = carry
+        gp, gcache = xs
+        x = constrain(x, "batch", None, None)
+        cache_out: dict = {}
+        for i, kind in enumerate(pattern):
+            k = "xattn" if (cross and kind == "attn") else kind
+            x, a = _apply_block(gp, cfg, i, k, x, positions, gcache,
+                                cache_out, decode, memory, lengths)
+            aux = aux + a
+        return (x, aux), cache_out
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cache is not None:
+        (x, aux), new_cache = jax.lax.scan(
+            _maybe_remat(body), (x, aux0), (stacked, cache),
+            unroll=_SCAN_UNROLL["value"])
+    else:
+        def body_nc(carry, gp):
+            return body(carry, (gp, None))
+        (x, aux), new_cache = jax.lax.scan(
+            _maybe_remat(body_nc), (x, aux0), stacked,
+            unroll=_SCAN_UNROLL["value"])
+        new_cache = None
+    return x, new_cache, aux

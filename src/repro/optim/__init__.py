@@ -1,0 +1,7 @@
+from repro.optim.adamw import (  # noqa: F401
+    OptState, init_opt_state, abstract_opt_state, opt_state_specs,
+    adamw_update, lr_at,
+)
+from repro.optim.compression import (  # noqa: F401
+    quantize_int8, dequantize_int8,
+)

@@ -1,0 +1,141 @@
+"""AdamW with global-norm clipping, warmup+cosine schedule, and optional
+int8/bf16 moment storage (block-quantized, per optim/compression.py).
+
+Pure pytree functions — no optax dependency; state layouts are declared so
+the checkpointing and sharding layers treat optimizer state like any other
+schema'd tree (m/v inherit the parameter's PartitionSpec).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+from repro.optim.compression import dequantize_int8, quantize_int8
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Dict[str, jnp.ndarray]
+    v: Dict[str, jnp.ndarray]
+    # int8 mode keeps per-block scales alongside each moment
+    m_scale: Dict[str, jnp.ndarray]
+    v_scale: Dict[str, jnp.ndarray]
+
+
+def _moment_like(p, ocfg: OptimizerConfig):
+    if ocfg.state_dtype == "int8":
+        nblk = -(-p.size // ocfg.state_block)
+        return (jnp.zeros((nblk, ocfg.state_block), jnp.int8),
+                jnp.zeros((nblk,), jnp.float32))
+    dt = jnp.bfloat16 if ocfg.state_dtype == "bfloat16" else jnp.float32
+    return jnp.zeros(p.shape, dt), None
+
+
+def init_opt_state(params: Dict[str, jnp.ndarray], ocfg: OptimizerConfig) -> OptState:
+    m, v, ms, vs = {}, {}, {}, {}
+    for k, p in params.items():
+        mm, sc = _moment_like(p, ocfg)
+        m[k] = mm
+        v[k] = jnp.zeros_like(mm) if ocfg.state_dtype == "int8" else mm
+        if sc is not None:
+            ms[k], vs[k] = sc, jnp.zeros_like(sc)
+    return OptState(jnp.zeros((), jnp.int32), m, v, ms, vs)
+
+
+def abstract_opt_state(params, ocfg: OptimizerConfig) -> OptState:
+    def absify(x):
+        return jax.ShapeDtypeStruct(x.shape, x.dtype)
+    return jax.tree.map(absify, jax.eval_shape(
+        lambda p: init_opt_state(p, ocfg), params))
+
+
+def opt_state_specs(param_specs: Dict, ocfg: OptimizerConfig,
+                    params_abstract: Dict = None, fsdp_axis: str = "data",
+                    mesh_shape: Dict[str, int] = None) -> OptState:
+    """fp32/bf16 moments inherit the parameter spec; int8 block layouts
+    shard their block dim over the FSDP axis when divisible."""
+    from jax.sharding import PartitionSpec as P
+    if ocfg.state_dtype == "int8":
+        size = (mesh_shape or {}).get(fsdp_axis, 1)
+
+        def blk_spec(k):
+            if params_abstract is None or size <= 1:
+                return P(), P()
+            nblk = -(-_nelem(params_abstract[k].shape) // ocfg.state_block)
+            if nblk % size == 0:
+                return P(fsdp_axis, None), P(fsdp_axis)
+            return P(), P()
+        m, scales = {}, {}
+        for k in param_specs:
+            m[k], scales[k] = blk_spec(k)
+        return OptState(P(), m, dict(m), scales, dict(scales))
+    m = {k: v for k, v in param_specs.items()}
+    return OptState(P(), m, dict(m), {}, {})
+
+
+def _nelem(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def lr_at(step, ocfg: OptimizerConfig):
+    warm = jnp.minimum(step / max(ocfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - ocfg.warmup_steps)
+                 / max(ocfg.total_steps - ocfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return ocfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def _load_moment(mm, sc, shape, ocfg, second: bool = False):
+    if ocfg.state_dtype == "int8":
+        x = dequantize_int8(mm, sc, shape)
+        # second moment is stored as sqrt(v): halves the dynamic range the
+        # int8 grid must cover (Dettmers-style 8-bit Adam)
+        return jnp.square(x) if second else x
+    return mm.astype(jnp.float32)
+
+
+def _store_moment(x, ocfg, second: bool = False):
+    if ocfg.state_dtype == "int8":
+        return quantize_int8(jnp.sqrt(x) if second else x, ocfg.state_block)
+    dt = jnp.bfloat16 if ocfg.state_dtype == "bfloat16" else jnp.float32
+    return x.astype(dt), None
+
+
+def adamw_update(params: Dict[str, jnp.ndarray], grads: Dict[str, jnp.ndarray],
+                 state: OptState, ocfg: OptimizerConfig
+                 ) -> Tuple[Dict[str, jnp.ndarray], OptState]:
+    step = state.step + 1
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in grads.values()))
+    clip = jnp.minimum(1.0, ocfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_at(step, ocfg)
+    b1, b2 = ocfg.betas
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_p, new_m, new_v, new_ms, new_vs = {}, {}, {}, {}, {}
+    for k, p in params.items():
+        g = grads[k].astype(jnp.float32) * clip
+        m = _load_moment(state.m[k], state.m_scale.get(k), p.shape, ocfg)
+        v = _load_moment(state.v[k], state.v_scale.get(k), p.shape, ocfg,
+                         second=True)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        upd = mhat / (jnp.sqrt(vhat) + ocfg.eps) + ocfg.weight_decay * p.astype(jnp.float32)
+        new_p[k] = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        mm, msc = _store_moment(m, ocfg)
+        vv, vsc = _store_moment(v, ocfg, second=True)
+        new_m[k], new_v[k] = mm, vv
+        if msc is not None:
+            new_ms[k], new_vs[k] = msc, vsc
+    return new_p, OptState(step, new_m, new_v, new_ms, new_vs)

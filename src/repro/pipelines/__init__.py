@@ -1,0 +1,5 @@
+from repro.pipelines.telemetry import (  # noqa: F401
+    make_telemetry_dataset,
+    make_telemetry_pipeline,
+    TELEMETRY_VARIANTS,
+)

@@ -1,0 +1,1 @@
+from repro.serve.steps import make_prefill_step, make_decode_step, serve_shardings  # noqa: F401

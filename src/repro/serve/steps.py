@@ -1,0 +1,69 @@
+"""Serve-step factories: pjit'd prefill and single-token decode.
+
+Decode shapes per the assignment: ``decode_32k``/``long_500k`` lower
+``serve_step`` — one new token against a KV cache (or recurrent state) of
+seq_len. The cache is an explicit sharded input/output; for long-context
+cells the KV sequence dim is sharded over the 'data' axis (sequence
+parallelism) and GSPMD inserts the distributed softmax reductions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ParallelConfig
+from repro.distributed.sharding import (build_rules, input_batch_specs,
+                                        mesh_shape_dict, set_activation_mesh)
+from repro.models import model as M
+
+
+def _tree_ns(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def serve_shardings(cfg: ModelConfig, parallel: ParallelConfig, mesh: Mesh,
+                    batch_abstract: Dict, batch: int, max_len: int):
+    rules = build_rules(parallel, mesh)
+    mshape = mesh_shape_dict(mesh)
+    pspecs = M.partition_specs(cfg, rules, mshape)
+    cspecs = M.cache_partition_specs(cfg, batch, max_len, rules, mshape)
+    bspecs = input_batch_specs(batch_abstract, parallel, mesh)
+    return pspecs, cspecs, bspecs
+
+
+def make_prefill_step(cfg: ModelConfig, parallel: ParallelConfig, mesh: Mesh,
+                      batch_abstract: Dict, batch: int, max_len: int):
+    pspecs, cspecs, bspecs = serve_shardings(cfg, parallel, mesh,
+                                             batch_abstract, batch, max_len)
+    set_activation_mesh(mesh, build_rules(parallel, mesh))
+
+    def step(params, batch_in, cache):
+        return M.prefill(params, cfg, batch_in, cache)
+
+    ns = functools.partial(_tree_ns, mesh)
+    jitted = jax.jit(step,
+                     in_shardings=(ns(pspecs), ns(bspecs), ns(cspecs)),
+                     out_shardings=(None, ns(cspecs)),
+                     donate_argnums=(2,))
+    return jitted, (pspecs, cspecs, bspecs)
+
+
+def make_decode_step(cfg: ModelConfig, parallel: ParallelConfig, mesh: Mesh,
+                     batch_abstract: Dict, batch: int, max_len: int):
+    pspecs, cspecs, bspecs = serve_shardings(cfg, parallel, mesh,
+                                             batch_abstract, batch, max_len)
+    set_activation_mesh(mesh, build_rules(parallel, mesh))
+
+    def step(params, cache, batch_in):
+        return M.decode_step(params, cfg, cache, batch_in)
+
+    ns = functools.partial(_tree_ns, mesh)
+    jitted = jax.jit(step,
+                     in_shardings=(ns(pspecs), ns(cspecs), ns(bspecs)),
+                     out_shardings=(None, ns(cspecs)),
+                     donate_argnums=(1,))
+    return jitted, (pspecs, cspecs, bspecs)

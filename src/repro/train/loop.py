@@ -1,0 +1,148 @@
+"""Training loop: the canonical pipeline-under-test.
+
+Every stage is a wind-tunnel span (datagen / h2d / train_step / checkpoint),
+so an Experiment can measure a *training* pipeline exactly like the paper
+measures a telemetry pipeline. Fault tolerance: transient faults retry in
+place; NodeLoss restarts from the latest checkpoint (state, optimizer and
+data-stream position all restore); the straggler watchdog reports stages
+that fall behind.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import (AsyncCheckpointer, latest_step,
+                                   restore_checkpoint)
+from repro.config import (ModelConfig, OptimizerConfig, ParallelConfig,
+                          TrainConfig)
+from repro.core.metrics import MetricStore
+from repro.core.spans import SpanCollector, span
+from repro.data.loader import TokenBatchLoader
+from repro.distributed.fault import (FaultInjector, NodeLoss,
+                                     StragglerWatchdog, TransientFault,
+                                     retry_step)
+from repro.models import model as M
+from repro.optim.adamw import init_opt_state
+from repro.train.steps import make_train_step
+
+
+@dataclass
+class TrainResult:
+    steps_done: int
+    final_loss: float
+    losses: list
+    restarts: int
+    retries: int
+    stragglers_seen: Dict[str, int]
+    collector: SpanCollector
+    metrics: MetricStore
+
+
+def train(cfg: ModelConfig, tcfg: TrainConfig, ocfg: OptimizerConfig,
+          parallel: ParallelConfig, mesh,
+          injector: Optional[FaultInjector] = None,
+          collector: Optional[SpanCollector] = None,
+          verbose: bool = True) -> TrainResult:
+    collector = collector or SpanCollector()
+    metrics = MetricStore()
+    loader = TokenBatchLoader(cfg.vocab_size, tcfg.seq_len, tcfg.global_batch,
+                              seed=tcfg.seed, collector=collector)
+    watchdog = StragglerWatchdog(collector)
+    ckpt_dir = tcfg.checkpoint_dir
+    ckptr = AsyncCheckpointer(ckpt_dir) if tcfg.async_checkpoint else None
+
+    from repro.launch.specs import SDS
+    import jax.numpy as jnp
+    batch_abs = {"tokens": SDS((tcfg.global_batch, tcfg.seq_len), jnp.int32),
+                 "loss_mask": SDS((tcfg.global_batch, tcfg.seq_len), jnp.float32)}
+    step_fn, (pspecs, ospecs, _) = make_train_step(
+        cfg, ocfg, parallel, mesh, batch_abs, donate=False)
+
+    def fresh_state():
+        params = M.init_params(cfg, jax.random.PRNGKey(tcfg.seed))
+        return params, init_opt_state(params, ocfg)
+
+    def try_restore():
+        ls = latest_step(ckpt_dir)
+        if ls is None:
+            return None
+        params, opt_state = fresh_state()
+        (params, opt_state), step0, extra = restore_checkpoint(
+            ckpt_dir, ls, (params, opt_state))
+        loader.load_state_dict(extra.get("loader", {"step": step0,
+                                                    "seed": tcfg.seed}))
+        return params, opt_state, step0
+
+    restored = try_restore()
+    if restored is not None:
+        params, opt_state, step0 = restored
+    else:
+        params, opt_state = fresh_state()
+        step0 = 0
+
+    losses = []
+    restarts = retries = 0
+    stragglers_seen: Dict[str, int] = {}
+    step = step0
+    while step < tcfg.steps:
+        try:
+            with span("datagen+next", collector, records=tcfg.global_batch):
+                host_batch = loader.next()
+            with span("h2d", collector, records=tcfg.global_batch):
+                batch = {k: jax.device_put(v) for k, v in host_batch.items()}
+
+            def do_step():
+                with span("train_step", collector, records=tcfg.global_batch):
+                    out = step_fn(params, opt_state, batch)
+                    jax.block_until_ready(out[2]["loss"])
+                    return out
+
+            try:
+                new_params, new_opt, m = retry_step(do_step, injector=injector)
+            except TransientFault:
+                retries += 1
+                continue
+            params, opt_state = new_params, new_opt
+            loss = float(m["loss"])
+            losses.append(loss)
+            metrics.observe("loss", loss)
+            metrics.inc("steps")
+            step += 1
+
+            for name, info in watchdog.stragglers().items():
+                stragglers_seen[name] = stragglers_seen.get(name, 0) + 1
+                metrics.observe(f"straggler.{name}", info["ratio"])
+
+            if step % tcfg.checkpoint_every == 0 or step == tcfg.steps:
+                with span("checkpoint", collector, records=1):
+                    extra = {"loader": loader.state_dict()}
+                    if ckptr is not None:
+                        ckptr.save(step, (params, opt_state), extra)
+                    else:
+                        from repro.checkpoint.ckpt import save_checkpoint
+                        save_checkpoint(ckpt_dir, step, (params, opt_state),
+                                        extra)
+            if verbose and step % tcfg.log_every == 0:
+                print(f"step {step:5d} loss {loss:.4f}")
+        except NodeLoss:
+            # restart-from-checkpoint: the real cluster would re-mesh here
+            restarts += 1
+            if ckptr is not None:
+                ckptr.wait()
+            restored = try_restore()
+            if restored is not None:
+                params, opt_state, step = restored
+            else:
+                params, opt_state = fresh_state()
+                step = 0
+    if ckptr is not None:
+        ckptr.close()
+    loader.close()
+    return TrainResult(step, losses[-1] if losses else float("nan"), losses,
+                       restarts, retries, stragglers_seen, collector, metrics)

@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device forcing here — smoke tests and
+benches must see the real single CPU device (only launch/dryrun.py forces
+512 placeholder devices, in its own process)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def host_mesh():
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh(1, 1)
+
+
+@pytest.fixture()
+def tmp_ckpt_dir(tmp_path):
+    return str(tmp_path / "ckpt")

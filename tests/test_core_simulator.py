@@ -1,0 +1,103 @@
+"""Digital-twin year-simulator invariants (unit + hypothesis properties)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import CostModel
+from repro.core.simulate import monthly_table, simulate_year, storage_costs
+from repro.core.slo import SLO
+from repro.core.traffic import HOURS_PER_YEAR, TrafficModel
+from repro.core.twin import QuickscalingTwin, SimpleTwin
+
+NOM = TrafficModel.honda_default("nom")
+LOADS = NOM.hourly_loads()
+
+
+def test_conservation():
+    tw = SimpleTwin("t", 1.0, 0.01, 0.1)
+    sim = simulate_year(tw, LOADS)
+    arrived = LOADS.sum()
+    processed = sim.processed.sum()
+    assert abs(processed + sim.queue[-1] - arrived) / arrived < 1e-5
+
+
+def test_capacity_cap():
+    tw = SimpleTwin("t", 1.0, 0.01, 0.1)
+    sim = simulate_year(tw, LOADS)
+    assert sim.processed.max() <= 3600.0 * 1.0 + 1e-3
+
+
+def test_quickscaling_never_queues():
+    tw = QuickscalingTwin("q", 1.0, 0.01, 0.1)
+    sim = simulate_year(tw, LOADS)
+    assert sim.queue.max() == 0.0
+    assert np.allclose(sim.processed, LOADS, rtol=1e-6)
+    assert sim.backlog_s == 0.0
+    # cost >= single-instance baseline
+    assert sim.total_cost_usd >= 0.01 * HOURS_PER_YEAR - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(cap=st.floats(0.2, 20.0), rate=st.floats(0.001, 1.0))
+def test_more_capacity_never_worse(cap, rate):
+    # tolerances are relative: the fp32 scan carries queues of ~1e7 records
+    lo = simulate_year(SimpleTwin("lo", cap, rate, 0.1), LOADS)
+    hi = simulate_year(SimpleTwin("hi", cap * 2, rate, 0.1), LOADS)
+    assert hi.queue[-1] <= lo.queue[-1] * (1 + 1e-5) + 1.0
+    assert hi.mean_latency_s <= lo.mean_latency_s * (1 + 1e-4) + 1e-3
+    assert hi.mean_throughput_rph >= lo.mean_throughput_rph * (1 - 1e-5) - 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(cap=st.floats(0.2, 10.0))
+def test_backlog_cost_formula(cap):
+    tw = SimpleTwin("t", cap, 0.01, 0.1)
+    sim = simulate_year(tw, LOADS)
+    want = sim.queue[-1] / cap / 3600.0 * 0.01
+    assert abs(sim.backlog_cost_usd - want) < 1e-6
+    assert abs(sim.total_cost_usd
+               - (0.01 * HOURS_PER_YEAR + want)) < 1e-3
+
+
+def test_slo_evaluation_pattern():
+    slo = SLO(limit_s=4 * 3600, met_fraction=0.95)
+    big = simulate_year(SimpleTwin("big", 10.0, 0.01, 0.1), LOADS, slo=slo)
+    tiny = simulate_year(SimpleTwin("tiny", 0.3, 0.01, 0.1), LOADS, slo=slo)
+    assert big.slo_met is True and big.pct_latency_met == 100.0
+    assert tiny.slo_met is False
+
+
+# ---------------------------------------------------------------------------
+# storage / retention
+# ---------------------------------------------------------------------------
+
+def test_storage_retention_monotone():
+    cm3 = CostModel(retention_days=91)
+    cm6 = CostModel(retention_days=182)
+    d3 = storage_costs(LOADS, cm3, record_mb=0.001)
+    d6 = storage_costs(LOADS, cm6, record_mb=0.001)
+    assert d6["storage_usd"].sum() > d3["storage_usd"].sum()
+    # identical until the shorter retention starts expiring (day 91)
+    np.testing.assert_allclose(d3["storage_usd"][:91], d6["storage_usd"][:91])
+    # network cost independent of retention
+    np.testing.assert_allclose(d3["network_usd"], d6["network_usd"])
+
+
+def test_storage_window_exact():
+    cm = CostModel(retention_days=7)
+    loads = np.ones(HOURS_PER_YEAR)          # 24 records/day
+    d = storage_costs(loads, cm, record_mb=1.0)
+    # steady state: exactly 7 days of data retained
+    assert np.allclose(d["stored_gb"][10:], 7 * 24 / 1024.0)
+
+
+def test_monthly_table_sums():
+    cm = CostModel()
+    tw = SimpleTwin("t", 2.0, 0.01, 0.1)
+    sim = simulate_year(tw, LOADS, cost_model=cm, record_mb=0.001)
+    rows = monthly_table(sim, cm, 0.001)
+    assert len(rows) == 12
+    total_cloud = sum(r["cloud_usd"] for r in rows)
+    assert abs(total_cloud - sim.cost_usd.sum()) < 1e-6
+    total_stor = sum(r["storage_usd"] for r in rows)
+    assert abs(total_stor - sim.storage_cost_usd) < 1e-6

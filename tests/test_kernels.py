@@ -1,0 +1,162 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rwkv6_kernel import rwkv6
+from repro.kernels.ssm_scan import ssm
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,kh,d", [
+    (2, 256, 4, 2, 64),       # GQA
+    (1, 512, 8, 8, 64),       # MHA
+    (2, 128, 4, 1, 32),       # MQA
+    (1, 384, 6, 2, 128),      # non-pow2 blocks (384 = 3*128)
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, s, h, kh, d, causal, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, kh, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, kh, d), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.sdpa(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_sdpa_blocked_matches_exact():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 512, 4, 64))
+    k = jax.random.normal(ks[1], (2, 512, 2, 64))
+    v = jax.random.normal(ks[2], (2, 512, 2, 64))
+    for causal in (True, False):
+        out = ref.sdpa_blocked(q, k, v, causal=causal, chunk=128)
+        want = ref.sdpa(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=3e-5, rtol=3e-5)
+
+
+def test_sdpa_kv_len_masking():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 1, 4, 32))
+    k = jax.random.normal(ks[1], (2, 64, 4, 32))
+    v = jax.random.normal(ks[2], (2, 64, 4, 32))
+    kv_len = jnp.array([5, 64], jnp.int32)
+    out = ref.sdpa(q, k, v, causal=False, kv_len=kv_len)
+    # element 0 must equal attention over the first 5 kv entries only
+    want0 = ref.sdpa(q[:1], k[:1, :5], v[:1, :5], causal=False)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(want0[0]),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,n,chunk", [
+    (2, 64, 2, 16, 16), (1, 128, 4, 32, 32), (2, 96, 2, 64, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_kernel_matches_ref(b, s, h, n, chunk, dtype):
+    ks = jax.random.split(KEY, 6)
+    r = (jax.random.normal(ks[0], (b, s, h, n)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, s, h, n)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (b, s, h, n)) * 0.5).astype(dtype)
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (b, s, h, n)) * 0.5 - 0.5)
+                ).astype(dtype)
+    u = (jax.random.normal(ks[4], (h, n)) * 0.3).astype(jnp.float32)
+    st = jax.random.normal(ks[5], (b, h, n, n)) * 0.1
+    out, sT = rwkv6(r, k, v, w, u, st, chunk=chunk, interpret=True)
+    want, wantS = ref.rwkv6_scan(r, k, v, w, u, st)
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=0.1)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(wantS),
+                               atol=tol, rtol=0.1)
+
+
+def test_rwkv6_extreme_decay_stays_finite():
+    ks = jax.random.split(KEY, 2)
+    shape = (1, 128, 4, 32)
+    r = jax.random.normal(ks[0], shape) * 0.5
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[1], shape)))   # adversarial
+    out, sT = rwkv6(r, r + 0.1, r - 0.2, w, jnp.zeros((4, 32)), None,
+                    interpret=True)
+    want, _ = ref.rwkv6_scan(r, r + 0.1, r - 0.2, w, jnp.zeros((4, 32)), None)
+    assert bool(jnp.isfinite(out).all())
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=5e-3, rtol=0.05)
+
+
+def test_rwkv6_chunk_equals_statefeed():
+    """Processing two halves with state carry == one pass (associativity)."""
+    ks = jax.random.split(KEY, 5)
+    shape = (1, 64, 2, 16)
+    r, k, v = (jax.random.normal(ks[i], shape) * 0.5 for i in range(3))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], shape) * 0.5))
+    u = jax.random.normal(ks[4], (2, 16)) * 0.3
+    full, sF = rwkv6(r, k, v, w, u, None, interpret=True)
+    h1, s1 = rwkv6(r[:, :32], k[:, :32], v[:, :32], w[:, :32], u, None,
+                   interpret=True)
+    h2, s2 = rwkv6(r[:, 32:], k[:, 32:], v[:, 32:], w[:, 32:], u, s1,
+                   interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 1)),
+                               np.asarray(full), atol=1e-4, rtol=0.05)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(sF), atol=1e-4,
+                               rtol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,di,n", [(2, 128, 256, 16), (1, 64, 128, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_kernel_matches_ref(b, s, di, n, dtype):
+    ks = jax.random.split(KEY, 6)
+    x = (jax.random.normal(ks[0], (b, s, di)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, di)) - 1).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (di, n)) * 0.5)
+    B = (jax.random.normal(ks[3], (b, s, n)) * 0.5).astype(dtype)
+    C = (jax.random.normal(ks[4], (b, s, n)) * 0.5).astype(dtype)
+    D = jax.random.normal(ks[5], (di,))
+    st = jnp.zeros((b, di, n))
+    y, sT = ssm(x, dt, A, B, C, D, st, chunk=32, d_block=64, interpret=True)
+    want, wantS = ref.ssm_scan(x, dt, A, B, C, D, st)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=0.1)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(wantS), atol=tol,
+                               rtol=0.1)
+
+
+def test_ssm_state_carry_associativity():
+    ks = jax.random.split(KEY, 6)
+    b, s, di, n = 1, 64, 64, 8
+    x = jax.random.normal(ks[0], (b, s, di)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, di)) - 1)
+    A = -jnp.exp(jax.random.normal(ks[2], (di, n)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, n)) * 0.5
+    D = jax.random.normal(ks[5], (di,))
+    full, sF = ssm(x, dt, A, B, C, D, None, chunk=16, d_block=32, interpret=True)
+    h1, s1 = ssm(x[:, :32], dt[:, :32], A, B[:, :32], C[:, :32], D, None,
+                 chunk=16, d_block=32, interpret=True)
+    h2, s2 = ssm(x[:, 32:], dt[:, 32:], A, B[:, 32:], C[:, 32:], D, s1,
+                 chunk=16, d_block=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 1)),
+                               np.asarray(full), atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(sF), atol=1e-5,
+                               rtol=1e-4)

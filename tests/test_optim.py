@@ -1,0 +1,88 @@
+"""Optimizer: AdamW math vs numpy reference; quantized states; compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.config import OptimizerConfig
+from repro.optim.adamw import adamw_update, init_opt_state, lr_at
+from repro.optim.compression import dequantize_int8, quantize_int8
+
+
+def _numpy_adamw(p, g, m, v, step, ocfg):
+    b1, b2 = ocfg.betas
+    gnorm = np.sqrt((g ** 2).sum())
+    g = g * min(1.0, ocfg.grad_clip / (gnorm + 1e-9))
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g ** 2
+    mhat = m / (1 - b1 ** step)
+    vhat = v / (1 - b2 ** step)
+    lr = float(lr_at(jnp.asarray(step), ocfg))
+    return p - lr * (mhat / (np.sqrt(vhat) + ocfg.eps)
+                     + ocfg.weight_decay * p), m, v
+
+
+def test_adamw_matches_numpy_reference():
+    ocfg = OptimizerConfig(lr=1e-2, warmup_steps=0, total_steps=100,
+                           weight_decay=0.1)
+    rng = np.random.default_rng(0)
+    p = {"w": jnp.asarray(rng.normal(size=(5, 7)), jnp.float32)}
+    state = init_opt_state(p, ocfg)
+    pn = np.asarray(p["w"])
+    mn = np.zeros_like(pn)
+    vn = np.zeros_like(pn)
+    for step in range(1, 4):
+        g = {"w": jnp.asarray(rng.normal(size=(5, 7)), jnp.float32)}
+        p, state = adamw_update(p, g, state, ocfg)
+        pn, mn, vn = _numpy_adamw(pn, np.asarray(g["w"]), mn, vn, step, ocfg)
+        np.testing.assert_allclose(np.asarray(p["w"]), pn, atol=1e-5,
+                                   rtol=1e-5)
+
+
+@pytest.mark.parametrize("state_dtype", ["bfloat16", "int8"])
+def test_quantized_states_track_fp32(state_dtype):
+    """Optimizing a quadratic: quantized-moment Adam must still converge."""
+    ocfg32 = OptimizerConfig(lr=5e-2, warmup_steps=0, total_steps=50)
+    ocfgq = OptimizerConfig(lr=5e-2, warmup_steps=0, total_steps=50,
+                            state_dtype=state_dtype, state_block=32)
+    target = jnp.asarray(np.random.default_rng(1).normal(size=(64,)),
+                         jnp.float32)
+
+    def run(ocfg):
+        p = {"w": jnp.zeros((64,), jnp.float32)}
+        st = init_opt_state(p, ocfg)
+        for _ in range(30):
+            g = {"w": p["w"] - target}
+            p, st = adamw_update(p, g, st, ocfg)
+        return float(jnp.mean(jnp.square(p["w"] - target)))
+
+    err32, errq = run(ocfg32), run(ocfgq)
+    assert errq < 4 * err32 + 1e-3, (errq, err32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(hnp.arrays(np.float32, st.integers(1, 600),
+                  elements=st.floats(-100, 100, width=32)))
+def test_int8_quantization_error_bound(x):
+    xj = jnp.asarray(x)
+    q, scale = quantize_int8(xj, block=64)
+    back = dequantize_int8(q, scale, xj.shape)
+    # per-block error bounded by half a quantization step
+    nblk = -(-x.size // 64)
+    flat = np.pad(x, (0, nblk * 64 - x.size)).reshape(nblk, 64)
+    bound = np.abs(flat).max(1) / 127.0 * 0.5 + 1e-6
+    err = np.abs(np.asarray(back) - x).reshape(-1)
+    errb = np.pad(err, (0, nblk * 64 - x.size)).reshape(nblk, 64)
+    assert (errb.max(1) <= bound + 1e-7).all()
+
+
+def test_lr_schedule_shape():
+    ocfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(lr_at(jnp.asarray(0), ocfg)) == 0.0
+    assert abs(float(lr_at(jnp.asarray(10), ocfg)) - 1.0) < 1e-6
+    assert float(lr_at(jnp.asarray(100), ocfg)) == pytest.approx(0.1, abs=1e-6)
+    # monotone decay after warmup
+    vals = [float(lr_at(jnp.asarray(s), ocfg)) for s in range(10, 101, 10)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))

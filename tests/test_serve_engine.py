@@ -1,0 +1,61 @@
+"""Serving engine: grouped batching, greedy consistency, TTFT accounting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ParallelConfig
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serve.engine import Request, ServeEngine
+
+
+def _engine(slots=2, max_len=64):
+    cfg = get_smoke_config("llama3.2-1b")
+    cfg = dataclasses.replace(cfg, dtype="float32", param_dtype="float32")
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, mesh, ParallelConfig(batch_axes=("data",)), params,
+                      slots=slots, max_len=max_len)
+    return cfg, params, eng
+
+
+def test_greedy_consistency_with_forward():
+    """Engine's greedy continuation == argmax chain from the raw model."""
+    cfg, params, eng = _engine()
+    prompt = [3, 17, 5, 9, 2, 11, 7, 4]
+    req = Request(rid=0, prompt=list(prompt), max_new=4)
+    eng.process_group([req])
+
+    toks = list(prompt)
+    plen = eng._prefill_len
+    padded = np.zeros((1, plen), np.int32)
+    padded[0, :len(toks)] = toks
+    # engine pads to prefill_len; replicate exactly (padded greedy chain)
+    want = []
+    cur = jnp.asarray(padded)
+    logits, _, _ = M.forward(params, cfg, {"tokens": cur})
+    nxt = int(jnp.argmax(logits[0, -1]))
+    want.append(nxt)
+    for _ in range(3):
+        cur = jnp.concatenate([cur, jnp.asarray([[nxt]], jnp.int32)], 1)
+        logits, _, _ = M.forward(params, cfg, {"tokens": cur})
+        nxt = int(jnp.argmax(logits[0, -1]))
+        want.append(nxt)
+    assert req.output == want, (req.output, want)
+
+
+def test_requests_complete_and_timed():
+    _, _, eng = _engine(slots=2)
+    reqs = [Request(rid=i, prompt=[1, 2, 3 + i], max_new=3,
+                    submitted=0.005 * i) for i in range(5)]
+    done = eng.serve(reqs)
+    assert len(done) == 5
+    for r in done:
+        assert len(r.output) == 3
+        assert r.ttft_s is not None and r.ttft_s >= 0
+        assert r.latency_s >= r.ttft_s
+    names = set(eng.collector.stage_names())
+    assert {"prefill", "decode"} <= names

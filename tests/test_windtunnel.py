@@ -1,0 +1,157 @@
+"""Wind-tunnel harness: spans, metrics, load patterns, experiments, twins."""
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.datagen import DataGenerator
+from repro.core.experiment import Experiment
+from repro.core.loadpattern import LoadPattern, Segment
+from repro.core.metrics import MetricStore
+from repro.core.pipeline import Pipeline, PipelineStage, Resources
+from repro.core.schema import Schema, FieldSpec, telemetry_schema, token_stream_schema
+from repro.core.spans import SpanCollector, span
+from repro.core.twin import fit_simple_twin
+
+
+# ---------------------------------------------------------------------------
+# load patterns
+# ---------------------------------------------------------------------------
+
+def test_ramp_total_records():
+    lp = LoadPattern.ramp("r", duration_s=120, peak_rate=40)
+    assert abs(lp.total_records - 2400) < 1e-6      # paper's 120s 0->40 ramp
+
+
+@settings(max_examples=30, deadline=None)
+@given(d=st.floats(1.0, 50.0), r0=st.floats(0.0, 100.0),
+       r1=st.floats(0.0, 100.0), split=st.floats(0.1, 0.9))
+def test_records_between_additive(d, r0, r1, split):
+    lp = LoadPattern("x", (Segment(d, r0, r1),))
+    t = d * split
+    a = lp.records_between(0, t, n=200) + lp.records_between(t, d, n=200)
+    b = lp.records_between(0, d, n=400)
+    assert abs(a - b) < max(0.02 * b, 0.5)
+
+
+def test_rate_interpolation():
+    lp = LoadPattern("x", (Segment(10, 0, 100), Segment(10, 50, 50)))
+    assert abs(lp.rate_at(5) - 50) < 1e-9
+    assert abs(lp.rate_at(15) - 50) < 1e-9
+    assert lp.rate_at(25) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# schema / datagen
+# ---------------------------------------------------------------------------
+
+def test_datagen_deterministic_and_constrained():
+    schema = telemetry_schema()
+    g = DataGenerator(seed=1)
+    ds1 = g.generate(schema, 50)
+    ds2 = DataGenerator(seed=1).generate(schema, 50)
+    np.testing.assert_array_equal(ds1.columns["speed_kph"],
+                                  ds2.columns["speed_kph"])
+    assert (ds1.columns["speed_kph"] >= 0).all()
+    assert (ds1.columns["speed_kph"] <= 200).all()
+    lat = ds1.columns["location"][:, 0]
+    assert (lat > 35).all() and (lat < 45).all()   # land box, not mid-ocean
+
+
+def test_token_stream_zipfian():
+    schema = token_stream_schema(vocab_size=1000, seq_len=64)
+    ds = DataGenerator(seed=0).generate(schema, 100)
+    toks = ds.columns["tokens"]
+    assert toks.shape == (100, 64)
+    assert toks.min() >= 0 and toks.max() < 1000
+    # Zipf: token 0 must dominate a uniform share by far
+    freq0 = (toks == 0).mean()
+    assert freq0 > 10 / 1000
+
+
+# ---------------------------------------------------------------------------
+# spans / metrics
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_summary():
+    col = SpanCollector()
+    with span("outer", col, records=10):
+        with span("inner", col, records=10):
+            time.sleep(0.01)
+    s = col.summary()
+    assert s["outer"]["records"] == 10
+    assert s["inner"]["mean_latency_s"] >= 0.001 / 10
+    assert s["outer"]["busy_s"] >= s["inner"]["busy_s"]
+
+
+def test_metric_store_rate_and_quantile():
+    ms = MetricStore()
+    for i in range(10):
+        ms.inc("count", 5, t=float(i))
+        ms.observe("lat", float(i), t=float(i))
+    assert abs(ms.rate("count", window_s=100) - 5.0) < 1e-6
+    assert ms.quantile("lat", 0.5) == 5.0
+    assert ms.mean("lat") == 4.5
+
+
+def test_metric_store_jsonl_roundtrip(tmp_path):
+    ms = MetricStore()
+    ms.observe("a", 1.0, t=0.0)
+    ms.observe("a", 2.0, t=1.0)
+    p = str(tmp_path / "m.jsonl")
+    ms.dump_jsonl(p)
+    ms2 = MetricStore.load_jsonl(p)
+    assert ms2.values("a") == [1.0, 2.0]
+
+
+# ---------------------------------------------------------------------------
+# pipeline + experiment end-to-end with a KNOWN capacity
+# ---------------------------------------------------------------------------
+
+def _rate_limited_pipeline(service_s: float) -> Pipeline:
+    def work(batch):
+        time.sleep(service_s)
+        return batch
+
+    return Pipeline("calibrated", [PipelineStage("only_stage", work)],
+                    resources=Resources(vcpus=1, ram_gb=1))
+
+
+def test_experiment_measures_known_capacity():
+    service = 0.01                       # 100 rec/s capacity
+    pipe = _rate_limited_pipeline(service)
+    schema = Schema("one", (FieldSpec("x", "float"),))
+    ds = DataGenerator(0).generate(schema, 100)
+    # drive well over capacity so the bottleneck shows
+    load = LoadPattern.steady("over", duration_s=1.5, rate=300)
+    exp = Experiment("cal", pipe, load, ds, drain_timeout_s=30)
+    res = exp.run()
+    assert res.drained
+    tw = fit_simple_twin(res)
+    # sustained throughput within 40% of the known 100 rec/s (sleep jitter)
+    assert 55 < tw.max_rps < 145, tw.max_rps
+    assert res.records_sent == pytest.approx(450, abs=2)
+    assert tw.usd_per_hour > 0
+
+
+def test_experiment_engaged_serially():
+    pipe = _rate_limited_pipeline(0.001)
+    schema = Schema("one", (FieldSpec("x", "float"),))
+    ds = DataGenerator(0).generate(schema, 10)
+    load = LoadPattern.steady("s", 0.2, 50)
+    e = Experiment("a", pipe, load, ds)
+    r = e.run()
+    assert e.status == "completed"
+    assert r.cost["total_usd"] > 0
+
+
+def test_pipeline_queue_backlog_visible():
+    pipe = _rate_limited_pipeline(0.05)   # 20 rec/s
+    pipe.start()
+    for i in range(20):
+        pipe.submit({"x": i}, records=1)
+    depth = pipe.inflight
+    assert depth > 5                      # backlog forms
+    assert pipe.drain(timeout=10)
+    pipe.stop()
