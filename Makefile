@@ -1,0 +1,23 @@
+# Convenience targets for the tier-1 verify and the benchmark harness.
+#
+#   make test          tier-1 test suite (ROADMAP.md's verify command)
+#   make test-deps     install the test requirements
+#   make bench         full benchmark harness (all paper tables + grid)
+#   make bench-grid    looped-vs-vmapped what-if grid microbenchmark only
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-deps bench bench-grid
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+test-deps:
+	$(PYTHON) -m pip install -r tests/requirements.txt
+
+bench:
+	$(PYTHON) -m benchmarks.run
+
+bench-grid:
+	$(PYTHON) benchmarks/grid_bench.py

@@ -1,0 +1,110 @@
+"""Looped vs vmapped what-if grid microbenchmark.
+
+The seed ran ``run_grid`` as a Python loop of one jitted scan per scenario;
+the TwinPolicy engine stacks the whole (twin x traffic) grid and runs it as
+one vmap-over-scan dispatch. This benchmark times both on a 64-scenario
+grid (8 twins spanning all five policies x 8 traffic forecasts) and emits a
+JSON record with the measured speedup.
+
+  PYTHONPATH=src python benchmarks/grid_bench.py
+  PYTHONPATH=src python -m benchmarks.run grid
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core.simulate import _grid_scan
+from repro.core.traffic import TrafficModel
+from repro.core.twin import (QuickscalingTwin, SimpleTwin, make_twin,
+                             registry_version)
+
+N_TWINS = 8
+N_TRAFFICS = 8
+REPEATS = 5
+
+
+def _grid():
+    twins = [
+        SimpleTwin("block", 1.9512, 0.0082, 0.15),
+        SimpleTwin("non-block", 6.15, 0.0703, 0.06),
+        SimpleTwin("cpu-lim", 0.6612, 0.0027, 0.29),
+        QuickscalingTwin("quick", 1.9512, 0.0082, 0.15),
+        make_twin("auto-fast", "autoscale", max_rps=0.5, usd_per_hour=0.002,
+                  base_latency_s=0.1, scale_up_hours=1),
+        make_twin("auto-slow", "autoscale", max_rps=0.5, usd_per_hour=0.002,
+                  base_latency_s=0.1, scale_up_hours=6),
+        make_twin("shed", "shed", max_rps=1.0, usd_per_hour=0.0082,
+                  base_latency_s=0.15, queue_cap_hours=2),
+        make_twin("batch", "batch_window", max_rps=6.15, usd_per_hour=0.0703,
+                  base_latency_s=0.06, window_hours=6),
+    ][:N_TWINS]
+    traffics = [TrafficModel.honda_default(f"g{g:.2f}", R=3.5, G=g)
+                for g in np.linspace(1.0, 1.7, N_TRAFFICS)]
+    grid_twins, loads = [], []
+    for tr in traffics:
+        hl = tr.hourly_loads()
+        for tw in twins:
+            grid_twins.append(tw)
+            loads.append(hl)
+    return grid_twins, np.stack(loads).astype(np.float32)
+
+
+def _kernel_args(twins, loads):
+    params = np.stack([tw.padded_params() for tw in twins])
+    idx = np.asarray([tw.policy_index for tw in twins], np.int32)
+    return loads, params, idx, registry_version()
+
+
+def bench() -> Dict:
+    twins, loads = _grid()
+    loads_j, params, idx, ver = _kernel_args(twins, loads)
+    n = len(twins)
+
+    # vmapped: one dispatch over the stacked batch
+    def vmapped():
+        out = _grid_scan(loads_j, params, idx, ver)
+        jax.block_until_ready(out)
+
+    # looped: the seed's shape — one batch-of-1 kernel call per scenario
+    def looped():
+        for i in range(n):
+            out = _grid_scan(loads_j[i:i + 1], params[i:i + 1],
+                             idx[i:i + 1], ver)
+        jax.block_until_ready(out)
+
+    vmapped(), looped()          # warm both jit caches
+    t_vm, t_loop = [], []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        vmapped()
+        t_vm.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        looped()
+        t_loop.append(time.perf_counter() - t0)
+    vm_ms = min(t_vm) * 1e3
+    loop_ms = min(t_loop) * 1e3
+    return {
+        "scenarios": n,
+        "hours": int(loads.shape[1]),
+        "looped_ms": round(loop_ms, 3),
+        "vmapped_ms": round(vm_ms, 3),
+        "speedup": round(loop_ms / vm_ms, 2),
+        "device": jax.devices()[0].platform,
+    }
+
+
+def main() -> List[str]:
+    r = bench()
+    return [f"grid/looped_{r['scenarios']}x,{r['looped_ms'] * 1e3:.0f},"
+            f"per-scenario-dispatch",
+            f"grid/vmapped_{r['scenarios']}x,{r['vmapped_ms'] * 1e3:.0f},"
+            f"speedup={r['speedup']}x;{json.dumps(r, sort_keys=True)}"]
+
+
+if __name__ == "__main__":
+    print(json.dumps(bench(), indent=2, sort_keys=True))

@@ -45,6 +45,8 @@ TABLES = {
                                  fromlist=["main"]).main(),
     "table4": lambda: __import__("benchmarks.table4_retention",
                                  fromlist=["main"]).main(),
+    "grid": lambda: __import__("benchmarks.grid_bench",
+                               fromlist=["main"]).main(),
     "roofline": lambda: __import__("benchmarks.roofline_bench",
                                    fromlist=["main"]).main(),
 }

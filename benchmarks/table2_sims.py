@@ -1,7 +1,9 @@
 """Paper Table II: six (twin x traffic) year-long simulations using the
 paper's published twin parameters; validated against the published costs,
-SLO pattern and backlogs. Also times simulate_year ("the simulation is
-quite fast" — here ~1 ms/year after jit)."""
+SLO pattern and backlogs. The whole grid runs as one vmapped scan (see
+benchmarks/grid_bench.py for the looped-vs-vmapped comparison). Also times
+simulate_year ("the simulation is quite fast" — here ~1 ms/year after
+jit)."""
 from __future__ import annotations
 
 import time

@@ -13,7 +13,11 @@ from repro.core.metrics import MetricStore                         # noqa: F401
 from repro.core.pipeline import Pipeline, PipelineStage            # noqa: F401
 from repro.core.experiment import Experiment, ExperimentResult     # noqa: F401
 from repro.core.traffic import TrafficModel                        # noqa: F401
-from repro.core.twin import SimpleTwin, QuickscalingTwin, fit_simple_twin  # noqa: F401
-from repro.core.simulate import simulate_year, SimulationResult    # noqa: F401
+from repro.core.twin import (Twin, SimpleTwin, QuickscalingTwin,   # noqa: F401
+                             make_twin, register_policy, policy_names,
+                             fit_twin, fit_simple_twin,
+                             fit_quickscaling_twin, roofline_twin)
+from repro.core.simulate import (simulate_year, simulate_grid,     # noqa: F401
+                                 SimulationResult)
 from repro.core.slo import SLO                                     # noqa: F401
 from repro.core.cost import CostModel, TPU_V5E_USD_PER_CHIP_HOUR   # noqa: F401

@@ -23,6 +23,8 @@ def render_table(rows: Sequence[Dict], title: str = "") -> str:
 
 
 def _fmt(v) -> str:
+    if v is None:
+        return "-"
     if isinstance(v, float):
         if v == 0:
             return "0"

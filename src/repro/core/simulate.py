@@ -1,15 +1,25 @@
-"""Year-long pipeline simulation (paper Sec. V-G / Tables II & IV).
+"""Year-long pipeline simulation (paper Sec. V-G / Tables II & IV) on the
+unified TwinPolicy engine.
 
-``simulate_year`` plays an hourly load projection through a digital twin:
-FIFO queueing when load exceeds capacity (SimpleTwin) or elastic scaling
-(QuickscalingTwin). Implemented as a jitted ``jax.lax.scan`` over the 8736
-hours — "no synthetic data is actually processed; only the load shape is
-used, so the simulation is quite fast" (paper) — here a full year simulates
-in ~1 ms, so what-if grids over many scenarios are interactive.
+``simulate_grid`` plays hourly load projections through digital twins: the
+whole batch of (twin x traffic) scenarios is stacked into [N, H] load and
+[N, PARAM_DIM] parameter arrays and executed as ONE ``jax.vmap`` over a
+jitted ``jax.lax.scan`` of the 8736 hours. Each hour step dispatches to the
+twin's registered policy with ``jax.lax.switch`` (see core/twin.py), so a
+grid mixing fifo / quickscale / autoscale / shed / batch_window twins is a
+single device dispatch — "no synthetic data is actually processed; only the
+load shape is used, so the simulation is quite fast" (paper); here a full
+64-scenario grid simulates in about the time the seed took for one.
+
+``simulate_year`` is the batch-of-one convenience wrapper and keeps the
+seed's exact semantics: legacy SimpleTwin/QuickscalingTwin results are
+numerically identical to the old hard-coded scan.
 
 End-of-year backlog is priced the paper's way: queue_length / capacity
 hours of extra pipeline time at the twin's hourly rate ("the cost of, for
-example, spinning up duplicate pipelines to process the backlog").
+example, spinning up duplicate pipelines to process the backlog"). Policies
+with a bounded queue additionally report a ``dropped`` hourly series
+(records shed), which SLOs can target via ``metric="drop_rate"``.
 
 ``storage_costs`` runs the daily rolling-retention accumulation (Table IV):
 data builds up day by day and ages out after the retention window.
@@ -18,7 +28,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Union
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -27,9 +37,8 @@ import numpy as np
 from repro.core.cost import CostModel
 from repro.core.slo import SLO
 from repro.core.traffic import DAYS_PER_YEAR, HOURS_PER_YEAR, MONTH_DAYS
-from repro.core.twin import QuickscalingTwin, SimpleTwin
-
-Twin = Union[SimpleTwin, QuickscalingTwin]
+from repro.core.twin import (CARRY_DIM, Twin, policy_branches,
+                             registry_version)
 
 
 @dataclass
@@ -55,38 +64,66 @@ class SimulationResult:
     slo_met: Optional[bool]
     network_cost_usd: float = 0.0
     storage_cost_usd: float = 0.0
+    # hourly records shed by bounded-queue policies (zeros otherwise)
+    dropped: np.ndarray = field(default_factory=lambda: np.zeros(0))
+    dropped_records: float = 0.0
 
     @property
     def grand_total_usd(self) -> float:
         return self.total_cost_usd + self.network_cost_usd + self.storage_cost_usd
 
 
-@functools.partial(jax.jit, static_argnums=(2,))
-def _fifo_scan(load: jnp.ndarray, params: jnp.ndarray, quickscale: bool):
-    """load [H] records/hour; params = (max_rps, usd_per_hour, base_lat)."""
-    max_rps, usd_hr, base_lat = params
-    cap_h = max_rps * 3600.0
+@functools.partial(jax.jit, static_argnums=(3,))
+def _grid_scan(loads: jnp.ndarray, params: jnp.ndarray,
+               policy_idx: jnp.ndarray, version: int):
+    """The whole grid in one dispatch.
 
-    def hour(queue, arrive):
-        if quickscale:
-            instances = jnp.maximum(jnp.ceil(arrive / jnp.maximum(cap_h, 1e-9)), 1.0)
-            processed = arrive
-            new_q = queue * 0.0
-            latency = base_lat
-            cost = usd_hr * instances
-        else:
-            avail = queue + arrive
-            processed = jnp.minimum(avail, cap_h)
-            new_q = avail - processed
-            # a record arriving this hour waits behind ~the average queue
-            avg_q = 0.5 * (queue + new_q)
-            latency = base_lat + avg_q / jnp.maximum(max_rps, 1e-9)
-            cost = usd_hr
-        return new_q, (processed, new_q, latency, cost)
+    loads [N, H] records/hour; params [N, PARAM_DIM] per twin.padded_params;
+    policy_idx [N] int32 switch indices; ``version`` is the policy-registry
+    version (static) so late policy registration forces a retrace.
+    """
+    branches = policy_branches()
 
-    q_end, (processed, queue, latency, cost) = jax.lax.scan(
-        hour, jnp.zeros(()), load)
-    return q_end, processed, queue, latency, cost
+    def one(load, p, idx):
+        def hour(carry, arrive):
+            return jax.lax.switch(idx, branches, carry, arrive, p)
+
+        carry_end, outs = jax.lax.scan(
+            hour, jnp.zeros((CARRY_DIM,), jnp.float32), load)
+        return carry_end[0], outs
+
+    return jax.vmap(one)(loads, params, policy_idx)
+
+
+def simulate_grid(twins: Sequence[Twin], loads: np.ndarray,
+                  names: Optional[Sequence[str]] = None,
+                  slo: Optional[SLO] = None,
+                  cost_model: Optional[CostModel] = None,
+                  record_mb: float = 0.0) -> List[SimulationResult]:
+    """Simulate N scenarios — twins[i] against loads[i] — in one vmapped
+    scan. ``loads`` is [N, HOURS_PER_YEAR]; stats are summarised per
+    scenario afterwards in numpy."""
+    loads = np.asarray(loads, np.float32)
+    assert loads.ndim == 2 and loads.shape[1] == HOURS_PER_YEAR, loads.shape
+    assert len(twins) == loads.shape[0], (len(twins), loads.shape)
+    params = np.stack([tw.padded_params() for tw in twins])
+    idx = np.asarray([tw.policy_index for tw in twins], np.int32)
+    q_end, (processed, queue, latency, cost, dropped) = _grid_scan(
+        jnp.asarray(loads), jnp.asarray(params), jnp.asarray(idx),
+        registry_version())
+    q_end = np.asarray(q_end, np.float64)
+    processed = np.asarray(processed, np.float64)
+    queue = np.asarray(queue, np.float64)
+    latency = np.asarray(latency, np.float64)
+    cost = np.asarray(cost, np.float64)
+    dropped = np.asarray(dropped, np.float64)
+    names = list(names) if names is not None else [tw.name for tw in twins]
+    return [
+        _summarise(names[i], twins[i], np.asarray(loads[i], np.float64),
+                   processed[i], queue[i], latency[i], cost[i], dropped[i],
+                   float(q_end[i]), slo, cost_model, record_mb)
+        for i in range(len(twins))
+    ]
 
 
 def simulate_year(twin: Twin, hourly_load: np.ndarray,
@@ -94,17 +131,20 @@ def simulate_year(twin: Twin, hourly_load: np.ndarray,
                   cost_model: Optional[CostModel] = None,
                   record_mb: float = 0.0,
                   name: Optional[str] = None) -> SimulationResult:
-    load = jnp.asarray(hourly_load, jnp.float32)
+    """Batch-of-one wrapper over ``simulate_grid`` (the seed's API)."""
+    load = np.asarray(hourly_load, np.float32)
     assert load.shape == (HOURS_PER_YEAR,), load.shape
-    params = jnp.array([twin.max_rps, twin.usd_per_hour, twin.base_latency_s],
-                       jnp.float32)
-    quick = isinstance(twin, QuickscalingTwin) or twin.kind == "quickscaling"
-    q_end, processed, queue, latency, cost = _fifo_scan(load, params, quick)
+    return simulate_grid([twin], load[None], names=[name or twin.name],
+                         slo=slo, cost_model=cost_model,
+                         record_mb=record_mb)[0]
 
-    load_np = np.asarray(load, np.float64)
-    lat_np = np.asarray(latency, np.float64)
-    cost_np = np.asarray(cost, np.float64)
-    backlog_s = float(q_end) / max(twin.max_rps, 1e-9)
+
+def _summarise(name: str, twin: Twin, load_np: np.ndarray,
+               processed: np.ndarray, queue: np.ndarray, lat_np: np.ndarray,
+               cost_np: np.ndarray, dropped: np.ndarray, q_end: float,
+               slo: Optional[SLO], cost_model: Optional[CostModel],
+               record_mb: float) -> SimulationResult:
+    backlog_s = q_end / max(twin.max_rps, 1e-9)
     backlog_cost = backlog_s / 3600.0 * twin.usd_per_hour
 
     # record-weighted latency stats (records arriving each hour share the
@@ -118,10 +158,13 @@ def simulate_year(twin: Twin, hourly_load: np.ndarray,
     pct_rec_met = pct_hours_met = 100.0
     slo_met = None
     if slo is not None:
-        ok = lat_np <= slo.limit_s
-        pct_rec_met = float((w * ok).sum() * 100.0)
-        pct_hours_met = float(ok.mean() * 100.0)
-        slo_met = bool(pct_rec_met >= slo.met_fraction * 100.0)
+        if slo.metric == "drop_rate":
+            # hourly shed fraction vs the allowed fraction
+            vals = dropped / np.maximum(load_np, 1e-9)
+        else:
+            vals = lat_np
+        pct_rec_met, slo_met = slo.evaluate(vals, weights=load_np)
+        pct_hours_met = slo.evaluate(vals)[0]
 
     net_cost = stor_cost = 0.0
     if cost_model is not None and record_mb > 0.0:
@@ -130,18 +173,17 @@ def simulate_year(twin: Twin, hourly_load: np.ndarray,
         stor_cost = float(daily["storage_usd"].sum())
 
     return SimulationResult(
-        name=name or f"{twin.name}", twin=twin, load=load_np,
-        processed=np.asarray(processed, np.float64),
-        queue=np.asarray(queue, np.float64), latency_s=lat_np,
-        cost_usd=cost_np,
+        name=name, twin=twin, load=load_np,
+        processed=processed, queue=queue, latency_s=lat_np, cost_usd=cost_np,
         total_cost_usd=float(cost_np.sum() + backlog_cost),
         backlog_s=backlog_s, backlog_cost_usd=backlog_cost,
-        mean_throughput_rph=float(np.asarray(processed).mean()),
-        max_throughput_rph=float(np.asarray(processed).max()),
+        mean_throughput_rph=float(processed.mean()),
+        max_throughput_rph=float(processed.max()),
         median_latency_s=median_lat, mean_latency_s=mean_lat,
         pct_latency_met=pct_rec_met, pct_hours_met=pct_hours_met,
         slo_met=slo_met, network_cost_usd=net_cost,
-        storage_cost_usd=stor_cost)
+        storage_cost_usd=stor_cost, dropped=dropped,
+        dropped_records=float(dropped.sum()))
 
 
 def storage_costs(hourly_load: np.ndarray, cost_model: CostModel,

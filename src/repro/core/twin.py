@@ -1,66 +1,392 @@
-"""Digital twins (paper Sec. V-G): explainable pipeline models fit from
-experiments, applied to traffic projections by the simulator.
+"""Digital twins (paper Sec. V-G) as a unified TwinPolicy architecture.
 
-SimpleTwin      — fixed capacity, fixed $/hr, FIFO infinite queue (the
-                  paper's proof-of-concept model, Table I).
-QuickscalingTwin— optimal horizontal scaling: no queueing; cost scales with
-                  ceil(load / capacity) instances.
-RooflineTwin    — beyond-paper: capacity derived *analytically* from the
-                  compiled dry-run roofline terms of a JAX serving pipeline,
-                  so cost/performance can be forecast before the pipeline is
-                  ever run at scale.
+A twin is explainable pipeline model fit from wind-tunnel experiments and
+applied to traffic projections by the simulator. Where the paper ships two
+hard-coded models (fixed-capacity FIFO and optimal quickscaling), here a
+twin is a ``Twin`` record carrying a *policy name* plus a *flat parameter
+vector*, and every policy is a pure hour-step function
+
+    step(carry, arrive, params) -> (carry, (processed, queue, latency,
+                                            cost, dropped))
+
+registered in a module-level table. The simulator selects the step inside
+its ``jax.lax.scan`` with ``jax.lax.switch``, so every (twin x traffic)
+scenario of a what-if grid — regardless of policy mix — runs through ONE
+vmapped scan kernel (see core/simulate.py). New scaling/queueing policies
+are added by registering a step function; the kernel never changes.
+
+Shared convention: ``params[0:3] = (max_rps, usd_per_hour, base_latency_s)``
+for every policy; extra parameters follow, zero-padded to ``PARAM_DIM``.
+The scan carry is a ``CARRY_DIM``-vector: slot 0 holds queued/accumulated
+records, slot 1 holds policy state (autoscale's live instance count,
+batch_window's hours-since-flush).
+
+Built-in policies
+-----------------
+fifo          — fixed capacity, fixed $/hr, FIFO infinite queue (the
+                paper's proof-of-concept model, Table I).
+quickscale    — optimal horizontal scaling: no queueing; cost scales with
+                ceil(load / capacity) instances.
+autoscale     — beyond-paper: horizontal scaling with a scale-up delay and
+                min/max instance bounds — the autoscaling-delay /
+                overprovisioning cost levers of Jablonski & Heltweg.
+shed          — beyond-paper: bounded queue with load shedding; excess
+                records are dropped and reported per hour.
+batch_window  — beyond-paper: accumulate-then-flush batching; pay mostly
+                for compute actually used (plus a keep-warm fraction) at
+                the price of half-a-window average latency.
+
+``SimpleTwin`` / ``QuickscalingTwin`` remain as constructor aliases that
+build the equivalent ``Twin``, and ``roofline_twin`` still derives capacity
+analytically from compiled dry-run roofline terms (launch/roofline.py), so
+cost/performance can be forecast before a pipeline is ever run at scale.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional
+from dataclasses import dataclass, replace
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.experiment import ExperimentResult
 
+CARRY_DIM = 2     # [queued/accumulated records, policy state]
+PARAM_DIM = 6     # flat parameter vector, zero-padded per policy
+
 
 @dataclass(frozen=True)
-class SimpleTwin:
+class PolicySpec:
+    """One registered scaling/queueing policy."""
     name: str
-    max_rps: float               # sustained capacity, records/s
-    usd_per_hour: float          # fixed resource cost
-    base_latency_s: float        # per-record latency with no queueing
+    index: int                       # lax.switch branch index (stable)
+    step: Callable                   # (carry, arrive, params) -> (carry, out)
+    param_names: Tuple[str, ...]     # layout of the flat param vector
+    defaults: Dict[str, float]
+    doc: str
+
+
+_REGISTRY: Dict[str, PolicySpec] = {}
+_VERSION = 0    # bumped on registration; a static jit arg, so the grid
+                # kernel retraces when a new policy is registered late
+
+
+def register_policy(name: str, param_names: Tuple[str, ...],
+                    defaults: Optional[Dict[str, float]] = None,
+                    doc: str = ""):
+    """Decorator: register ``fn(carry, arrive, params)`` as policy ``name``.
+
+    ``param_names`` must start with the shared triple
+    (max_rps, usd_per_hour, base_latency_s) and fit within PARAM_DIM.
+    """
+    if len(param_names) > PARAM_DIM:
+        raise ValueError(f"{name}: {len(param_names)} params > {PARAM_DIM}")
+    if tuple(param_names[:3]) != ("max_rps", "usd_per_hour",
+                                  "base_latency_s"):
+        raise ValueError(f"{name}: params must start with the shared triple")
+
+    def deco(fn):
+        global _VERSION
+        # overriding an existing policy keeps its switch index so twins
+        # built earlier still dispatch to the right branch slot
+        prev = _REGISTRY.get(name)
+        spec = PolicySpec(name=name,
+                          index=prev.index if prev else len(_REGISTRY),
+                          step=fn,
+                          param_names=tuple(param_names),
+                          defaults=dict(defaults or {}),
+                          doc=doc or (fn.__doc__ or "").strip())
+        _REGISTRY[name] = spec
+        _VERSION += 1
+        return fn
+    return deco
+
+
+def policy_spec(name: str) -> PolicySpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown twin policy {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}") from None
+
+
+def policy_names() -> List[str]:
+    return [s.name for s in sorted(_REGISTRY.values(), key=lambda s: s.index)]
+
+
+def policy_branches() -> Tuple[Callable, ...]:
+    """Step functions ordered by switch index (the kernel's branch table)."""
+    return tuple(s.step for s in
+                 sorted(_REGISTRY.values(), key=lambda s: s.index))
+
+
+def registry_version() -> int:
+    return _VERSION
+
+
+def policy_table_rows() -> List[Dict]:
+    """Catalog rows for report.render_table (docs / examples)."""
+    rows = []
+    for s in sorted(_REGISTRY.values(), key=lambda s: s.index):
+        extras = ", ".join(p for p in s.param_names[3:]) or "-"
+        rows.append({"policy": s.name, "extra_params": extras,
+                     "behaviour": s.doc.split("\n")[0]})
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# The Twin record
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Twin:
+    """A fitted pipeline model: policy name + flat parameter vector.
+
+    ``params`` is laid out per ``policy_spec(policy).param_names``; the
+    first three entries are always (max_rps, usd_per_hour, base_latency_s).
+    """
+    name: str
     policy: str = "fifo"
-    kind: str = "simple"
+    params: Tuple[float, ...] = ()
+    kind: str = "fit"
+
+    # shared-triple accessors (every policy's params start with these)
+    @property
+    def max_rps(self) -> float:
+        return self.params[0]
+
+    @property
+    def usd_per_hour(self) -> float:
+        return self.params[1]
+
+    @property
+    def base_latency_s(self) -> float:
+        return self.params[2]
+
+    def param(self, pname: str) -> float:
+        """Named lookup into the flat vector (falls back to the default)."""
+        spec = policy_spec(self.policy)
+        i = spec.param_names.index(pname)
+        if i < len(self.params):
+            return self.params[i]
+        return float(spec.defaults[pname])
+
+    def with_params(self, **updates) -> "Twin":
+        """A copy with named parameters changed."""
+        spec = policy_spec(self.policy)
+        vals = dict(zip(spec.param_names, self.padded_params()))
+        unknown = set(updates) - set(spec.param_names)
+        if unknown:
+            raise KeyError(f"{self.policy} has no params {sorted(unknown)}")
+        vals.update(updates)
+        return replace(self, params=tuple(float(vals[p])
+                                          for p in spec.param_names))
+
+    def padded_params(self) -> np.ndarray:
+        """[PARAM_DIM] f32 vector: params, then defaults, then zeros."""
+        spec = policy_spec(self.policy)
+        vals = [float(v) for v in self.params[:len(spec.param_names)]]
+        for pname in spec.param_names[len(vals):]:
+            vals.append(float(spec.defaults.get(pname, 0.0)))
+        vals += [0.0] * (PARAM_DIM - len(vals))
+        return np.asarray(vals, np.float32)
+
+    @property
+    def policy_index(self) -> int:
+        return policy_spec(self.policy).index
 
 
-@dataclass(frozen=True)
-class QuickscalingTwin:
-    name: str
-    max_rps: float               # capacity of ONE instance
-    usd_per_hour: float          # cost of ONE instance
-    base_latency_s: float
-    policy: str = "scale"
-    kind: str = "quickscaling"
+def make_twin(name: str, policy: str, *, kind: str = "fit",
+              **params: float) -> Twin:
+    """Build a Twin by named parameters, filling registered defaults."""
+    spec = policy_spec(policy)
+    vals = dict(spec.defaults)
+    unknown = set(params) - set(spec.param_names)
+    if unknown:
+        raise KeyError(f"{policy} has no params {sorted(unknown)}; "
+                       f"expects {spec.param_names}")
+    vals.update(params)
+    missing = [p for p in spec.param_names if p not in vals]
+    if missing:
+        raise KeyError(f"{policy} missing params {missing}")
+    return Twin(name=name, policy=policy, kind=kind,
+                params=tuple(float(vals[p]) for p in spec.param_names))
 
 
-def fit_simple_twin(result: ExperimentResult, name: Optional[str] = None
-                    ) -> SimpleTwin:
-    """The paper's fit: apparent sustained throughput over the whole
-    experiment, fixed hourly cost, no-queue latency from stage medians."""
-    return SimpleTwin(
-        name=name or result.pipeline_name,
-        max_rps=result.sustained_rps,
-        usd_per_hour=result.cost["usd_per_hour"],
-        base_latency_s=result.base_latency_s)
+# ---------------------------------------------------------------------------
+# Built-in policy hour-steps. Pure f32 math, identical output avals across
+# branches (lax.switch requirement): carry [CARRY_DIM] and five scalars
+# (processed, queue, latency, cost, dropped).
+# ---------------------------------------------------------------------------
+
+@register_policy("fifo", ("max_rps", "usd_per_hour", "base_latency_s"))
+def _fifo_step(carry, arrive, p):
+    """Fixed capacity, fixed $/hr, FIFO infinite queue (paper Table I)."""
+    max_rps, usd_hr, base_lat = p[0], p[1], p[2]
+    cap_h = max_rps * 3600.0
+    queue = carry[0]
+    avail = queue + arrive
+    processed = jnp.minimum(avail, cap_h)
+    new_q = avail - processed
+    # a record arriving this hour waits behind ~the average queue
+    avg_q = 0.5 * (queue + new_q)
+    latency = base_lat + avg_q / jnp.maximum(max_rps, 1e-9)
+    return (carry.at[0].set(new_q),
+            (processed, new_q, latency, usd_hr, jnp.zeros(())))
 
 
-def fit_quickscaling_twin(result: ExperimentResult, name: Optional[str] = None
-                          ) -> QuickscalingTwin:
-    return QuickscalingTwin(
-        name=name or result.pipeline_name,
-        max_rps=result.sustained_rps,
-        usd_per_hour=result.cost["usd_per_hour"],
-        base_latency_s=result.base_latency_s)
+@register_policy("quickscale", ("max_rps", "usd_per_hour",
+                                "base_latency_s"))
+def _quickscale_step(carry, arrive, p):
+    """Optimal scaling: never queues; pay ceil(load/capacity) instances."""
+    max_rps, usd_hr, base_lat = p[0], p[1], p[2]
+    cap_h = max_rps * 3600.0
+    queue = carry[0]
+    instances = jnp.maximum(jnp.ceil(arrive / jnp.maximum(cap_h, 1e-9)), 1.0)
+    processed = arrive
+    new_q = queue * 0.0
+    cost = usd_hr * instances
+    return (carry.at[0].set(new_q),
+            (processed, new_q, base_lat, cost, jnp.zeros(())))
+
+
+@register_policy("autoscale",
+                 ("max_rps", "usd_per_hour", "base_latency_s",
+                  "min_instances", "max_instances", "scale_up_hours"),
+                 defaults={"min_instances": 1.0, "max_instances": 64.0,
+                           "scale_up_hours": 1.0})
+def _autoscale_step(carry, arrive, p):
+    """Horizontal scaling with scale-up delay and min/max instance bounds.
+
+    Demand (queue + arrivals) sets a target instance count; booting is
+    first-order with time constant ``scale_up_hours`` (teardown is
+    immediate), so a slow autoscaler under-provisions during ramps — the
+    queueing/latency vs cost lever of cloud-pipeline autoscaling studies.
+    params[0:2] are per-instance capacity and per-instance $/hr.
+    """
+    max_rps, usd_hr, base_lat = p[0], p[1], p[2]
+    min_i, max_i, delay = p[3], p[4], p[5]
+    cap1 = max_rps * 3600.0
+    queue, prev = carry[0], carry[1]
+    prev = jnp.clip(prev, min_i, max_i)   # hour 0: carry starts at min_i
+    avail = queue + arrive
+    target = jnp.clip(jnp.ceil(avail / jnp.maximum(cap1, 1e-9)),
+                      min_i, max_i)
+    booting = prev + (target - prev) / jnp.maximum(delay, 1.0)
+    inst = jnp.where(target > prev, booting, target)
+    processed = jnp.minimum(avail, inst * cap1)
+    new_q = avail - processed
+    avg_q = 0.5 * (queue + new_q)
+    latency = base_lat + avg_q / jnp.maximum(inst * max_rps, 1e-9)
+    cost = usd_hr * inst
+    return (jnp.stack([new_q, inst]),
+            (processed, new_q, latency, cost, jnp.zeros(())))
+
+
+@register_policy("shed",
+                 ("max_rps", "usd_per_hour", "base_latency_s",
+                  "queue_cap_hours"),
+                 defaults={"queue_cap_hours": 4.0})
+def _shed_step(carry, arrive, p):
+    """Bounded queue with load shedding: overflow beyond the cap is dropped.
+
+    The queue holds at most ``queue_cap_hours`` hours of capacity worth of
+    records; anything beyond is shed and reported in the dropped series, so
+    latency stays bounded at the price of completeness.
+    """
+    max_rps, usd_hr, base_lat, qcap_h = p[0], p[1], p[2], p[3]
+    cap_h = max_rps * 3600.0
+    qmax = qcap_h * cap_h
+    queue = carry[0]
+    avail = queue + arrive
+    processed = jnp.minimum(avail, cap_h)
+    backlog = avail - processed
+    dropped = jnp.maximum(backlog - qmax, 0.0)
+    new_q = backlog - dropped
+    avg_q = 0.5 * (queue + new_q)
+    latency = base_lat + avg_q / jnp.maximum(max_rps, 1e-9)
+    return (carry.at[0].set(new_q),
+            (processed, new_q, latency, usd_hr, dropped))
+
+
+@register_policy("batch_window",
+                 ("max_rps", "usd_per_hour", "base_latency_s",
+                  "window_hours", "idle_cost_fraction"),
+                 defaults={"window_hours": 6.0, "idle_cost_fraction": 0.1})
+def _batch_window_step(carry, arrive, p):
+    """Accumulate-then-flush batching: cheap hours, half-a-window latency.
+
+    Records accumulate for ``window_hours``; a flush burst then processes up
+    to a full window of capacity at once. Cost is pay-per-use (pipeline
+    hours actually consumed) plus an ``idle_cost_fraction`` keep-warm charge
+    every hour — bigger windows amortise the idle cost but add ~window/2 of
+    batching latency.
+    """
+    max_rps, usd_hr, base_lat = p[0], p[1], p[2]
+    window, idle_frac = p[3], p[4]
+    cap_h = max_rps * 3600.0
+    acc, timer = carry[0], carry[1]
+    timer = timer + 1.0
+    flush = timer >= window
+    avail = acc + arrive
+    processed = jnp.where(flush, jnp.minimum(avail, cap_h * window), 0.0)
+    new_acc = avail - processed
+    latency = (base_lat + 0.5 * window * 3600.0
+               + new_acc / jnp.maximum(max_rps, 1e-9))
+    cost = (usd_hr * idle_frac
+            + usd_hr * processed / jnp.maximum(cap_h, 1e-9))
+    new_timer = jnp.where(flush, 0.0, timer)
+    return (jnp.stack([new_acc, new_timer]),
+            (processed, new_acc, latency, cost, jnp.zeros(())))
+
+
+# ---------------------------------------------------------------------------
+# Constructor aliases (seed API) and fitting from wind-tunnel experiments
+# ---------------------------------------------------------------------------
+
+def SimpleTwin(name: str, max_rps: float, usd_per_hour: float,
+               base_latency_s: float, policy: str = "fifo",
+               kind: str = "simple") -> Twin:
+    """Seed-compatible alias: fixed-capacity FIFO twin (paper Table I)."""
+    return Twin(name=name, policy=policy, kind=kind,
+                params=(float(max_rps), float(usd_per_hour),
+                        float(base_latency_s)))
+
+
+def QuickscalingTwin(name: str, max_rps: float, usd_per_hour: float,
+                     base_latency_s: float, policy: str = "quickscale",
+                     kind: str = "quickscaling") -> Twin:
+    """Seed-compatible alias: optimal horizontal-scaling twin."""
+    return Twin(name=name, policy=policy, kind=kind,
+                params=(float(max_rps), float(usd_per_hour),
+                        float(base_latency_s)))
+
+
+def fit_twin(result: ExperimentResult, policy: str = "fifo",
+             name: Optional[str] = None, **extra_params: float) -> Twin:
+    """The paper's fit, generalised to any registered policy: apparent
+    sustained throughput over the whole experiment, measured hourly cost,
+    no-queue latency from stage medians; policy extras via kwargs."""
+    return make_twin(name or result.pipeline_name, policy,
+                     max_rps=result.sustained_rps,
+                     usd_per_hour=result.cost["usd_per_hour"],
+                     base_latency_s=result.base_latency_s,
+                     **extra_params)
+
+
+def fit_simple_twin(result: ExperimentResult,
+                    name: Optional[str] = None) -> Twin:
+    return fit_twin(result, "fifo", name)
+
+
+def fit_quickscaling_twin(result: ExperimentResult,
+                          name: Optional[str] = None) -> Twin:
+    return fit_twin(result, "quickscale", name)
 
 
 def roofline_twin(name: str, *, step_seconds: float, records_per_step: float,
                   chips: int, chip_usd_per_hour: float = 1.20,
-                  base_latency_s: Optional[float] = None) -> SimpleTwin:
+                  base_latency_s: Optional[float] = None) -> Twin:
     """Capacity from the dry-run roofline bound: one serving step processes
     ``records_per_step`` requests in ``step_seconds`` (max of the three
     roofline terms). See launch/roofline.py for the term derivation."""

@@ -10,9 +10,35 @@ from __future__ import annotations
 
 from typing import Dict, Optional, Tuple
 
+import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import ParallelConfig
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+              axis_names=None):
+    """Version-compat ``shard_map``: the top-level ``jax.shard_map`` API
+    (jax >= 0.6, with ``check_vma`` / ``axis_names``) when available, else
+    ``jax.experimental.shard_map.shard_map`` with the kwargs translated
+    (``check_vma`` -> ``check_rep``; ``axis_names`` -> the complement
+    ``auto`` set). Use this everywhere instead of either spelling."""
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {}
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
 
 
 def mesh_shape_dict(mesh: Mesh) -> Dict[str, int]:

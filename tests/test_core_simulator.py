@@ -1,6 +1,8 @@
 """Digital-twin year-simulator invariants (unit + hypothesis properties)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cost import CostModel

@@ -1,0 +1,340 @@
+"""TwinPolicy engine: registry, new policies, vmapped grid, seed parity.
+
+No hypothesis dependency — these are the deterministic property checks for
+the policy registry (conservation, monotonicity, backward compatibility)
+plus the single-trace guarantee of the vmapped ``run_grid``.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.simulate import _grid_scan, simulate_grid, simulate_year
+from repro.core.slo import SLO
+from repro.core.traffic import HOURS_PER_YEAR, TrafficModel
+from repro.core.twin import (PARAM_DIM, QuickscalingTwin, SimpleTwin, Twin,
+                             fit_twin, make_twin, policy_names, policy_spec,
+                             roofline_twin)
+from repro.core.whatif import run_grid, table2_rows
+
+NOM = TrafficModel.honda_default("nom")
+LOADS = NOM.hourly_loads()
+# the scan runs in f32; compare against what it actually saw
+ARRIVED = LOADS.astype(np.float32).astype(np.float64)
+
+ALL_POLICY_TWINS = [
+    SimpleTwin("fifo", 1.0, 0.01, 0.1),
+    QuickscalingTwin("quick", 1.0, 0.01, 0.1),
+    make_twin("auto", "autoscale", max_rps=0.5, usd_per_hour=0.01,
+              base_latency_s=0.1, min_instances=1, max_instances=8,
+              scale_up_hours=3),
+    make_twin("shed", "shed", max_rps=1.0, usd_per_hour=0.01,
+              base_latency_s=0.1, queue_cap_hours=2),
+    make_twin("batch", "batch_window", max_rps=4.0, usd_per_hour=0.01,
+              base_latency_s=0.1, window_hours=6),
+]
+
+
+# ---------------------------------------------------------------------------
+# seed parity: legacy twins bit-identical to the seed's hard-coded scan
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _seed_fifo_scan(load, params, quickscale):
+    """The seed repo's simulate kernel, verbatim, as the parity oracle."""
+    max_rps, usd_hr, base_lat = params
+    cap_h = max_rps * 3600.0
+
+    def hour(queue, arrive):
+        if quickscale:
+            instances = jnp.maximum(
+                jnp.ceil(arrive / jnp.maximum(cap_h, 1e-9)), 1.0)
+            processed = arrive
+            new_q = queue * 0.0
+            latency = base_lat
+            cost = usd_hr * instances
+        else:
+            avail = queue + arrive
+            processed = jnp.minimum(avail, cap_h)
+            new_q = avail - processed
+            avg_q = 0.5 * (queue + new_q)
+            latency = base_lat + avg_q / jnp.maximum(max_rps, 1e-9)
+            cost = usd_hr
+        return new_q, (processed, new_q, latency, cost)
+
+    q_end, outs = jax.lax.scan(hour, jnp.zeros(()), load)
+    return (q_end,) + outs
+
+
+@pytest.mark.parametrize("twin,quick", [
+    (SimpleTwin("block", 1.9512, 0.0082, 0.15), False),
+    (SimpleTwin("cpu-lim", 0.6612, 0.0027, 0.29), False),
+    (QuickscalingTwin("q", 1.9512, 0.0082, 0.15), True),
+])
+def test_legacy_twins_bit_identical_to_seed_scan(twin, quick):
+    load32 = jnp.asarray(LOADS, jnp.float32)
+    params = jnp.array([twin.max_rps, twin.usd_per_hour,
+                        twin.base_latency_s], jnp.float32)
+    q_end, proc, queue, lat, cost = _seed_fifo_scan(load32, params, quick)
+    sim = simulate_year(twin, LOADS)
+    assert np.array_equal(np.asarray(proc, np.float64), sim.processed)
+    assert np.array_equal(np.asarray(queue, np.float64), sim.queue)
+    assert np.array_equal(np.asarray(lat, np.float64), sim.latency_s)
+    assert np.array_equal(np.asarray(cost, np.float64), sim.cost_usd)
+    assert float(q_end) == sim.queue[-1]
+
+
+# ---------------------------------------------------------------------------
+# registry / Twin record
+# ---------------------------------------------------------------------------
+
+def test_builtin_policies_registered():
+    assert policy_names()[:5] == ["fifo", "quickscale", "autoscale", "shed",
+                                  "batch_window"]
+    for name in policy_names():
+        spec = policy_spec(name)
+        assert spec.param_names[:3] == ("max_rps", "usd_per_hour",
+                                        "base_latency_s")
+        assert len(spec.param_names) <= PARAM_DIM
+
+
+def test_legacy_aliases_build_twins():
+    tw = SimpleTwin("s", 2.0, 0.05, 0.1)
+    assert isinstance(tw, Twin) and tw.policy == "fifo"
+    assert (tw.max_rps, tw.usd_per_hour, tw.base_latency_s) == (2.0, 0.05, 0.1)
+    assert tw.kind == "simple"
+    qw = QuickscalingTwin("q", 2.0, 0.05, 0.1)
+    assert qw.policy == "quickscale" and qw.kind == "quickscaling"
+    rf = roofline_twin("r", step_seconds=0.5, records_per_step=8, chips=4)
+    assert rf.policy == "fifo" and rf.kind == "roofline"
+    assert rf.max_rps == 16.0 and rf.usd_per_hour == 4 * 1.20
+
+
+def test_make_twin_defaults_and_named_access():
+    tw = make_twin("a", "autoscale", max_rps=1.0, usd_per_hour=0.01,
+                   base_latency_s=0.1)
+    assert tw.param("min_instances") == 1.0
+    assert tw.param("max_instances") == 64.0
+    tw2 = tw.with_params(scale_up_hours=4.0)
+    assert tw2.param("scale_up_hours") == 4.0
+    assert tw2.param("max_rps") == 1.0
+    with pytest.raises(KeyError):
+        make_twin("a", "autoscale", max_rps=1.0, usd_per_hour=0.01,
+                  base_latency_s=0.1, bogus=1.0)
+    with pytest.raises(KeyError):
+        policy_spec("no-such-policy")
+    padded = tw.padded_params()
+    assert padded.shape == (PARAM_DIM,) and padded.dtype == np.float32
+
+
+# ---------------------------------------------------------------------------
+# conservation: processed + queued + dropped == arrived, per hour and total
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("twin", ALL_POLICY_TWINS,
+                         ids=[t.policy for t in ALL_POLICY_TWINS])
+def test_record_conservation(twin):
+    sim = simulate_year(twin, LOADS)
+    dq = np.diff(np.concatenate([[0.0], sim.queue]))
+    resid = np.abs(sim.processed + dq + sim.dropped - ARRIVED)
+    # hourly, to f32 roundoff of the largest quantity in flight
+    scale = max(ARRIVED.max(), sim.queue.max(), 1.0)
+    assert resid.max() <= 1e-5 * scale + 1e-2
+    # and cumulatively over the year
+    arrived = ARRIVED.sum()
+    total = sim.processed.sum() + sim.queue[-1] + sim.dropped.sum()
+    assert abs(total - arrived) / arrived < 1e-5
+
+
+def test_dropped_zero_for_unbounded_policies():
+    for twin in ALL_POLICY_TWINS:
+        if twin.policy == "shed":
+            continue
+        sim = simulate_year(twin, LOADS)
+        assert sim.dropped_records == 0.0
+        assert sim.dropped.shape == (HOURS_PER_YEAR,)
+
+
+# ---------------------------------------------------------------------------
+# shed: bounded queue, drops only under overload, drop-rate SLO
+# ---------------------------------------------------------------------------
+
+def test_shed_bounds_queue_and_drops_overflow():
+    cap_h = 1.0 * 3600.0
+    tw = make_twin("s", "shed", max_rps=1.0, usd_per_hour=0.01,
+                   base_latency_s=0.1, queue_cap_hours=2.0)
+    sim = simulate_year(tw, LOADS)
+    assert sim.queue.max() <= 2.0 * cap_h * (1 + 1e-6)
+    assert sim.dropped_records > 0          # this load overruns 1 rps
+    # a big enough pipeline never sheds
+    big = make_twin("big", "shed", max_rps=10.0, usd_per_hour=0.01,
+                    base_latency_s=0.1, queue_cap_hours=2.0)
+    assert simulate_year(big, LOADS).dropped_records == 0.0
+
+
+def test_drop_rate_slo():
+    slo = SLO.for_drop_rate(max_fraction=0.01, met_fraction=0.95)
+    small = make_twin("s", "shed", max_rps=0.5, usd_per_hour=0.01,
+                      base_latency_s=0.1, queue_cap_hours=1.0)
+    big = make_twin("b", "shed", max_rps=10.0, usd_per_hour=0.01,
+                    base_latency_s=0.1, queue_cap_hours=1.0)
+    assert simulate_year(small, LOADS, slo=slo).slo_met is False
+    assert simulate_year(big, LOADS, slo=slo).slo_met is True
+
+
+# ---------------------------------------------------------------------------
+# autoscale: delay tradeoff + quickscale equivalence at zero delay
+# ---------------------------------------------------------------------------
+
+def test_autoscale_delay_cost_latency_tradeoff():
+    """Slower scale-up -> fewer paid instance-hours but worse latency."""
+    clouds, lats = [], []
+    for d in [1.0, 2.0, 4.0, 8.0]:
+        tw = make_twin("a", "autoscale", max_rps=0.35, usd_per_hour=0.01,
+                       base_latency_s=0.1, min_instances=1,
+                       max_instances=32, scale_up_hours=d)
+        sim = simulate_year(tw, LOADS)
+        clouds.append(sim.cost_usd.sum())
+        lats.append(sim.mean_latency_s)
+    assert all(a >= b for a, b in zip(clouds, clouds[1:])), clouds
+    assert all(a <= b for a, b in zip(lats, lats[1:])), lats
+
+
+def test_autoscale_instant_unbounded_matches_quickscale_cost():
+    a = make_twin("a", "autoscale", max_rps=0.35, usd_per_hour=0.01,
+                  base_latency_s=0.1, min_instances=1, max_instances=1e6,
+                  scale_up_hours=1.0)
+    sa = simulate_year(a, LOADS)
+    sq = simulate_year(QuickscalingTwin("q", 0.35, 0.01, 0.1), LOADS)
+    assert sa.queue.max() == 0.0
+    assert np.isclose(sa.total_cost_usd, sq.total_cost_usd, rtol=1e-9)
+
+
+def test_autoscale_min_instances_floor_cost():
+    lo = make_twin("lo", "autoscale", max_rps=1.0, usd_per_hour=0.01,
+                   base_latency_s=0.1, min_instances=1, max_instances=16)
+    hi = lo.with_params(min_instances=4)
+    s_lo, s_hi = simulate_year(lo, LOADS), simulate_year(hi, LOADS)
+    assert s_hi.cost_usd.min() >= 4 * 0.01 - 1e-9
+    assert s_hi.total_cost_usd >= s_lo.total_cost_usd
+    assert s_hi.mean_latency_s <= s_lo.mean_latency_s + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# batch_window: latency/cost tradeoff
+# ---------------------------------------------------------------------------
+
+def test_batch_window_latency_grows_cost_amortised():
+    sims = []
+    for w in [1.0, 4.0, 12.0]:
+        tw = make_twin("b", "batch_window", max_rps=4.0, usd_per_hour=0.01,
+                       base_latency_s=0.1, window_hours=w,
+                       idle_cost_fraction=0.1)
+        sims.append(simulate_year(tw, LOADS))
+    lats = [s.mean_latency_s for s in sims]
+    assert lats[0] < lats[1] < lats[2]
+    # every record still gets processed across flushes
+    for s in sims:
+        assert s.processed.sum() + s.queue[-1] == pytest.approx(
+            ARRIVED.sum(), rel=1e-5)
+    # pay-per-use + keep-warm stays below the always-on fifo bill
+    fifo = simulate_year(SimpleTwin("f", 4.0, 0.01, 0.1), LOADS)
+    assert sims[1].total_cost_usd < fifo.total_cost_usd
+
+
+# ---------------------------------------------------------------------------
+# the vmapped grid: one trace, same numbers as batch-of-one
+# ---------------------------------------------------------------------------
+
+def test_run_grid_single_trace_all_policies():
+    traffics = [TrafficModel.honda_default("nom"),
+                TrafficModel.honda_default("high", G=1.5)]
+    _grid_scan.clear_cache()
+    sims = run_grid(ALL_POLICY_TWINS, traffics,
+                    slo=SLO(limit_s=4 * 3600, met_fraction=0.95))
+    assert len(sims) == len(ALL_POLICY_TWINS) * 2
+    # the whole mixed-policy grid compiled exactly once
+    assert _grid_scan._cache_size() == 1
+    rows = table2_rows(sims)
+    assert {r["run"] for r in rows} == {f"{tr} {tw.name}"
+                                        for tr in ("nom", "high")
+                                        for tw in ALL_POLICY_TWINS}
+    for r in rows:
+        assert np.isfinite(r["cost_usd"])
+
+
+def test_grid_matches_batch_of_one():
+    traffics = [TrafficModel.honda_default("nom"),
+                TrafficModel.honda_default("high", G=1.5)]
+    sims = run_grid(ALL_POLICY_TWINS, traffics)
+    k = 0
+    for tr in traffics:
+        loads = tr.hourly_loads()
+        for tw in ALL_POLICY_TWINS:
+            solo = simulate_year(tw, loads)
+            assert np.array_equal(solo.processed, sims[k].processed)
+            assert np.array_equal(solo.cost_usd, sims[k].cost_usd)
+            assert np.array_equal(solo.dropped, sims[k].dropped)
+            k += 1
+
+
+def test_register_policy_extends_and_overrides():
+    import repro.core.twin as T
+
+    saved_registry = dict(T._REGISTRY)
+    saved_version = T._VERSION
+    try:
+        @T.register_policy("null", ("max_rps", "usd_per_hour",
+                                    "base_latency_s"))
+        def _null_step(carry, arrive, p):
+            """Processes nothing, pays nothing."""
+            z = jnp.zeros(())
+            return carry, (z, carry[0], p[2], z, z)
+
+        tw = make_twin("n", "null", max_rps=1.0, usd_per_hour=0.01,
+                       base_latency_s=0.1)
+        sim = simulate_year(tw, LOADS)      # new branch reached via switch
+        assert sim.processed.sum() == 0.0 and sim.cost_usd.sum() == 0.0
+
+        # overriding keeps the switch index, so other policies still
+        # dispatch to their own branch slots
+        old_index = policy_spec("shed").index
+
+        @T.register_policy("shed", ("max_rps", "usd_per_hour",
+                                    "base_latency_s", "queue_cap_hours"),
+                           defaults={"queue_cap_hours": 4.0})
+        def _shed_v2(carry, arrive, p):
+            """Drops everything immediately."""
+            z = jnp.zeros(())
+            return carry, (z, carry[0], p[2], p[1], arrive)
+
+        assert policy_spec("shed").index == old_index
+        batch = make_twin("b", "batch_window", max_rps=4.0,
+                          usd_per_hour=0.01, base_latency_s=0.1)
+        assert simulate_year(batch, LOADS).dropped_records == 0.0
+        shed = make_twin("s", "shed", max_rps=1.0, usd_per_hour=0.01,
+                         base_latency_s=0.1)
+        sim = simulate_year(shed, LOADS)
+        assert sim.dropped_records == pytest.approx(ARRIVED.sum(), rel=1e-6)
+    finally:
+        T._REGISTRY.clear()
+        T._REGISTRY.update(saved_registry)
+        T._VERSION = saved_version
+        # drop traces that captured the overridden branch table — later
+        # registrations would otherwise reuse them at a colliding version
+        _grid_scan.clear_cache()
+
+
+def test_fit_twin_policies(tmp_path):
+    class R:  # minimal ExperimentResult stand-in
+        pipeline_name = "p"
+        sustained_rps = 3.0
+        cost = {"usd_per_hour": 0.5}
+        base_latency_s = 0.2
+
+    tw = fit_twin(R(), "autoscale", max_instances=8)
+    assert tw.policy == "autoscale" and tw.max_rps == 3.0
+    assert tw.param("max_instances") == 8.0
+    assert fit_twin(R(), "fifo").policy == "fifo"

@@ -3,6 +3,8 @@ import time
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.datagen import DataGenerator
