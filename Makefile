@@ -1,14 +1,16 @@
 # Convenience targets for the tier-1 verify and the benchmark harness.
 #
-#   make test          tier-1 test suite (ROADMAP.md's verify command)
-#   make test-deps     install the test requirements
-#   make bench         full benchmark harness (all paper tables + grid)
-#   make bench-grid    looped-vs-vmapped what-if grid microbenchmark only
+#   make test            tier-1 test suite (ROADMAP.md's verify command)
+#   make test-deps       install the test requirements
+#   make bench           full benchmark harness (all paper tables + grid)
+#   make bench-grid      looped-vs-vmapped what-if grid microbenchmark only
+#   make calibrate-bench multi-start twin-fit wall-clock vs K
+#                        (writes BENCH_calibrate.json)
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-deps bench bench-grid
+.PHONY: test test-deps bench bench-grid calibrate-bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -21,3 +23,6 @@ bench:
 
 bench-grid:
 	$(PYTHON) benchmarks/grid_bench.py
+
+calibrate-bench:
+	$(PYTHON) -m benchmarks.run calibrate

@@ -1,0 +1,84 @@
+"""Multi-start calibration benchmark: fit wall-clock vs restart count K.
+
+The K restarts of a fit run as ONE vmapped grad-of-scan dispatch, so
+wall-clock should grow far slower than K (the vmap amortizes dispatch
+and the scan dominates). This measures a shed-policy fit on a 72-bin
+ramp trace across K, emits the harness CSV rows, and writes the records
+to ``BENCH_calibrate.json`` so the perf trajectory has data points.
+
+  PYTHONPATH=src python benchmarks/calibrate_bench.py
+  PYTHONPATH=src python -m benchmarks.run calibrate
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+
+from repro.calibrate import ObservedTrace, fit
+from repro.core.loadpattern import LoadPattern
+from repro.core.twin import make_twin
+
+RESTARTS = (1, 8, 32, 64)
+STEPS = 200
+REPEATS = 3
+OUT_JSON = os.environ.get("BENCH_CALIBRATE_JSON", "BENCH_calibrate.json")
+
+
+def _trace() -> ObservedTrace:
+    truth = make_twin("truth", "shed", max_rps=2.0, usd_per_hour=0.05,
+                      base_latency_s=0.2, queue_cap_hours=1.5)
+    ramp = LoadPattern.ramp("ramp", duration_s=6 * 3600, peak_rate=6.0)
+    return ObservedTrace.from_loadpattern(ramp, truth, bin_s=300.0)
+
+
+def bench() -> Dict:
+    trace = _trace()
+    records = []
+    for k in RESTARTS:
+        # compile once outside the timed region (the jit cache is keyed on
+        # the [K, PARAM_DIM] shape, so each K compiles its own program)
+        fit(trace, "shed", restarts=k, steps=STEPS, seed=0)
+        times = []
+        for rep in range(REPEATS):
+            t0 = time.perf_counter()
+            res = fit(trace, "shed", restarts=k, steps=STEPS, seed=rep)
+            times.append(time.perf_counter() - t0)
+        records.append({"restarts": k, "steps": STEPS,
+                        "bins": trace.num_bins,
+                        "best_loss": float(res.loss),
+                        "fit_ms": round(min(times) * 1e3, 3)})
+    base = records[0]["fit_ms"]
+    return {
+        "device": jax.devices()[0].platform,
+        "records": records,
+        "ms_per_restart_at_max_k": round(records[-1]["fit_ms"]
+                                         / records[-1]["restarts"], 3),
+        "scaling_vs_serial": round(
+            (records[-1]["restarts"] * base) / records[-1]["fit_ms"], 2),
+    }
+
+
+def main() -> List[str]:
+    r = bench()
+    with open(OUT_JSON, "w") as f:
+        json.dump(r, f, indent=2, sort_keys=True)
+    lines = []
+    for rec in r["records"]:
+        lines.append(f"calibrate/fit_k{rec['restarts']},"
+                     f"{rec['fit_ms'] * 1e3:.0f},"
+                     f"steps={rec['steps']};bins={rec['bins']}")
+    lines.append(f"calibrate/vmap_scaling,"
+                 f"{r['ms_per_restart_at_max_k'] * 1e3:.0f},"
+                 f"x{r['scaling_vs_serial']}-vs-serial;json={OUT_JSON}")
+    return lines
+
+
+if __name__ == "__main__":
+    result = bench()
+    with open(OUT_JSON, "w") as fh:
+        json.dump(result, fh, indent=2, sort_keys=True)
+    print(json.dumps(result, indent=2, sort_keys=True))

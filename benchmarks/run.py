@@ -6,8 +6,9 @@
 
 Tables map to the paper: table1 (twin parameters), table2 (year
 simulations), table3 (engineering comparison), table4 (retention costs),
-plus the roofline table over the assigned (arch x shape) grid and a core
-micro-benchmark of the wind-tunnel primitives.
+plus the roofline table over the assigned (arch x shape) grid, a core
+micro-benchmark of the wind-tunnel primitives, and the twin-calibration
+fit benchmark (which also writes BENCH_calibrate.json).
 """
 from __future__ import annotations
 
@@ -47,6 +48,8 @@ TABLES = {
                                  fromlist=["main"]).main(),
     "grid": lambda: __import__("benchmarks.grid_bench",
                                fromlist=["main"]).main(),
+    "calibrate": lambda: __import__("benchmarks.calibrate_bench",
+                                    fromlist=["main"]).main(),
     "roofline": lambda: __import__("benchmarks.roofline_bench",
                                    fromlist=["main"]).main(),
 }

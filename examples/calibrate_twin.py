@@ -1,0 +1,78 @@
+"""Twin calibration walkthrough: measure -> fit -> what-if grid.
+
+The paper eyeballs twin parameters off wind-tunnel charts; here the twin
+is *fit* by gradient descent through the simulation scan itself
+(repro.calibrate), so a measured pipeline flows straight into Table II:
+
+1. Ground-truth recovery: replay a ramp LoadPattern through a known twin
+   at 5-minute resolution, fit from random restarts (all K restarts run
+   as ONE vmapped dispatch), and check the parameters come back.
+2. Holdout validation: fit on the ramp trace, score on a steady trace the
+   optimizer never saw — the generalization number that says whether the
+   twin is a model or a memorization.
+3. Measure a real (in-process) telemetry pipeline in the wind tunnel and
+   send it through ``calibrated_grid``: experiment in, Table II out.
+
+Run:  PYTHONPATH=src python examples/calibrate_twin.py
+"""
+import tempfile
+
+from repro.calibrate import ObservedTrace, fit, fit_with_holdout
+from repro.core.experiment import Experiment
+from repro.core.loadpattern import LoadPattern
+from repro.core.report import render_table
+from repro.core.slo import SLO
+from repro.core.traffic import TrafficModel
+from repro.core.twin import make_twin
+from repro.core.whatif import calibrated_grid, table2_rows
+from repro.pipelines.telemetry import (make_telemetry_dataset,
+                                       make_telemetry_pipeline)
+
+# ---------------------------------------------------------------------------
+# 1. ground-truth recovery: can the fit find known parameters?
+# ---------------------------------------------------------------------------
+truth = make_twin("ground-truth", "shed", max_rps=2.0, usd_per_hour=0.05,
+                  base_latency_s=0.2, queue_cap_hours=1.5)
+ramp = LoadPattern.ramp("ramp-0-6rps", duration_s=6 * 3600, peak_rate=6.0)
+trace = ObservedTrace.from_loadpattern(ramp, truth, bin_s=300.0)
+
+result = fit(trace, "shed", restarts=8, steps=400, seed=0)
+rows = []
+for i, pname in enumerate(result.spec.param_names):
+    if result.spec.free_mask[i]:
+        rows.append({"param": pname, "truth": truth.padded_params()[i],
+                     "fitted": round(float(result.params[i]), 4)})
+print(render_table(rows, f"shed-policy recovery (loss {result.loss:.2e})"))
+print(render_table(result.restart_table(),
+                   "per-restart convergence (one vmapped dispatch)"))
+
+# ---------------------------------------------------------------------------
+# 2. holdout: fit on the ramp, validate on a steady pattern
+# ---------------------------------------------------------------------------
+steady = LoadPattern.steady("steady-3rps", duration_s=6 * 3600, rate=3.0)
+holdout = ObservedTrace.from_loadpattern(steady, truth, bin_s=300.0)
+hres = fit_with_holdout(trace, holdout, "shed", restarts=8, steps=400)
+print(f"train loss {hres.loss:.2e}  holdout loss {hres.holdout_loss:.2e}  "
+      f"generalization gap {hres.generalization_gap:.2f}x\n")
+
+# ---------------------------------------------------------------------------
+# 3. the full loop: wind-tunnel experiment -> calibrated twins -> Table II
+# ---------------------------------------------------------------------------
+pipe = make_telemetry_pipeline("blocking-write", blob_dir=tempfile.mkdtemp())
+dataset = make_telemetry_dataset(num_records=40, seed=0)
+load = LoadPattern.ramp("0->120rps", duration_s=3.0, peak_rate=120.0)
+measured = Experiment("calibrate-demo", pipe, load, dataset).run()
+print(f"measured: {measured.records_sent} records in "
+      f"{measured.duration_s:.1f}s, sustained {measured.sustained_rps:.1f} "
+      f"rec/s, ${measured.cost['usd_per_hour']:.4f}/hr")
+
+nominal = TrafficModel.honda_default("nominal", R=30.0, G=1.0)
+high = TrafficModel.honda_default("high(+50%)", R=30.0, G=1.5)
+slo = SLO(limit_s=4 * 3600, met_fraction=0.95)
+sims = calibrated_grid(measured, ["fifo", "quickscale"], [nominal, high],
+                       slo=slo, restarts=8, steps=300)
+print(render_table(table2_rows(sims),
+                   "Table II grid from gradient-calibrated twins"))
+print("the fifo twin's capacity/cost/latency were fit to the measured "
+      "trace by\ndifferentiating through the year-simulation scan — no "
+      "manual eyeballing.")

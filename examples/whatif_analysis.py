@@ -27,6 +27,11 @@ Registered twin policies (see repro/core/twin.py):
 Any new policy registered with ``register_policy`` joins ``run_grid``
 automatically — the grid kernel dispatches per scenario via lax.switch.
 
+The twins below are hand-entered from the paper's Table I; to *fit* a
+twin to a measured trace by gradient descent through the simulation scan
+(measure -> fit -> grid, with holdout validation), see
+``examples/calibrate_twin.py`` and ``repro.calibrate``.
+
 Run:  PYTHONPATH=src python examples/whatif_analysis.py
 """
 from repro.core.cost import CostModel

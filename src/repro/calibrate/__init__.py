@@ -1,0 +1,23 @@
+"""Differentiable twin calibration: fit digital twins to measured traces.
+
+Closes the paper's measure -> model -> simulate loop (Secs. V-F/V-G):
+``ObservedTrace`` packages what a wind-tunnel experiment measured,
+``fit`` recovers any registered TwinPolicy's parameter vector from it by
+differentiating through the simulation scan (all restarts in one vmapped
+dispatch), and ``calibrated_twin`` hands the result straight to the
+what-if grids.
+"""
+from repro.calibrate.fit import (DEFAULT_FIT_OPT, FitResult, calibrated_twin,
+                                 evaluate, fit, fit_with_holdout)
+from repro.calibrate.objective import (DEFAULT_WEIGHTS, FitSpec, fit_spec,
+                                       params_from_z, series_loss,
+                                       trace_loss, twin_from_z,
+                                       z_from_params)
+from repro.calibrate.trace import ObservedTrace, SERIES_KEYS, bin_loadpattern
+
+__all__ = [
+    "DEFAULT_FIT_OPT", "DEFAULT_WEIGHTS", "FitResult", "FitSpec",
+    "ObservedTrace", "SERIES_KEYS", "bin_loadpattern", "calibrated_twin",
+    "evaluate", "fit", "fit_spec", "fit_with_holdout", "params_from_z",
+    "series_loss", "trace_loss", "twin_from_z", "z_from_params",
+]

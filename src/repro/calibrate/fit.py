@@ -1,0 +1,258 @@
+"""Multi-start gradient calibration of digital twins.
+
+``fit`` matches a registered TwinPolicy's parameter vector to an
+``ObservedTrace`` by differentiating through the simulation scan. All K
+random restarts run as ONE vmapped dispatch: the jitted ``_fit_kernel``
+takes the [K, PARAM_DIM] stack of unconstrained starts and runs
+
+    lax.scan over steps of  vmap(grad(loss-of-scan))  +  vmap(AdamW)
+
+so a 32-restart fit costs one compile and one device program, the same
+grid trick ``core.simulate`` plays for what-if scenarios (PR 1). The
+optimizer is the existing ``repro.optim`` AdamW (warmup + cosine, global
+-norm clip), vmapped so each restart clips and schedules independently.
+
+The public surface:
+
+* ``fit(trace, policy, ...) -> FitResult`` — best twin + per-start
+  convergence table + loss history.
+* ``fit_with_holdout(train, holdout, ...)`` — fit on one trace (say a
+  ramp pattern), score the fitted twin on another (steady), report the
+  generalization gap.
+* ``calibrated_twin(result, policy=...) -> Twin`` — the measure -> fit
+  entry point: an ``ExperimentResult`` (or a prebuilt trace) straight to
+  a simulation-ready Twin for Table II grids.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import warnings
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.calibrate.objective import (DEFAULT_WEIGHTS, FitSpec, fit_spec,
+                                       params_from_z, series_loss,
+                                       trace_loss, twin_from_z, z_from_params)
+from repro.calibrate.trace import ObservedTrace, SERIES_KEYS
+from repro.config import OptimizerConfig
+from repro.core.twin import (PARAM_DIM, Twin, fit_twin, policy_spec,
+                             registry_version)
+from repro.optim.adamw import adamw_update, init_opt_state
+
+#: AdamW settings tuned for the z-space objective: no weight decay (z=0 is
+#: mid-box, not a prior), generous clip, short warmup; total_steps is
+#: overwritten with the fit's step count so the cosine tail anneals the
+#: last iterations for tight parameter recovery.
+DEFAULT_FIT_OPT = OptimizerConfig(lr=0.08, betas=(0.9, 0.95), eps=1e-8,
+                                  weight_decay=0.0, grad_clip=10.0,
+                                  warmup_steps=25, total_steps=400)
+
+
+@dataclass
+class FitResult:
+    """Best fit plus the evidence: per-start convergence + loss history."""
+    twin: Twin
+    policy: str
+    loss: float
+    params: np.ndarray            # [PARAM_DIM] best-fit full vector
+    spec: FitSpec
+    best_start: int
+    start_losses: np.ndarray      # [K] final loss per restart
+    start_params: np.ndarray      # [K, PARAM_DIM] fitted params per restart
+    loss_history: np.ndarray      # [steps, K]
+    trace_name: str
+    holdout_loss: Optional[float] = None
+    holdout_name: Optional[str] = None
+
+    @property
+    def generalization_gap(self) -> Optional[float]:
+        """holdout loss / train loss (1.0 = generalizes perfectly)."""
+        if self.holdout_loss is None:
+            return None
+        return float(self.holdout_loss / max(self.loss, 1e-12))
+
+    def restart_table(self) -> List[Dict]:
+        """Per-start convergence rows for report.render_table."""
+        first = self.loss_history[0] if len(self.loss_history) else \
+            self.start_losses
+        rows = []
+        for k in range(len(self.start_losses)):
+            row = {"start": k,
+                   "loss0": float(first[k]),
+                   "loss": float(self.start_losses[k]),
+                   "converged": bool(self.start_losses[k]
+                                     <= 2.0 * self.loss + 1e-9),
+                   "best": k == self.best_start}
+            for i, pname in enumerate(self.spec.param_names):
+                if self.spec.free_mask[i]:
+                    row[pname] = round(float(self.start_params[k, i]), 6)
+            rows.append(row)
+        return rows
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
+def _fit_kernel(steps: int, dt_hours: float, version: int,
+                ocfg: OptimizerConfig, z0, arrivals, targets, scales,
+                weights, lo, hi, log_mask, free_mask, fixed, policy_index):
+    """K restarts, one dispatch: scan(vmap(grad(loss)) + vmap(AdamW)).
+
+    ``steps``/``dt_hours``/``ocfg`` are static; ``version`` is the policy
+    registry version so late registrations retrace (same contract as the
+    grid kernel). Returns (z_final [K,D], final_loss [K], history [steps,K]).
+    """
+    def loss_one(z):
+        return trace_loss(z, arrivals, targets, scales, weights,
+                          policy_index, dt_hours, lo, hi, log_mask,
+                          free_mask, fixed)
+
+    vgrad = jax.vmap(jax.value_and_grad(loss_one))
+    opt0 = jax.vmap(lambda z: init_opt_state({"z": z}, ocfg))(z0)
+
+    def one_step(carry, _):
+        z, opt = carry
+        loss, g = vgrad(z)
+
+        def upd(zk, gk, ok):
+            new_p, new_o = adamw_update({"z": zk}, {"z": gk}, ok, ocfg)
+            return new_p["z"], new_o
+
+        z2, opt2 = jax.vmap(upd)(z, g, opt)
+        return (z2, opt2), loss
+
+    (z_fin, _), history = jax.lax.scan(one_step, (z0, opt0), None,
+                                       length=steps)
+    final_loss = jax.vmap(loss_one)(z_fin)
+    return z_fin, final_loss, history
+
+
+def _as_operands(trace: ObservedTrace, weights: Optional[Dict[str, float]]):
+    arrivals = jnp.asarray(np.asarray(trace.arrivals, np.float32))
+    targets = {k: jnp.asarray(np.asarray(v, np.float32))
+               for k, v in trace.series().items()}
+    scales = {k: jnp.float32(v) for k, v in trace.scales().items()}
+    w = dict(DEFAULT_WEIGHTS)
+    w.update(weights or {})
+    w_j = {k: jnp.float32(w[k]) for k in SERIES_KEYS}
+    return arrivals, targets, scales, w_j
+
+
+def fit(trace: ObservedTrace, policy: str = "fifo", *,
+        restarts: int = 16, steps: int = 400, seed: int = 0,
+        init: Optional[Twin] = None,
+        freeze: Sequence[str] = (), unfreeze: Sequence[str] = (),
+        fixed_values: Optional[Dict[str, float]] = None,
+        weights: Optional[Dict[str, float]] = None,
+        opt: Optional[OptimizerConfig] = None,
+        name: Optional[str] = None) -> FitResult:
+    """Fit ``policy``'s parameter vector to ``trace`` by gradient descent
+    through the simulation scan, from ``restarts`` random starts at once.
+
+    Start 0 is deterministic: the ``init`` twin's parameters if given,
+    else the middle of every parameter box; the rest are Gaussian in
+    z-space (i.e. spread across the boxes through the sigmoid bijection).
+    """
+    spec = fit_spec(policy, freeze=freeze, unfreeze=unfreeze,
+                    fixed_values=fixed_values, init=init)
+    arrivals, targets, scales, w = _as_operands(trace, weights)
+
+    rng = np.random.default_rng(seed)
+    z0 = rng.normal(0.0, 1.5, (restarts, PARAM_DIM)).astype(np.float32)
+    if init is not None:
+        ip = init.padded_params()
+        outside = [n for i, n in enumerate(spec.param_names)
+                   if spec.free_mask[i]
+                   and not spec.lo[i] <= ip[i] <= spec.hi[i]]
+        if outside:
+            warnings.warn(
+                f"{policy} warm start lies outside the calibration bounds "
+                f"for {outside} — the sigmoid bijection cannot reach it; "
+                f"widen the policy's bounds (register_policy(bounds=...)) "
+                f"or freeze those params", stacklevel=2)
+        z0[0] = z_from_params(ip, spec.lo, spec.hi, spec.log_mask)
+    else:
+        z0[0] = 0.0          # mid-box start
+
+    ocfg = dataclasses.replace(opt or DEFAULT_FIT_OPT, total_steps=steps)
+    z_fin, final_loss, history = _fit_kernel(
+        int(steps), float(trace.bin_hours), registry_version(), ocfg,
+        jnp.asarray(z0), arrivals, targets, scales, w,
+        jnp.asarray(spec.lo), jnp.asarray(spec.hi),
+        jnp.asarray(spec.log_mask), jnp.asarray(spec.free_mask),
+        jnp.asarray(spec.fixed), jnp.int32(policy_spec(policy).index))
+
+    z_fin = np.asarray(z_fin)
+    final_loss = np.asarray(final_loss, np.float64)
+    best = int(np.nanargmin(final_loss))
+    start_params = np.stack([
+        np.asarray(params_from_z(jnp.asarray(z_fin[k]), spec.lo, spec.hi,
+                                 spec.log_mask, spec.free_mask, spec.fixed))
+        for k in range(restarts)])
+    pinned = [n for i, n in enumerate(spec.param_names)
+              if spec.free_mask[i] and np.isfinite(spec.hi[i])
+              and abs(z_fin[best, i]) > 7.0]    # sigmoid(7) ~ 0.999
+    if pinned:
+        warnings.warn(
+            f"{policy} fit pinned {pinned} at the edge of the calibration "
+            f"bounds — the measured pipeline likely lies outside the box; "
+            f"widen the policy's bounds (register_policy(bounds=...)) or "
+            f"treat the fit as a lower/upper bound", stacklevel=2)
+    twin = twin_from_z(z_fin[best], spec,
+                       name or f"{trace.name}-{policy}-cal")
+    return FitResult(twin=twin, policy=policy,
+                     loss=float(final_loss[best]),
+                     params=start_params[best], spec=spec, best_start=best,
+                     start_losses=final_loss, start_params=start_params,
+                     loss_history=np.asarray(history, np.float64),
+                     trace_name=trace.name)
+
+
+def evaluate(twin: Twin, trace: ObservedTrace,
+             weights: Optional[Dict[str, float]] = None) -> float:
+    """Score an existing twin against a trace with the calibration loss
+    (no fitting) — the holdout metric."""
+    arrivals, targets, scales, w = _as_operands(trace, weights)
+    loss = series_loss(jnp.asarray(twin.padded_params()), arrivals, targets,
+                       scales, w, jnp.int32(twin.policy_index),
+                       float(trace.bin_hours))
+    return float(loss)
+
+
+def fit_with_holdout(train: ObservedTrace, holdout: ObservedTrace,
+                     policy: str = "fifo", **fit_kwargs) -> FitResult:
+    """Fit on one trace, validate on another (the measure-on-ramp /
+    validate-on-steady workflow): the returned FitResult carries the
+    holdout loss and the generalization gap."""
+    result = fit(train, policy, **fit_kwargs)
+    result.holdout_loss = evaluate(
+        result.twin, holdout, weights=fit_kwargs.get("weights"))
+    result.holdout_name = holdout.name
+    return result
+
+
+def calibrated_twin(source: Union[ObservedTrace, "ExperimentResult"],
+                    policy: str = "fifo", *, bin_s: float = 1.0,
+                    name: Optional[str] = None,
+                    **fit_kwargs) -> Twin:
+    """Measured pipeline -> simulation-ready Twin, in one call.
+
+    ``source`` is an ``ExperimentResult`` (binned into a trace at
+    ``bin_s``-second resolution, with the paper's closed-form fit as the
+    warm start) or a prebuilt ``ObservedTrace``. Extra kwargs forward to
+    ``fit``. Use ``fit()`` directly when you want the convergence table.
+    """
+    if isinstance(source, ObservedTrace):
+        trace = source
+    else:
+        trace = ObservedTrace.from_experiment(source, bin_s=bin_s)
+        if "init" not in fit_kwargs:
+            try:
+                fit_kwargs["init"] = fit_twin(source, policy)
+            except (KeyError, AttributeError):
+                fit_kwargs["init"] = None
+    result = fit(trace, policy, name=name, **fit_kwargs)
+    return result.twin

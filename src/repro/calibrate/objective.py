@@ -1,0 +1,206 @@
+"""Calibration objective: bounded reparameterization + multi-series loss.
+
+The fit never optimizes twin parameters directly — it optimizes an
+unconstrained vector ``z`` mapped onto each policy's declared parameter
+box (``PolicySpec.bounds``) by a smooth bijection:
+
+* finite box, linear param:   p = lo + (hi - lo) * sigmoid(z)
+* finite box, log-scale param: p = exp(log lo + (log hi - log lo) * sigmoid(z))
+  (scale parameters like max_rps span decades; fitting their exponent
+  conditions the problem)
+* half-open box (hi = inf):    p = lo + softplus(z)
+
+Frozen parameters (``PolicySpec.frozen`` plus anything the caller freezes)
+and the zero-padding slots of the flat vector bypass ``z`` entirely and
+take fixed values, so the gradient never touches them.
+
+``trace_loss`` plays the candidate parameters through the *same*
+``lax.scan`` the what-if simulator uses (``core.simulate.scan_trace``)
+and scores the simulated throughput / latency / drop / cost series
+against an ``ObservedTrace`` with a weighted, per-series-normalized MSE.
+Everything here is pure JAX: ``repro.calibrate.fit`` wraps it in
+``vmap(grad(...))`` and jits once for all restarts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.calibrate.trace import SERIES_KEYS
+from repro.core.simulate import scan_trace
+from repro.core.twin import PARAM_DIM, Twin, policy_spec
+
+#: default loss mix: throughput and latency curves carry most signal; the
+#: drop curve pins bounded-queue policies; cost identifies $/hr parameters
+DEFAULT_WEIGHTS: Dict[str, float] = {
+    "processed": 1.0, "latency": 1.0, "dropped": 1.0, "cost": 1.0,
+}
+
+
+@dataclass(frozen=True)
+class FitSpec:
+    """Per-policy fit layout: which PARAM_DIM slots are free, their boxes,
+    their transform, and the fixed values of everything else."""
+    policy: str
+    param_names: Tuple[str, ...]
+    lo: np.ndarray          # [PARAM_DIM] f32
+    hi: np.ndarray          # [PARAM_DIM] f32 (may be +inf -> softplus)
+    log_mask: np.ndarray    # [PARAM_DIM] bool — fit exponent, not value
+    free_mask: np.ndarray   # [PARAM_DIM] bool — optimized slots
+    fixed: np.ndarray       # [PARAM_DIM] f32 — value wherever not free
+
+    @property
+    def free_names(self) -> Tuple[str, ...]:
+        return tuple(n for i, n in enumerate(self.param_names)
+                     if self.free_mask[i])
+
+
+def fit_spec(policy: str, freeze: Sequence[str] = (),
+             unfreeze: Sequence[str] = (),
+             fixed_values: Optional[Dict[str, float]] = None,
+             init: Optional[Twin] = None) -> FitSpec:
+    """Build the fit layout for ``policy`` from the registry metadata.
+
+    ``freeze``/``unfreeze`` adjust the policy's default frozen set; fixed
+    values come from ``fixed_values``, then the ``init`` twin, then the
+    registered defaults — a frozen parameter with none of the three is an
+    error.
+    """
+    spec = policy_spec(policy)
+    names = spec.param_names
+    frozen = (set(spec.frozen) | set(freeze)) - set(unfreeze)
+    unknown = (set(freeze) | set(unfreeze)) - set(names)
+    if unknown:
+        raise KeyError(f"{policy} has no params {sorted(unknown)}")
+
+    values: Dict[str, float] = dict(spec.defaults)
+    if init is not None:
+        if init.policy != policy:
+            raise ValueError(f"init twin is {init.policy!r}, want {policy!r}")
+        values.update(zip(names, init.padded_params()))
+    values.update(fixed_values or {})
+
+    lo = np.zeros(PARAM_DIM, np.float32)
+    hi = np.ones(PARAM_DIM, np.float32)
+    log_mask = np.zeros(PARAM_DIM, bool)
+    free_mask = np.zeros(PARAM_DIM, bool)
+    fixed = np.zeros(PARAM_DIM, np.float32)
+    for i, pname in enumerate(names):
+        b_lo, b_hi = spec.bound(pname)
+        lo[i], hi[i] = b_lo, b_hi
+        log_mask[i] = pname in spec.log_params
+        if pname in frozen:
+            if pname not in values:
+                raise KeyError(f"frozen param {pname!r} needs a value "
+                               f"(fixed_values=, init=, or a default)")
+            fixed[i] = float(values[pname])
+        else:
+            free_mask[i] = True
+    return FitSpec(policy=policy, param_names=names, lo=lo, hi=hi,
+                   log_mask=log_mask, free_mask=free_mask, fixed=fixed)
+
+
+# ---------------------------------------------------------------------------
+# the z <-> params bijection
+# ---------------------------------------------------------------------------
+
+def params_from_z(z, lo, hi, log_mask, free_mask, fixed):
+    """Map unconstrained ``z`` [PARAM_DIM] onto the parameter box."""
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+    finite = jnp.isfinite(hi)
+    lo_pos = jnp.maximum(lo, 1e-12)          # log path needs lo > 0
+    hi_safe = jnp.where(finite, hi, lo_pos * 2.0)   # keep logs/NaNs out of
+    s = jax.nn.sigmoid(z)                           # the untaken branch
+    lin = lo + (hi_safe - lo) * s
+    logp = jnp.exp(jnp.log(lo_pos)
+                   + (jnp.log(jnp.maximum(hi_safe, lo_pos)) - jnp.log(lo_pos)) * s)
+    boxed = jnp.where(log_mask, logp, lin)
+    soft = lo + jax.nn.softplus(z)
+    p = jnp.where(finite, boxed, soft)
+    return jnp.where(free_mask, p, jnp.asarray(fixed, jnp.float32))
+
+
+def z_from_params(params, lo, hi, log_mask) -> np.ndarray:
+    """Inverse bijection (numpy): a warm-start z for a known twin."""
+    params = np.asarray(params, np.float64)
+    lo = np.asarray(lo, np.float64)
+    hi = np.asarray(hi, np.float64)
+    lo_pos = np.maximum(lo, 1e-12)
+    finite = np.isfinite(hi)
+    hi_safe = np.where(finite, hi, lo_pos * 2.0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        frac_lin = (params - lo) / np.maximum(hi_safe - lo, 1e-12)
+        frac_log = ((np.log(np.maximum(params, 1e-12)) - np.log(lo_pos))
+                    / np.maximum(np.log(np.maximum(hi_safe, lo_pos))
+                                 - np.log(lo_pos), 1e-12))
+    frac = np.clip(np.where(log_mask, frac_log, frac_lin), 1e-4, 1.0 - 1e-4)
+    z = np.log(frac / (1.0 - frac))
+    # softplus inverse for half-open boxes: z = log(exp(p - lo) - 1),
+    # which is ~identity past gap 30 (expm1 would overflow there)
+    gap = np.maximum(params - lo, 1e-6)
+    z_soft = np.where(gap > 30.0, gap,
+                      np.log(np.expm1(np.minimum(gap, 30.0))))
+    return np.where(finite, z, z_soft).astype(np.float32)
+
+
+def twin_from_z(z: np.ndarray, spec: FitSpec, name: str) -> Twin:
+    """Materialize the fitted Twin from an optimized z vector."""
+    p = np.asarray(params_from_z(jnp.asarray(z, jnp.float32), spec.lo,
+                                 spec.hi, spec.log_mask, spec.free_mask,
+                                 spec.fixed))
+    return Twin(name=name, policy=spec.policy, kind="calibrated",
+                params=tuple(float(v) for v in p[:len(spec.param_names)]))
+
+
+# ---------------------------------------------------------------------------
+# the loss
+# ---------------------------------------------------------------------------
+
+def series_loss(params_vec, arrivals, targets, scales, weights, policy_index,
+                dt_hours):
+    """Weighted MSE of log-ratio residuals, simulated vs observed, given a
+    concrete parameter vector (no reparameterization).
+
+    Residuals are multiplicative — ``log((sim + eps) / (obs + eps))`` —
+    because the series span decades within one trace (a 0.2 s service
+    latency next to hour-long queueing delays, near-zero ramp-up arrivals
+    next to peak load): a linear MSE would let the large-magnitude bins
+    swamp the small ones and lose e.g. ``base_latency_s`` entirely. The
+    floor ``eps`` is six decades below each series' magnitude, so exact
+    zeros (no drops, idle bins) stay well-defined without muting genuine
+    mismatches.
+
+    Flow series (processed / dropped / cost) are matched *cumulatively*:
+    bursty policies emit spikes (batch_window's flushes, quickscale's
+    per-bin instance counts) whose per-bin alignment is a step function
+    of the parameters — a plateaued, ungradientable landscape — while
+    the distance between cumulative staircases varies smoothly with
+    flush timing and capacity. The state series (latency) stays per-bin.
+    """
+    _, (proc, _queue, lat, cost, drop) = scan_trace(
+        arrivals, params_vec, policy_index, dt_hours)
+    sim = {"processed": proc, "latency": lat, "dropped": drop, "cost": cost}
+    total = jnp.zeros(())
+    for key in SERIES_KEYS:
+        s, t = sim[key], targets[key]
+        if key != "latency":            # flow series: match the running sum
+            s, t = jnp.cumsum(s), jnp.cumsum(t)
+            eps = t[-1] * 1e-6 + 1e-12
+        else:
+            eps = scales[key] * 1e-6 + 1e-12
+        r = jnp.log((s + eps) / (t + eps))
+        total = total + weights[key] * jnp.mean(r * r)
+    return total
+
+
+def trace_loss(z, arrivals, targets, scales, weights, policy_index, dt_hours,
+               lo, hi, log_mask, free_mask, fixed):
+    """The calibration objective: reparameterize, simulate, score."""
+    p = params_from_z(z, lo, hi, log_mask, free_mask, fixed)
+    return series_loss(p, arrivals, targets, scales, weights, policy_index,
+                       dt_hours)

@@ -1,0 +1,200 @@
+"""Observed pipeline traces — the measurement side of twin calibration.
+
+An ``ObservedTrace`` is what the fit in ``repro.calibrate.fit`` matches a
+simulated twin against: per-bin arrivals, processed records, end-to-end
+latency, dropped records and cost over a uniform time grid of
+``bin_hours``-wide bins. Three ways to build one:
+
+* ``ObservedTrace.from_experiment`` — from a wind-tunnel
+  ``ExperimentResult`` (paper Sec. V-F): arrivals come from the
+  ``records_sent`` counter the experiment records in virtual time,
+  completions from the final stage's spans, and per-record latency from
+  FIFO-matching the cumulative arrival and completion curves (completion
+  time of the k-th finished record minus arrival time of the k-th sent
+  record — queueing delay included, which per-stage service spans alone
+  would miss).
+* ``ObservedTrace.from_loadpattern`` — replay a ``LoadPattern`` through a
+  ground-truth twin at sub-hour resolution via the generalized simulation
+  scan (``core.simulate.scan_trace``). This is the synthetic-benchmark
+  path: simulate with known parameters, optionally ``with_noise``, then
+  check the fit recovers them.
+* ``ObservedTrace.from_simulation`` — same, from an arrivals array you
+  already have.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.loadpattern import LoadPattern
+
+#: the series a calibration loss may match, in canonical order
+SERIES_KEYS = ("processed", "latency", "dropped", "cost")
+
+
+def bin_loadpattern(pattern: LoadPattern, bin_s: float = 60.0) -> np.ndarray:
+    """Integrate a piecewise-linear LoadPattern into records-per-bin counts."""
+    total = pattern.total_duration
+    nbins = max(1, int(math.ceil(total / bin_s)))
+    edges = np.minimum(np.arange(nbins + 1) * bin_s, total)
+    return np.array([pattern.records_between(float(t0), float(t1))
+                     for t0, t1 in zip(edges[:-1], edges[1:])], np.float64)
+
+
+@dataclass(frozen=True)
+class ObservedTrace:
+    """Per-bin series measured (or synthesized) from a pipeline run."""
+    name: str
+    bin_hours: float
+    arrivals: np.ndarray       # records arriving per bin [T]
+    processed: np.ndarray      # records completed per bin [T]
+    latency_s: np.ndarray      # mean end-to-end latency of the bin [T]
+    dropped: np.ndarray        # records shed per bin [T]
+    cost_usd: np.ndarray       # cost accrued per bin [T]
+
+    def __post_init__(self):
+        T = len(self.arrivals)
+        for key in ("processed", "latency_s", "dropped", "cost_usd"):
+            arr = getattr(self, key)
+            if arr.shape != (T,):
+                raise ValueError(f"{key} has shape {arr.shape}, want ({T},)")
+
+    @property
+    def num_bins(self) -> int:
+        return len(self.arrivals)
+
+    @property
+    def duration_hours(self) -> float:
+        return self.num_bins * self.bin_hours
+
+    def series(self) -> Dict[str, np.ndarray]:
+        """The fit targets keyed by SERIES_KEYS."""
+        return {"processed": self.processed, "latency": self.latency_s,
+                "dropped": self.dropped, "cost": self.cost_usd}
+
+    def scales(self) -> Dict[str, float]:
+        """Per-series normalization so the loss mixes unlike units: the
+        mean magnitude of the observed series, falling back to the arrival
+        scale (dropped) or 1.0 when a series is identically zero."""
+        arr_scale = float(np.mean(np.abs(self.arrivals))) or 1.0
+        out = {}
+        for key, vals in self.series().items():
+            s = float(np.mean(np.abs(vals)))
+            if s <= 0.0:
+                s = arr_scale if key == "dropped" else 1.0
+            out[key] = s
+        return out
+
+    def with_noise(self, frac: float, seed: int = 0) -> "ObservedTrace":
+        """Element-wise multiplicative Gaussian measurement noise on every
+        series (drop noise scales with arrivals so zero-drop bins still
+        jitter) — for fit-robustness tests."""
+        rng = np.random.default_rng(seed)
+
+        def jitter(x, rel_to=None):
+            scale = np.abs(x) if rel_to is None else np.mean(np.abs(rel_to))
+            return np.maximum(x + rng.normal(0.0, frac, x.shape) * scale, 0.0)
+
+        return replace(self,
+                       name=f"{self.name}+noise{frac:g}",
+                       processed=jitter(self.processed),
+                       latency_s=jitter(self.latency_s),
+                       dropped=jitter(self.dropped, rel_to=self.arrivals),
+                       cost_usd=jitter(self.cost_usd))
+
+    # -- constructors --------------------------------------------------------
+
+    @classmethod
+    def from_simulation(cls, twin, arrivals: np.ndarray, bin_hours: float,
+                        name: Optional[str] = None) -> "ObservedTrace":
+        """Ground-truth replay: run ``twin`` over ``arrivals`` (records per
+        bin) through the generalized scan and package the outputs."""
+        import jax.numpy as jnp
+
+        from repro.core.simulate import scan_trace
+
+        load = jnp.asarray(np.asarray(arrivals, np.float32))
+        _, (proc, _queue, lat, cost, drop) = scan_trace(
+            load, jnp.asarray(twin.padded_params()), twin.policy_index,
+            float(bin_hours))
+        return cls(name=name or f"{twin.name}-replay",
+                   bin_hours=float(bin_hours),
+                   arrivals=np.asarray(arrivals, np.float64),
+                   processed=np.asarray(proc, np.float64),
+                   latency_s=np.asarray(lat, np.float64),
+                   dropped=np.asarray(drop, np.float64),
+                   cost_usd=np.asarray(cost, np.float64))
+
+    @classmethod
+    def from_loadpattern(cls, pattern: LoadPattern, twin,
+                         bin_s: float = 60.0,
+                         name: Optional[str] = None) -> "ObservedTrace":
+        """Replay a LoadPattern through a ground-truth twin at sub-hour
+        resolution (the paper's ramp/steady patterns become fit traces)."""
+        arrivals = bin_loadpattern(pattern, bin_s)
+        return cls.from_simulation(twin, arrivals, bin_s / 3600.0,
+                                   name=name or f"{pattern.name}-replay")
+
+    @classmethod
+    def from_experiment(cls, result, bin_s: float = 1.0,
+                        stage: Optional[str] = None) -> "ObservedTrace":
+        """Bin a measured ``ExperimentResult`` into a calibration trace.
+
+        Times are virtual (undilated) seconds from experiment start, so
+        ``time_scale``-accelerated test runs calibrate the same as real
+        ones. ``stage`` selects which stage's completions count as
+        "processed" (default: the last stage observed).
+        """
+        ts = getattr(result, "time_scale", 1.0)
+        dur = max(result.duration_s, bin_s)
+        nbins = max(1, int(math.ceil(dur / bin_s)))
+        edges = np.arange(nbins + 1) * bin_s
+
+        # arrivals: the cumulative records_sent counter, virtual-time stamped
+        sent = result.metrics.series("records_sent")
+        if sent:
+            t = np.array([s.t for s in sent])
+            v = np.array([s.value for s in sent])
+            cum_arr = np.interp(edges, t, v, left=0.0, right=v[-1])
+        else:   # pre-calibration results: spread the total uniformly
+            cum_arr = np.linspace(0.0, result.records_sent, nbins + 1)
+        arrivals = np.diff(cum_arr)
+
+        # completions: spans of the final stage, converted to virtual time
+        stage = stage or (list(result.stage_summary)[-1]
+                          if result.stage_summary else None)
+        spans = sorted(result.collector.spans(stage),
+                       key=lambda s: s.end) if stage else []
+        ends = np.array([(s.end - result.started) * ts for s in spans])
+        recs = np.array([float(s.records) for s in spans])
+        processed = np.zeros(nbins)
+        latency = np.zeros(nbins)
+        if len(spans):
+            which = np.clip(np.searchsorted(edges, ends, side="right") - 1,
+                            0, nbins - 1)
+            np.add.at(processed, which, recs)
+            # FIFO matching: the k-th completed record arrived at the time
+            # the cumulative arrival curve crossed k, so its latency is the
+            # span end minus that crossing — queueing delay included
+            done_before = np.concatenate([[0.0], np.cumsum(recs)[:-1]])
+            mid = done_before + 0.5 * recs
+            t_arrive = np.interp(mid, cum_arr, edges)
+            lat_span = np.maximum(ends - t_arrive, 0.0)
+            wsum = np.zeros(nbins)
+            np.add.at(wsum, which, recs)
+            np.add.at(latency, which, recs * lat_span)
+            seen = wsum > 0
+            latency[seen] /= wsum[seen]
+            if seen.any():
+                latency[~seen] = float(
+                    (latency[seen] * wsum[seen]).sum() / wsum[seen].sum())
+
+        bin_hours = bin_s / 3600.0
+        usd_hr = float(result.cost.get("usd_per_hour", 0.0))
+        return cls(name=f"{result.name}-trace", bin_hours=bin_hours,
+                   arrivals=arrivals, processed=processed,
+                   latency_s=latency, dropped=np.zeros(nbins),
+                   cost_usd=np.full(nbins, usd_hr * bin_hours))

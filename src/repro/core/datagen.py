@@ -12,6 +12,7 @@ rank-frequency profile of real text corpora.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
@@ -42,8 +43,11 @@ class DataGenerator:
         self.zipf_a = zipf_a
 
     def generate(self, schema: Schema, num_records: int) -> DataSet:
+        # stable across processes: Python's str hash is salted by
+        # PYTHONHASHSEED, so hash((name, seed)) would break "deterministic
+        # per (schema, seed)" between runs; crc32 is not
         rng = np.random.default_rng(
-            abs(hash((schema.name, self.seed))) % (2 ** 31))
+            zlib.crc32(f"{schema.name}:{self.seed}".encode()) % (2 ** 31))
         cols: Dict[str, np.ndarray] = {}
         for f in schema.fields:
             cols[f.name] = self._field(rng, f, num_records)

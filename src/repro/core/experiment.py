@@ -37,6 +37,9 @@ class ExperimentResult:
     collector: SpanCollector
     metrics: MetricStore
     drained: bool
+    # dilation the experiment ran under; trace binning (repro.calibrate)
+    # uses it to convert real span timestamps back to virtual time
+    time_scale: float = 1.0
 
     @property
     def sustained_rps(self) -> float:
@@ -95,8 +98,13 @@ class Experiment:
                     pipe.submit(batch, take)
                     sent += take
                     n -= take
-                metrics.observe("load_rps", self.load.rate_at(virt_now))
-                metrics.observe("queued_records", pipe.inflight)
+                # every experiment series shares the virtual (undilated)
+                # clock, so time_scale'd runs export one coherent time base
+                # and calibration can bin records_sent into an ObservedTrace
+                metrics.observe("load_rps", self.load.rate_at(virt_now),
+                                t=virt_now)
+                metrics.observe("queued_records", pipe.inflight, t=virt_now)
+                metrics.observe("records_sent", sent, t=virt_now)
             drained = pipe.drain(self.drain_timeout_s)
         finally:
             pipe.stop()
@@ -115,4 +123,4 @@ class Experiment:
             duration_s=duration, records_sent=sent,
             records_done=sent - max(pipe.inflight, 0), ingest_mb=ingest_mb,
             stage_summary=summary, cost=cost, collector=pipe.collector,
-            metrics=metrics, drained=drained)
+            metrics=metrics, drained=drained, time_scale=self.time_scale)

@@ -10,6 +10,10 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
+# numpy < 2.0 ships the integrator as np.trapz (same compat-shim precedent
+# as the jax-version shims in distributed/sharding.py)
+_trapezoid = getattr(np, "trapezoid", None) or np.trapz
+
 
 @dataclass(frozen=True)
 class Segment:
@@ -45,7 +49,7 @@ class LoadPattern:
         """Trapezoidal integral of rate over [t0, t1]."""
         ts = np.linspace(t0, t1, n)
         rs = np.array([self.rate_at(float(t)) for t in ts])
-        return float(np.trapezoid(rs, ts))
+        return float(_trapezoid(rs, ts))
 
     @staticmethod
     def ramp(name: str, duration_s: float, peak_rate: float) -> "LoadPattern":

@@ -15,6 +15,14 @@ load shape is used, so the simulation is quite fast" (paper); here a full
 seed's exact semantics: legacy SimpleTwin/QuickscalingTwin results are
 numerically identical to the old hard-coded scan.
 
+The scan is generalized to arbitrary horizon and bin width: policy steps
+take the bin width ``dt`` (hours), so the same kernel that plays 8736
+one-hour bins for the year tables also replays a sub-hour calibration
+trace (``repro.calibrate``). ``scan_trace`` is the unbatched, *unjitted*
+core — differentiable w.r.t. the parameter vector, which is what twin
+calibration differentiates through. The year path pins dt=1.0 (a static
+jit arg) and stays bit-identical to the PR 1 kernel.
+
 End-of-year backlog is priced the paper's way: queue_length / capacity
 hours of extra pipeline time at the twin's hourly rate ("the cost of, for
 example, spinning up duplicate pipelines to process the backlog"). Policies
@@ -73,23 +81,38 @@ class SimulationResult:
         return self.total_cost_usd + self.network_cost_usd + self.storage_cost_usd
 
 
-@functools.partial(jax.jit, static_argnums=(3,))
-def _grid_scan(loads: jnp.ndarray, params: jnp.ndarray,
-               policy_idx: jnp.ndarray, version: int):
-    """The whole grid in one dispatch.
+def scan_trace(load: jnp.ndarray, params: jnp.ndarray, policy_index,
+               dt_hours=1.0):
+    """One scenario's scan over arbitrary bins — the differentiable core.
 
-    loads [N, H] records/hour; params [N, PARAM_DIM] per twin.padded_params;
-    policy_idx [N] int32 switch indices; ``version`` is the policy-registry
-    version (static) so late policy registration forces a retrace.
+    load [T] records/bin; params [PARAM_DIM]; ``dt_hours`` is the bin width.
+    Unjitted on purpose: ``repro.calibrate`` takes ``jax.grad`` of a loss
+    through this scan (wrapping it in its own jit), and ``_grid_scan`` wraps
+    it in vmap+jit for the what-if grids. Returns (carry_end, (processed,
+    queue, latency, cost, dropped)) with each series shaped [T].
     """
     branches = policy_branches()
+    dt = jnp.asarray(dt_hours, jnp.float32)
 
+    def bin_step(carry, arrive):
+        return jax.lax.switch(policy_index, branches, carry, arrive,
+                              params, dt)
+
+    return jax.lax.scan(bin_step, jnp.zeros((CARRY_DIM,), jnp.float32), load)
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def _grid_scan(loads: jnp.ndarray, params: jnp.ndarray,
+               policy_idx: jnp.ndarray, version: int, dt_hours: float = 1.0):
+    """The whole grid in one dispatch.
+
+    loads [N, T] records/bin; params [N, PARAM_DIM] per twin.padded_params;
+    policy_idx [N] int32 switch indices; ``version`` is the policy-registry
+    version (static) so late policy registration forces a retrace;
+    ``dt_hours`` (static) is the bin width — 1.0 for the year tables.
+    """
     def one(load, p, idx):
-        def hour(carry, arrive):
-            return jax.lax.switch(idx, branches, carry, arrive, p)
-
-        carry_end, outs = jax.lax.scan(
-            hour, jnp.zeros((CARRY_DIM,), jnp.float32), load)
+        carry_end, outs = scan_trace(load, p, idx, dt_hours)
         return carry_end[0], outs
 
     return jax.vmap(one)(loads, params, policy_idx)
@@ -99,18 +122,39 @@ def simulate_grid(twins: Sequence[Twin], loads: np.ndarray,
                   names: Optional[Sequence[str]] = None,
                   slo: Optional[SLO] = None,
                   cost_model: Optional[CostModel] = None,
-                  record_mb: float = 0.0) -> List[SimulationResult]:
+                  record_mb: float = 0.0,
+                  bin_hours: Optional[float] = None) -> List[SimulationResult]:
     """Simulate N scenarios — twins[i] against loads[i] — in one vmapped
-    scan. ``loads`` is [N, HOURS_PER_YEAR]; stats are summarised per
-    scenario afterwards in numpy."""
+    scan. ``loads`` is [N, T] records per bin of ``bin_hours`` (the year
+    tables use [N, HOURS_PER_YEAR] hourly bins); stats are summarised per
+    scenario afterwards in numpy.
+
+    Omitting ``bin_hours`` keeps the seed contract: hourly bins over the
+    full year, any other horizon rejected. Passing it (any value,
+    including an explicit 1.0) unlocks arbitrary horizons — but storage/
+    network accounting (Table IV) is daily-rolling over the year, so a
+    cost model + record_mb on a non-year grid is an error, not a silent
+    zero."""
     loads = np.asarray(loads, np.float32)
-    assert loads.ndim == 2 and loads.shape[1] == HOURS_PER_YEAR, loads.shape
+    assert loads.ndim == 2, loads.shape
+    if bin_hours is None:
+        if loads.shape[1] != HOURS_PER_YEAR:
+            raise ValueError(
+                f"hourly grids must cover the {HOURS_PER_YEAR}-hour year, "
+                f"got {loads.shape[1]} bins; pass bin_hours= for sub-hour "
+                f"or short-horizon traces")
+        bin_hours = 1.0
+    year_grid = loads.shape[1] == HOURS_PER_YEAR and bin_hours == 1.0
+    if cost_model is not None and record_mb > 0.0 and not year_grid:
+        raise ValueError("storage/network costs need the hourly full-year "
+                         "grid (daily rolling retention); drop the cost "
+                         "model or simulate the full year")
     assert len(twins) == loads.shape[0], (len(twins), loads.shape)
     params = np.stack([tw.padded_params() for tw in twins])
     idx = np.asarray([tw.policy_index for tw in twins], np.int32)
     q_end, (processed, queue, latency, cost, dropped) = _grid_scan(
         jnp.asarray(loads), jnp.asarray(params), jnp.asarray(idx),
-        registry_version())
+        registry_version(), float(bin_hours))
     q_end = np.asarray(q_end, np.float64)
     processed = np.asarray(processed, np.float64)
     queue = np.asarray(queue, np.float64)
@@ -121,7 +165,7 @@ def simulate_grid(twins: Sequence[Twin], loads: np.ndarray,
     return [
         _summarise(names[i], twins[i], np.asarray(loads[i], np.float64),
                    processed[i], queue[i], latency[i], cost[i], dropped[i],
-                   float(q_end[i]), slo, cost_model, record_mb)
+                   float(q_end[i]), slo, cost_model, record_mb, bin_hours)
         for i in range(len(twins))
     ]
 
@@ -143,7 +187,7 @@ def _summarise(name: str, twin: Twin, load_np: np.ndarray,
                processed: np.ndarray, queue: np.ndarray, lat_np: np.ndarray,
                cost_np: np.ndarray, dropped: np.ndarray, q_end: float,
                slo: Optional[SLO], cost_model: Optional[CostModel],
-               record_mb: float) -> SimulationResult:
+               record_mb: float, bin_hours: float = 1.0) -> SimulationResult:
     backlog_s = q_end / max(twin.max_rps, 1e-9)
     backlog_cost = backlog_s / 3600.0 * twin.usd_per_hour
 
@@ -168,6 +212,7 @@ def _summarise(name: str, twin: Twin, load_np: np.ndarray,
 
     net_cost = stor_cost = 0.0
     if cost_model is not None and record_mb > 0.0:
+        # simulate_grid guarantees the hourly full-year grid here
         daily = storage_costs(load_np, cost_model, record_mb)
         net_cost = float(daily["network_usd"].sum())
         stor_cost = float(daily["storage_usd"].sum())
@@ -177,8 +222,8 @@ def _summarise(name: str, twin: Twin, load_np: np.ndarray,
         processed=processed, queue=queue, latency_s=lat_np, cost_usd=cost_np,
         total_cost_usd=float(cost_np.sum() + backlog_cost),
         backlog_s=backlog_s, backlog_cost_usd=backlog_cost,
-        mean_throughput_rph=float(processed.mean()),
-        max_throughput_rph=float(processed.max()),
+        mean_throughput_rph=float(processed.mean() / bin_hours),
+        max_throughput_rph=float(processed.max() / bin_hours),
         median_latency_s=median_lat, mean_latency_s=mean_lat,
         pct_latency_met=pct_rec_met, pct_hours_met=pct_hours_met,
         slo_met=slo_met, network_cost_usd=net_cost,

@@ -15,6 +15,23 @@ scenario of a what-if grid — regardless of policy mix — runs through ONE
 vmapped scan kernel (see core/simulate.py). New scaling/queueing policies
 are added by registering a step function; the kernel never changes.
 
+Steps are *bin-width aware*: the canonical signature is
+
+    step(carry, arrive, params, dt) -> (carry, (processed, queue, latency,
+                                                cost, dropped))
+
+where ``dt`` is the bin width in hours (1.0 for the year simulation;
+sub-hour for calibration traces). Legacy three-argument steps registered
+before the dt generalization are wrapped automatically and simply ignore
+``dt`` — at dt=1.0 every built-in reduces bit-identically to its PR 1 form.
+
+Each registered policy also declares *calibration metadata*: a per-parameter
+``bounds`` box, the subset optimized in log-space (``log_params``), and the
+params ``frozen`` by default during gradient fitting (operator-chosen knobs
+like instance bounds). ``repro.calibrate`` uses this to reparameterize the
+flat vector onto the bounds with a sigmoid/softplus bijection and fit it to
+an observed trace by differentiating through the simulation scan.
+
 Shared convention: ``params[0:3] = (max_rps, usd_per_hour, base_latency_s)``
 for every policy; extra parameters follow, zero-padded to ``PARAM_DIM``.
 The scan carry is a ``CARRY_DIM``-vector: slot 0 holds queued/accumulated
@@ -43,6 +60,7 @@ cost/performance can be forecast before a pipeline is ever run at scale.
 """
 from __future__ import annotations
 
+import inspect
 from dataclasses import dataclass, replace
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -54,16 +72,33 @@ from repro.core.experiment import ExperimentResult
 CARRY_DIM = 2     # [queued/accumulated records, policy state]
 PARAM_DIM = 6     # flat parameter vector, zero-padded per policy
 
+# calibration boxes for the shared triple; extras declare their own via
+# register_policy(bounds=...) or inherit the generic positive box below
+SHARED_BOUNDS: Dict[str, Tuple[float, float]] = {
+    "max_rps": (1e-2, 1e3),
+    "usd_per_hour": (1e-4, 10.0),
+    "base_latency_s": (1e-2, 100.0),
+}
+GENERIC_BOUNDS: Tuple[float, float] = (1e-3, 1e3)
+SHARED_LOG = ("max_rps", "usd_per_hour", "base_latency_s")
+
 
 @dataclass(frozen=True)
 class PolicySpec:
     """One registered scaling/queueing policy."""
     name: str
     index: int                       # lax.switch branch index (stable)
-    step: Callable                   # (carry, arrive, params) -> (carry, out)
+    step: Callable                   # (carry, arrive, params, dt) -> (carry, out)
     param_names: Tuple[str, ...]     # layout of the flat param vector
     defaults: Dict[str, float]
     doc: str
+    # calibration metadata (repro.calibrate)
+    bounds: Dict[str, Tuple[float, float]] = None
+    log_params: Tuple[str, ...] = ()
+    frozen: Tuple[str, ...] = ()
+
+    def bound(self, pname: str) -> Tuple[float, float]:
+        return (self.bounds or {}).get(pname, GENERIC_BOUNDS)
 
 
 _REGISTRY: Dict[str, PolicySpec] = {}
@@ -71,31 +106,63 @@ _VERSION = 0    # bumped on registration; a static jit arg, so the grid
                 # kernel retraces when a new policy is registered late
 
 
+def _accepts_dt(fn: Callable) -> bool:
+    """True if ``fn`` already takes the (carry, arrive, params, dt) form."""
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):       # builtins etc. — assume modern
+        return True
+    kinds = [p.kind for p in sig.parameters.values()]
+    if any(k == inspect.Parameter.VAR_POSITIONAL for k in kinds):
+        return True
+    pos = [k for k in kinds if k in (inspect.Parameter.POSITIONAL_ONLY,
+                                     inspect.Parameter.POSITIONAL_OR_KEYWORD)]
+    return len(pos) >= 4
+
+
 def register_policy(name: str, param_names: Tuple[str, ...],
                     defaults: Optional[Dict[str, float]] = None,
-                    doc: str = ""):
-    """Decorator: register ``fn(carry, arrive, params)`` as policy ``name``.
+                    doc: str = "",
+                    bounds: Optional[Dict[str, Tuple[float, float]]] = None,
+                    log_params: Optional[Tuple[str, ...]] = None,
+                    frozen: Tuple[str, ...] = ()):
+    """Decorator: register ``fn(carry, arrive, params, dt)`` as ``name``.
 
     ``param_names`` must start with the shared triple
     (max_rps, usd_per_hour, base_latency_s) and fit within PARAM_DIM.
+    Legacy ``fn(carry, arrive, params)`` steps are wrapped to ignore the
+    bin width ``dt`` (they then only simulate correctly at dt=1 hour).
+
+    ``bounds`` / ``log_params`` / ``frozen`` declare calibration metadata:
+    the fit box per parameter (shared-triple boxes are filled in), which
+    parameters are fit in log-space, and which are held fixed by default.
     """
     if len(param_names) > PARAM_DIM:
         raise ValueError(f"{name}: {len(param_names)} params > {PARAM_DIM}")
     if tuple(param_names[:3]) != ("max_rps", "usd_per_hour",
                                   "base_latency_s"):
         raise ValueError(f"{name}: params must start with the shared triple")
+    full_bounds = dict(SHARED_BOUNDS)
+    full_bounds.update(bounds or {})
+    logp = tuple(log_params) if log_params is not None else tuple(
+        p for p in param_names if p in SHARED_LOG)
 
     def deco(fn):
         global _VERSION
+        step = fn if _accepts_dt(fn) else (
+            lambda carry, arrive, p, dt, _fn=fn: _fn(carry, arrive, p))
         # overriding an existing policy keeps its switch index so twins
         # built earlier still dispatch to the right branch slot
         prev = _REGISTRY.get(name)
         spec = PolicySpec(name=name,
                           index=prev.index if prev else len(_REGISTRY),
-                          step=fn,
+                          step=step,
                           param_names=tuple(param_names),
                           defaults=dict(defaults or {}),
-                          doc=doc or (fn.__doc__ or "").strip())
+                          doc=doc or (fn.__doc__ or "").strip(),
+                          bounds=full_bounds,
+                          log_params=logp,
+                          frozen=tuple(frozen))
         _REGISTRY[name] = spec
         _VERSION += 1
         return fn
@@ -214,38 +281,40 @@ def make_twin(name: str, policy: str, *, kind: str = "fit",
 
 
 # ---------------------------------------------------------------------------
-# Built-in policy hour-steps. Pure f32 math, identical output avals across
+# Built-in policy bin-steps. Pure f32 math, identical output avals across
 # branches (lax.switch requirement): carry [CARRY_DIM] and five scalars
-# (processed, queue, latency, cost, dropped).
+# (processed, queue, latency, cost, dropped). ``dt`` is the bin width in
+# hours; every formula reduces bit-identically to the hour-step at dt=1
+# (multiplying by a literal 1.0 is exact in IEEE f32).
 # ---------------------------------------------------------------------------
 
 @register_policy("fifo", ("max_rps", "usd_per_hour", "base_latency_s"))
-def _fifo_step(carry, arrive, p):
+def _fifo_step(carry, arrive, p, dt):
     """Fixed capacity, fixed $/hr, FIFO infinite queue (paper Table I)."""
     max_rps, usd_hr, base_lat = p[0], p[1], p[2]
-    cap_h = max_rps * 3600.0
+    cap_bin = max_rps * 3600.0 * dt
     queue = carry[0]
     avail = queue + arrive
-    processed = jnp.minimum(avail, cap_h)
+    processed = jnp.minimum(avail, cap_bin)
     new_q = avail - processed
-    # a record arriving this hour waits behind ~the average queue
+    # a record arriving this bin waits behind ~the average queue
     avg_q = 0.5 * (queue + new_q)
     latency = base_lat + avg_q / jnp.maximum(max_rps, 1e-9)
     return (carry.at[0].set(new_q),
-            (processed, new_q, latency, usd_hr, jnp.zeros(())))
+            (processed, new_q, latency, usd_hr * dt, jnp.zeros(())))
 
 
 @register_policy("quickscale", ("max_rps", "usd_per_hour",
                                 "base_latency_s"))
-def _quickscale_step(carry, arrive, p):
+def _quickscale_step(carry, arrive, p, dt):
     """Optimal scaling: never queues; pay ceil(load/capacity) instances."""
     max_rps, usd_hr, base_lat = p[0], p[1], p[2]
-    cap_h = max_rps * 3600.0
+    cap_bin = max_rps * 3600.0 * dt
     queue = carry[0]
-    instances = jnp.maximum(jnp.ceil(arrive / jnp.maximum(cap_h, 1e-9)), 1.0)
+    instances = jnp.maximum(jnp.ceil(arrive / jnp.maximum(cap_bin, 1e-9)), 1.0)
     processed = arrive
     new_q = queue * 0.0
-    cost = usd_hr * instances
+    cost = usd_hr * instances * dt
     return (carry.at[0].set(new_q),
             (processed, new_q, base_lat, cost, jnp.zeros(())))
 
@@ -254,8 +323,14 @@ def _quickscale_step(carry, arrive, p):
                  ("max_rps", "usd_per_hour", "base_latency_s",
                   "min_instances", "max_instances", "scale_up_hours"),
                  defaults={"min_instances": 1.0, "max_instances": 64.0,
-                           "scale_up_hours": 1.0})
-def _autoscale_step(carry, arrive, p):
+                           "scale_up_hours": 1.0},
+                 bounds={"min_instances": (1.0, 4096.0),
+                         "max_instances": (1.0, 4096.0),
+                         "scale_up_hours": (0.1, 48.0)},
+                 log_params=("max_rps", "usd_per_hour", "base_latency_s",
+                             "scale_up_hours"),
+                 frozen=("min_instances", "max_instances"))
+def _autoscale_step(carry, arrive, p, dt):
     """Horizontal scaling with scale-up delay and min/max instance bounds.
 
     Demand (queue + arrivals) sets a target instance count; booting is
@@ -266,19 +341,19 @@ def _autoscale_step(carry, arrive, p):
     """
     max_rps, usd_hr, base_lat = p[0], p[1], p[2]
     min_i, max_i, delay = p[3], p[4], p[5]
-    cap1 = max_rps * 3600.0
+    cap1 = max_rps * 3600.0 * dt
     queue, prev = carry[0], carry[1]
-    prev = jnp.clip(prev, min_i, max_i)   # hour 0: carry starts at min_i
+    prev = jnp.clip(prev, min_i, max_i)   # bin 0: carry starts at min_i
     avail = queue + arrive
     target = jnp.clip(jnp.ceil(avail / jnp.maximum(cap1, 1e-9)),
                       min_i, max_i)
-    booting = prev + (target - prev) / jnp.maximum(delay, 1.0)
+    booting = prev + (target - prev) * dt / jnp.maximum(delay, dt)
     inst = jnp.where(target > prev, booting, target)
     processed = jnp.minimum(avail, inst * cap1)
     new_q = avail - processed
     avg_q = 0.5 * (queue + new_q)
     latency = base_lat + avg_q / jnp.maximum(inst * max_rps, 1e-9)
-    cost = usd_hr * inst
+    cost = usd_hr * inst * dt
     return (jnp.stack([new_q, inst]),
             (processed, new_q, latency, cost, jnp.zeros(())))
 
@@ -286,8 +361,11 @@ def _autoscale_step(carry, arrive, p):
 @register_policy("shed",
                  ("max_rps", "usd_per_hour", "base_latency_s",
                   "queue_cap_hours"),
-                 defaults={"queue_cap_hours": 4.0})
-def _shed_step(carry, arrive, p):
+                 defaults={"queue_cap_hours": 4.0},
+                 bounds={"queue_cap_hours": (0.05, 168.0)},
+                 log_params=("max_rps", "usd_per_hour", "base_latency_s",
+                             "queue_cap_hours"))
+def _shed_step(carry, arrive, p, dt):
     """Bounded queue with load shedding: overflow beyond the cap is dropped.
 
     The queue holds at most ``queue_cap_hours`` hours of capacity worth of
@@ -295,25 +373,30 @@ def _shed_step(carry, arrive, p):
     latency stays bounded at the price of completeness.
     """
     max_rps, usd_hr, base_lat, qcap_h = p[0], p[1], p[2], p[3]
-    cap_h = max_rps * 3600.0
-    qmax = qcap_h * cap_h
+    cap_hour = max_rps * 3600.0
+    cap_bin = cap_hour * dt
+    qmax = qcap_h * cap_hour          # hours-of-capacity, not bins
     queue = carry[0]
     avail = queue + arrive
-    processed = jnp.minimum(avail, cap_h)
+    processed = jnp.minimum(avail, cap_bin)
     backlog = avail - processed
     dropped = jnp.maximum(backlog - qmax, 0.0)
     new_q = backlog - dropped
     avg_q = 0.5 * (queue + new_q)
     latency = base_lat + avg_q / jnp.maximum(max_rps, 1e-9)
     return (carry.at[0].set(new_q),
-            (processed, new_q, latency, usd_hr, dropped))
+            (processed, new_q, latency, usd_hr * dt, dropped))
 
 
 @register_policy("batch_window",
                  ("max_rps", "usd_per_hour", "base_latency_s",
                   "window_hours", "idle_cost_fraction"),
-                 defaults={"window_hours": 6.0, "idle_cost_fraction": 0.1})
-def _batch_window_step(carry, arrive, p):
+                 defaults={"window_hours": 6.0, "idle_cost_fraction": 0.1},
+                 bounds={"window_hours": (0.25, 48.0),
+                         "idle_cost_fraction": (0.0, 1.0)},
+                 log_params=("max_rps", "usd_per_hour", "base_latency_s",
+                             "window_hours"))
+def _batch_window_step(carry, arrive, p, dt):
     """Accumulate-then-flush batching: cheap hours, half-a-window latency.
 
     Records accumulate for ``window_hours``; a flush burst then processes up
@@ -324,17 +407,17 @@ def _batch_window_step(carry, arrive, p):
     """
     max_rps, usd_hr, base_lat = p[0], p[1], p[2]
     window, idle_frac = p[3], p[4]
-    cap_h = max_rps * 3600.0
+    cap_hour = max_rps * 3600.0
     acc, timer = carry[0], carry[1]
-    timer = timer + 1.0
+    timer = timer + dt                 # hours since last flush
     flush = timer >= window
     avail = acc + arrive
-    processed = jnp.where(flush, jnp.minimum(avail, cap_h * window), 0.0)
+    processed = jnp.where(flush, jnp.minimum(avail, cap_hour * window), 0.0)
     new_acc = avail - processed
     latency = (base_lat + 0.5 * window * 3600.0
                + new_acc / jnp.maximum(max_rps, 1e-9))
-    cost = (usd_hr * idle_frac
-            + usd_hr * processed / jnp.maximum(cap_h, 1e-9))
+    cost = (usd_hr * idle_frac * dt
+            + usd_hr * processed / jnp.maximum(cap_hour, 1e-9))
     new_timer = jnp.where(flush, 0.0, timer)
     return (jnp.stack([new_acc, new_timer]),
             (processed, new_acc, latency, cost, jnp.zeros(())))

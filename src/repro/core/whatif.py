@@ -4,7 +4,12 @@ compare retention policies, and render Table II / Table IV style results.
 ``run_grid`` stacks every (traffic x twin) combination into one batch and
 executes it as a single vmapped scan (one jit trace, one device dispatch)
 via ``simulate_grid`` — policies may be mixed freely in one grid since the
-hour step dispatches per scenario with ``lax.switch``."""
+hour step dispatches per scenario with ``lax.switch``.
+
+``calibrated_grid`` closes the paper's loop end to end: it gradient-fits
+one twin per requested policy to a measured ``ExperimentResult`` (or a
+prebuilt ``ObservedTrace``) via ``repro.calibrate`` and plays the fitted
+twins through the Table II grid — measurement in, scenario table out."""
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
@@ -46,6 +51,28 @@ def run_grid(twins: Sequence[Twin], traffics: Sequence[TrafficModel],
         return []
     return simulate_grid(grid_twins, np.stack(grid_loads), names=names,
                          slo=slo, cost_model=cost_model, record_mb=record_mb)
+
+
+def calibrated_grid(source, policies: Sequence[str],
+                    traffics: Sequence[TrafficModel],
+                    slo: Optional[SLO] = None,
+                    cost_model: Optional[CostModel] = None,
+                    record_mb: float = 0.0,
+                    bin_s: float = 1.0,
+                    **fit_kwargs) -> List[SimulationResult]:
+    """Measured pipeline -> fitted twins -> Table II grid, in one call.
+
+    ``source`` is an ``ExperimentResult`` or an
+    ``repro.calibrate.ObservedTrace``; one twin is calibrated per entry of
+    ``policies`` (extra kwargs forward to ``repro.calibrate.fit``), then
+    the whole (traffic x fitted twin) grid runs as a single vmapped scan.
+    """
+    from repro.calibrate import calibrated_twin   # late: calibrate sits
+    twins = [calibrated_twin(source, policy, bin_s=bin_s,  # above core
+                             name=f"{policy}-cal", **fit_kwargs)
+             for policy in policies]
+    return run_grid(twins, traffics, slo=slo, cost_model=cost_model,
+                    record_mb=record_mb)
 
 
 def run_scenarios(scenarios: Sequence[Scenario],

@@ -1,0 +1,452 @@
+"""Differentiable twin calibration: gradients, recovery, one-dispatch fits.
+
+Covers the acceptance criteria of the calibrate subsystem:
+- the generalized scan is bit-identical to the hourly kernel at dt=1
+- d(loss)/d(params) matches finite differences (fifo, quickscale, shed)
+- parameter recovery from noiseless replays within 5% for >= 3 policies
+  (fifo, shed, autoscale; batch_window's identifiable subset too)
+- all K restarts of a fit run as ONE jitted dispatch (jit cache count)
+- trace builders, holdout generalization, calibrated_twin/calibrated_grid
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.calibrate import (ObservedTrace, bin_loadpattern, calibrated_twin,
+                             evaluate, fit, fit_spec, fit_with_holdout,
+                             trace_loss, z_from_params)
+from repro.calibrate.fit import _fit_kernel
+from repro.core.experiment import ExperimentResult
+from repro.core.loadpattern import LoadPattern, Segment
+from repro.core.metrics import MetricStore
+from repro.core.simulate import _grid_scan, scan_trace, simulate_year
+from repro.core.spans import Span, SpanCollector
+from repro.core.traffic import TrafficModel
+from repro.core.twin import (SimpleTwin, Twin, make_twin, policy_names,
+                             policy_spec, registry_version)
+from repro.core.whatif import calibrated_grid
+
+LOADS = TrafficModel.honda_default("nom").hourly_loads()
+
+RAMP = LoadPattern.ramp("ramp", duration_s=6 * 3600, peak_rate=6.0)
+STEADY = LoadPattern.steady("steady", duration_s=6 * 3600, rate=3.0)
+
+FIFO_TRUTH = SimpleTwin("t", 2.0, 0.05, 0.2)
+SHED_TRUTH = make_twin("t", "shed", max_rps=2.0, usd_per_hour=0.05,
+                       base_latency_s=0.2, queue_cap_hours=1.5)
+
+
+def _relerrs(result, truth):
+    tp = truth.padded_params()
+    return {n: float(abs(result.params[i] - tp[i]) / max(abs(tp[i]), 1e-9))
+            for i, n in enumerate(result.spec.param_names)
+            if result.spec.free_mask[i]}
+
+
+# ---------------------------------------------------------------------------
+# generalized scan: dt=1 bit-identity + sub-hour conservation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("twin", [
+    FIFO_TRUTH,
+    make_twin("q", "quickscale", max_rps=2.0, usd_per_hour=0.05,
+              base_latency_s=0.2),
+    make_twin("a", "autoscale", max_rps=0.5, usd_per_hour=0.01,
+              base_latency_s=0.1, max_instances=8, scale_up_hours=3),
+    SHED_TRUTH,
+    make_twin("b", "batch_window", max_rps=4.0, usd_per_hour=0.01,
+              base_latency_s=0.1, window_hours=6),
+], ids=lambda t: t.policy)
+def test_scan_trace_dt1_bit_identical_to_year_kernel(twin):
+    """simulate_year (the PR 1 hourly path) == scan_trace at dt=1.0."""
+    sim = simulate_year(twin, LOADS)
+    q_end, (proc, queue, lat, cost, drop) = scan_trace(
+        jnp.asarray(LOADS, jnp.float32), jnp.asarray(twin.padded_params()),
+        twin.policy_index, 1.0)
+    assert np.array_equal(np.asarray(proc, np.float64), sim.processed)
+    assert np.array_equal(np.asarray(queue, np.float64), sim.queue)
+    assert np.array_equal(np.asarray(lat, np.float64), sim.latency_s)
+    assert np.array_equal(np.asarray(cost, np.float64), sim.cost_usd)
+    assert np.array_equal(np.asarray(drop, np.float64), sim.dropped)
+    assert float(q_end[0]) == sim.queue[-1]
+
+
+@pytest.mark.parametrize("policy", ["fifo", "shed"])
+def test_subhour_bins_conserve_records(policy):
+    """processed + queue_end + dropped == arrived at dt=0.25h."""
+    twin = FIFO_TRUTH if policy == "fifo" else SHED_TRUTH
+    arrivals = bin_loadpattern(RAMP, bin_s=900.0).astype(np.float32)
+    _, (proc, queue, _lat, _cost, drop) = scan_trace(
+        jnp.asarray(arrivals), jnp.asarray(twin.padded_params()),
+        twin.policy_index, 0.25)
+    arrived = float(arrivals.astype(np.float64).sum())
+    total = (float(np.asarray(proc, np.float64).sum())
+             + float(np.asarray(queue)[-1]) +
+             float(np.asarray(drop, np.float64).sum()))
+    assert abs(total - arrived) / arrived < 1e-5
+    # sub-hour capacity really is per-bin: a quarter-hour bin processes at
+    # most a quarter-hour of capacity
+    assert np.asarray(proc).max() <= 2.0 * 3600.0 * 0.25 * (1 + 1e-6)
+
+
+def test_grid_scan_rejects_partial_year_without_bin_hours():
+    from repro.core.cost import CostModel
+    from repro.core.simulate import simulate_grid
+    with pytest.raises(ValueError):
+        simulate_grid([FIFO_TRUTH], np.ones((1, 100), np.float32))
+    sims = simulate_grid([FIFO_TRUTH], np.full((1, 100), 900.0, np.float32),
+                         bin_hours=0.25)
+    assert sims[0].processed.shape == (100,)
+    # throughput stays records-per-HOUR whatever the bin width
+    assert sims[0].max_throughput_rph <= 2.0 * 3600.0 * (1 + 1e-6)
+    # an explicit bin_hours=1.0 permits short hourly horizons (1.0 is a
+    # real value, not an "unset" sentinel)
+    sims = simulate_grid([FIFO_TRUTH], np.full((1, 100), 900.0, np.float32),
+                         bin_hours=1.0)
+    assert sims[0].processed.shape == (100,)
+    # Table IV storage accounting is year-only: loud error, not silent zero
+    with pytest.raises(ValueError):
+        simulate_grid([FIFO_TRUTH], np.full((1, 100), 900.0, np.float32),
+                      bin_hours=0.25, cost_model=CostModel(), record_mb=0.5)
+
+
+# ---------------------------------------------------------------------------
+# trace builders
+# ---------------------------------------------------------------------------
+
+def test_bin_loadpattern_integrates_exactly():
+    bins = bin_loadpattern(RAMP, bin_s=300.0)
+    assert bins.shape == (72,)
+    assert bins.sum() == pytest.approx(RAMP.total_records, rel=1e-6)
+    assert (np.diff(bins) > 0).all()          # a ramp keeps ramping
+
+
+def test_trace_from_loadpattern_and_noise():
+    tr = ObservedTrace.from_loadpattern(RAMP, FIFO_TRUTH, bin_s=300.0)
+    assert tr.num_bins == 72 and tr.bin_hours == pytest.approx(1 / 12)
+    assert tr.processed.sum() <= tr.arrivals.sum()
+    assert (tr.latency_s >= FIFO_TRUTH.base_latency_s - 1e-6).all()
+    noisy = tr.with_noise(0.05, seed=1)
+    assert not np.array_equal(noisy.processed, tr.processed)
+    assert (noisy.processed >= 0).all() and (noisy.latency_s >= 0).all()
+    # scales: every series positive, dropped falls back to arrival scale
+    sc = tr.scales()
+    assert all(v > 0 for v in sc.values())
+    assert sc["dropped"] == pytest.approx(float(np.abs(tr.arrivals).mean()))
+
+
+def _synthetic_result(rate_rps=20.0, duration_s=60.0, svc_s=0.01):
+    """A hand-built ExperimentResult: constant arrivals, one stage that
+    completes each batch svc_s later, flat $/hr."""
+    col = SpanCollector()
+    metrics = MetricStore()
+    n_ticks = int(duration_s)
+    per_tick = rate_rps
+    for i in range(n_ticks):
+        t = float(i + 1)
+        metrics.observe("records_sent", per_tick * (i + 1), t=t)
+        col.add(Span("write", start=t, duration=svc_s,
+                     records=int(per_tick)))
+    sent = int(per_tick * n_ticks)
+    return ExperimentResult(
+        name="synthetic", pipeline_name="synthetic", started=0.0,
+        duration_s=duration_s, records_sent=sent, records_done=sent,
+        ingest_mb=1.0,
+        stage_summary={"write": {"records": sent, "mean_latency_s": svc_s,
+                                 "p50_latency_s": svc_s,
+                                 "throughput_rps": rate_rps,
+                                 "busy_s": svc_s * n_ticks}},
+        cost={"usd_per_hour": 0.1, "total_usd": 0.1 * duration_s / 3600.0},
+        collector=col, metrics=metrics, drained=True, time_scale=1.0)
+
+
+def test_trace_from_experiment():
+    res = _synthetic_result()
+    tr = ObservedTrace.from_experiment(res, bin_s=10.0)
+    assert tr.num_bins == 6
+    assert tr.arrivals.sum() == pytest.approx(res.records_sent, rel=1e-6)
+    assert tr.processed.sum() == pytest.approx(res.records_done, rel=1e-6)
+    assert (tr.latency_s >= 0).all()
+    assert tr.cost_usd.sum() == pytest.approx(0.1 * 60.0 / 3600.0, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# gradients through the scan: autodiff == finite differences
+# ---------------------------------------------------------------------------
+
+def _loss_fn_for(policy, trace, truth):
+    spec = fit_spec(policy, init=truth)
+    arrivals = jnp.asarray(trace.arrivals, jnp.float32)
+    targets = {k: jnp.asarray(v, jnp.float32)
+               for k, v in trace.series().items()}
+    scales = {k: jnp.float32(v) for k, v in trace.scales().items()}
+    weights = {k: jnp.float32(1.0) for k in targets}
+    idx = policy_spec(policy).index
+
+    def loss(z):
+        return trace_loss(z, arrivals, targets, scales, weights, idx,
+                          trace.bin_hours, jnp.asarray(spec.lo),
+                          jnp.asarray(spec.hi), jnp.asarray(spec.log_mask),
+                          jnp.asarray(spec.free_mask),
+                          jnp.asarray(spec.fixed))
+
+    z0 = z_from_params(truth.padded_params() * 1.17, spec.lo, spec.hi,
+                       spec.log_mask)
+    return loss, z0, spec
+
+
+@pytest.mark.parametrize("policy,truth", [
+    ("fifo", FIFO_TRUTH),
+    ("quickscale", make_twin("q", "quickscale", max_rps=2.0,
+                             usd_per_hour=0.05, base_latency_s=0.2)),
+    ("shed", SHED_TRUTH),
+])
+def test_gradient_matches_finite_differences(policy, truth):
+    """Central finite differences confirm d(loss)/d(z) through the scan."""
+    # steady-rate trace keeps quickscale's ceil() away from integer edges
+    pattern = STEADY if policy == "quickscale" else RAMP
+    trace = ObservedTrace.from_loadpattern(pattern, truth, bin_s=300.0)
+    loss, z0, spec = _loss_fn_for(policy, trace, truth)
+    g_ad = np.asarray(jax.grad(loss)(jnp.asarray(z0)), np.float64)
+    # h small enough that the scan-accumulated queue's curvature (huge
+    # third derivative in the capacity coordinate) drops out of central FD
+    h = 1e-3
+    for i in np.nonzero(spec.free_mask)[0]:
+        zp, zm = z0.copy(), z0.copy()
+        zp[i] += h
+        zm[i] -= h
+        g_fd = (float(loss(jnp.asarray(zp))) - float(loss(jnp.asarray(zm))))\
+            / (2 * h)
+        assert g_ad[i] == pytest.approx(
+            g_fd, rel=0.05, abs=max(5e-3, 1e-2 * abs(g_ad).max())), \
+            (policy, spec.param_names[i], g_ad[i], g_fd)
+
+
+# ---------------------------------------------------------------------------
+# parameter recovery: noiseless replays, random restarts, <= 5% error
+# ---------------------------------------------------------------------------
+
+def test_recover_fifo_params():
+    tr = ObservedTrace.from_loadpattern(RAMP, FIFO_TRUTH, bin_s=300.0)
+    res = fit(tr, "fifo", restarts=8, steps=400, seed=0)
+    assert max(_relerrs(res, FIFO_TRUTH).values()) < 0.05
+
+
+def test_recover_shed_params():
+    tr = ObservedTrace.from_loadpattern(RAMP, SHED_TRUTH, bin_s=300.0)
+    res = fit(tr, "shed", restarts=8, steps=400, seed=0)
+    assert max(_relerrs(res, SHED_TRUTH).values()) < 0.05
+    assert tr.dropped.sum() > 0       # the trace actually exercised the cap
+
+
+def test_recover_autoscale_params():
+    truth = make_twin("t", "autoscale", max_rps=0.8, usd_per_hour=0.02,
+                      base_latency_s=0.3, min_instances=1, max_instances=4,
+                      scale_up_hours=2.0)
+    segs = []
+    for _ in range(4):       # drainable burst cycles: the boot-delay signal
+        segs += [Segment(3 * 3600, 2.0, 2.0), Segment(6 * 3600, 0.1, 0.1)]
+    tr = ObservedTrace.from_loadpattern(LoadPattern("cycles", tuple(segs)),
+                                        truth, bin_s=300.0)
+    res = fit(tr, "autoscale", restarts=16, steps=800, seed=0,
+              fixed_values={"min_instances": 1.0, "max_instances": 4.0})
+    errs = _relerrs(res, truth)
+    assert max(errs.values()) < 0.05, errs
+    # instance bounds were frozen, not fit
+    assert "min_instances" not in errs and "max_instances" not in errs
+    assert res.params[3] == 1.0 and res.params[4] == 4.0
+
+
+def test_recover_batch_window_identifiable_params():
+    """batch_window recovers its identifiable parameters; base_latency_s
+    is additively degenerate with the half-window term (0.25 s against
+    hours of batching latency) and is excluded by construction."""
+    truth = make_twin("b", "batch_window", max_rps=3.0, usd_per_hour=0.04,
+                      base_latency_s=0.25, window_hours=4.0,
+                      idle_cost_fraction=0.15)
+    pat = LoadPattern("ramp24", (Segment(24 * 3600, 0.5, 4.0),))
+    tr = ObservedTrace.from_loadpattern(pat, truth, bin_s=600.0)
+    res = fit(tr, "batch_window", restarts=16, steps=800, seed=0)
+    errs = _relerrs(res, truth)
+    errs.pop("base_latency_s")
+    assert max(errs.values()) < 0.05, errs
+
+
+def test_recover_fifo_params_under_noise():
+    tr = ObservedTrace.from_loadpattern(RAMP, FIFO_TRUTH, bin_s=300.0)
+    res = fit(tr.with_noise(0.02, seed=3), "fifo", restarts=8, steps=400,
+              seed=0)
+    assert max(_relerrs(res, FIFO_TRUTH).values()) < 0.10
+
+
+# ---------------------------------------------------------------------------
+# one vmapped dispatch for all restarts, shared across policies
+# ---------------------------------------------------------------------------
+
+def test_multi_start_fit_is_single_jit_dispatch():
+    """K restarts x 3 policies on one trace shape = exactly one trace of
+    the fit kernel (policy index and restart stack are operands)."""
+    _fit_kernel.clear_cache()
+    tr_f = ObservedTrace.from_loadpattern(RAMP, FIFO_TRUTH, bin_s=300.0)
+    tr_s = ObservedTrace.from_loadpattern(RAMP, SHED_TRUTH, bin_s=300.0)
+    quick = make_twin("q", "quickscale", max_rps=2.0, usd_per_hour=0.05,
+                      base_latency_s=0.2)
+    tr_q = ObservedTrace.from_loadpattern(STEADY, quick, bin_s=300.0)
+    for trace, policy in [(tr_f, "fifo"), (tr_s, "shed"),
+                          (tr_q, "quickscale")]:
+        fit(trace, policy, restarts=8, steps=120, seed=0)
+    assert _fit_kernel._cache_size() == 1
+
+
+def test_fit_result_reporting():
+    tr = ObservedTrace.from_loadpattern(RAMP, SHED_TRUTH, bin_s=300.0)
+    res = fit(tr, "shed", restarts=4, steps=150, seed=0)
+    assert res.loss_history.shape == (150, 4)
+    assert res.start_losses.shape == (4,)
+    assert res.loss == pytest.approx(res.start_losses.min())
+    rows = res.restart_table()
+    assert len(rows) == 4
+    assert sum(r["best"] for r in rows) == 1
+    assert all(set(res.spec.free_names) <= set(r) for r in rows)
+    assert res.twin.kind == "calibrated" and res.twin.policy == "shed"
+
+
+# ---------------------------------------------------------------------------
+# holdout + entry points
+# ---------------------------------------------------------------------------
+
+def test_holdout_fit_on_ramp_validates_on_steady():
+    train = ObservedTrace.from_loadpattern(RAMP, SHED_TRUTH, bin_s=300.0)
+    hold = ObservedTrace.from_loadpattern(STEADY, SHED_TRUTH, bin_s=300.0)
+    res = fit_with_holdout(train, hold, "shed", restarts=8, steps=400,
+                           seed=0)
+    assert res.holdout_loss is not None and res.holdout_name == hold.name
+    # a noiseless, well-identified fit generalizes: holdout loss stays tiny
+    assert res.holdout_loss < 0.05
+    assert res.generalization_gap == pytest.approx(
+        res.holdout_loss / res.loss, rel=1e-6)
+    # evaluate() agrees with the stored holdout number
+    assert evaluate(res.twin, hold) == pytest.approx(res.holdout_loss)
+
+
+def test_calibrated_twin_from_trace_and_experiment():
+    tr = ObservedTrace.from_loadpattern(RAMP, FIFO_TRUTH, bin_s=300.0)
+    tw = calibrated_twin(tr, "fifo", restarts=8, steps=400, seed=0)
+    assert isinstance(tw, Twin) and tw.policy == "fifo"
+    assert abs(tw.max_rps - 2.0) / 2.0 < 0.05
+
+    res = _synthetic_result(rate_rps=20.0)
+    tw2 = calibrated_twin(res, "fifo", bin_s=10.0, restarts=4, steps=200)
+    assert tw2.policy == "fifo" and np.isfinite(tw2.max_rps)
+    # the synthetic pipeline kept up at 20 rec/s, so fitted capacity >= that
+    assert tw2.max_rps > 5.0
+
+
+def test_calibrated_grid_end_to_end():
+    res = _synthetic_result(rate_rps=20.0)
+    traffics = [TrafficModel.honda_default("nom", R=3.5)]
+    sims = calibrated_grid(res, ["fifo", "quickscale"], traffics,
+                           bin_s=10.0, restarts=4, steps=200)
+    assert len(sims) == 2
+    assert {s.twin.policy for s in sims} == {"fifo", "quickscale"}
+    for s in sims:
+        assert np.isfinite(s.total_cost_usd) and s.processed.shape == (8736,)
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions (this module always runs — the windtunnel module
+# skips without hypothesis)
+# ---------------------------------------------------------------------------
+
+def test_datagen_seed_is_process_stable():
+    """The rng seed must not depend on PYTHONHASHSEED: zlib.crc32 of the
+    (schema, seed) pair replaces the salted str hash. Pinned values guard
+    against silent reseeding."""
+    from repro.core.datagen import DataGenerator
+    from repro.core.schema import telemetry_schema
+
+    ds = DataGenerator(seed=1).generate(telemetry_schema(), 8)
+    np.testing.assert_allclose(
+        ds.columns["speed_kph"][:4],
+        np.array([84.70726, 184.9455, 9.820917, 49.265144], np.float32),
+        rtol=1e-6)
+    ds2 = DataGenerator(seed=1).generate(telemetry_schema(), 8)
+    np.testing.assert_array_equal(ds.columns["speed_kph"],
+                                  ds2.columns["speed_kph"])
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_loadpattern_trapezoid_fallback():
+    """records_between works through the numpy<2.0 np.trapz fallback."""
+    import repro.core.loadpattern as lp_mod
+
+    lp = LoadPattern.ramp("r", duration_s=120, peak_rate=40)
+    want = lp.records_between(0.0, 120.0)
+    assert want == pytest.approx(2400.0, rel=1e-6)
+    calls = []
+    orig = lp_mod._trapezoid
+
+    def counting(ys, xs):
+        calls.append(1)
+        return orig(ys, xs)
+
+    lp_mod._trapezoid = counting
+    try:
+        assert lp.records_between(0.0, 120.0) == pytest.approx(want)
+        assert calls        # the shim really is the integration path
+        # np.trapz (the <2.0 spelling) gives the same integral
+        if hasattr(np, "trapz"):
+            lp_mod._trapezoid = np.trapz
+            assert lp.records_between(0.0, 120.0) == pytest.approx(
+                want, rel=1e-9)
+    finally:
+        lp_mod._trapezoid = orig
+
+
+# ---------------------------------------------------------------------------
+# registry metadata
+# ---------------------------------------------------------------------------
+
+def test_policies_declare_calibration_metadata():
+    for name in policy_names():
+        spec = policy_spec(name)
+        for pname in spec.param_names:
+            lo, hi = spec.bound(pname)
+            assert lo < hi
+        assert set(spec.frozen) <= set(spec.param_names)
+        assert set(spec.log_params) <= set(spec.param_names)
+
+
+def test_fit_warns_when_warm_start_outside_bounds():
+    """A measured pipeline faster than the calibration box must not be
+    clamped silently."""
+    tr = ObservedTrace.from_loadpattern(
+        LoadPattern.steady("s", 1800.0, 3.0), FIFO_TRUTH, bin_s=300.0)
+    giant = SimpleTwin("g", 2000.0, 0.05, 0.2)   # max_rps box tops at 1e3
+    with pytest.warns(UserWarning) as warned:
+        fit(tr, "fifo", restarts=2, steps=5, seed=0, init=giant)
+    messages = [str(w.message) for w in warned]
+    assert any("outside the calibration bounds" in m for m in messages)
+    # ...and the resulting edge-pinned fit is flagged, not silent
+    assert any("pinned" in m for m in messages)
+
+
+def test_fit_spec_freeze_and_fixed_values():
+    spec = fit_spec("autoscale",
+                    fixed_values={"min_instances": 2.0,
+                                  "max_instances": 8.0})
+    assert spec.free_names == ("max_rps", "usd_per_hour", "base_latency_s",
+                               "scale_up_hours")
+    assert spec.fixed[3] == 2.0 and spec.fixed[4] == 8.0
+    spec2 = fit_spec("autoscale", unfreeze=("max_instances",),
+                     fixed_values={"min_instances": 1.0})
+    assert "max_instances" in spec2.free_names
+    spec3 = fit_spec("fifo", freeze=("usd_per_hour",),
+                     fixed_values={"usd_per_hour": 0.01})
+    assert "usd_per_hour" not in spec3.free_names
+    with pytest.raises(KeyError):
+        fit_spec("fifo", freeze=("bogus",))
+    with pytest.raises(ValueError):
+        fit_spec("fifo", init=SHED_TRUTH)
