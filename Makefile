@@ -1,16 +1,18 @@
 # Convenience targets for the tier-1 verify and the benchmark harness.
 #
-#   make test            tier-1 test suite (ROADMAP.md's verify command)
-#   make test-deps       install the test requirements
-#   make bench           full benchmark harness (all paper tables + grid)
-#   make bench-grid      looped-vs-vmapped what-if grid microbenchmark only
-#   make calibrate-bench multi-start twin-fit wall-clock vs K
-#                        (writes BENCH_calibrate.json)
+#   make test              tier-1 test suite (ROADMAP.md's verify command)
+#   make test-deps         install the test requirements
+#   make bench             full benchmark harness (all paper tables + grid)
+#   make bench-grid        looped-vs-vmapped what-if grid microbenchmark only
+#   make grid-bench-pallas XLA vs Pallas grid backends at 64/256/1024
+#                          scenarios (writes BENCH_grid_pallas.json)
+#   make calibrate-bench   multi-start twin-fit wall-clock vs K
+#                          (writes BENCH_calibrate.json)
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-deps bench bench-grid calibrate-bench
+.PHONY: test test-deps bench bench-grid grid-bench-pallas calibrate-bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -23,6 +25,9 @@ bench:
 
 bench-grid:
 	$(PYTHON) benchmarks/grid_bench.py
+
+grid-bench-pallas:
+	$(PYTHON) -m benchmarks.run grid-pallas
 
 calibrate-bench:
 	$(PYTHON) -m benchmarks.run calibrate

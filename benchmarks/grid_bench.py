@@ -1,34 +1,49 @@
-"""Looped vs vmapped what-if grid microbenchmark.
+"""What-if grid microbenchmarks: looped vs vmapped, and XLA vs Pallas.
 
 The seed ran ``run_grid`` as a Python loop of one jitted scan per scenario;
 the TwinPolicy engine stacks the whole (twin x traffic) grid and runs it as
-one vmap-over-scan dispatch. This benchmark times both on a 64-scenario
-grid (8 twins spanning all five policies x 8 traffic forecasts) and emits a
-JSON record with the measured speedup.
+one vmap-over-scan dispatch. ``bench`` times both on a 64-scenario grid
+(8 twins spanning all five policies x 8 traffic forecasts) and emits a JSON
+record with the measured speedup.
 
-  PYTHONPATH=src python benchmarks/grid_bench.py
-  PYTHONPATH=src python -m benchmarks.run grid
+``bench_pallas`` times the two grid *backends* against each other — the
+XLA vmapped ``lax.switch`` scan vs the fused Pallas scenario-grid kernel
+(interpret mode on this CPU container; the same structure compiles for TPU
+lanes) — at N in {64, 256, 1024} scenarios, and writes
+``BENCH_grid_pallas.json``.
+
+  PYTHONPATH=src python benchmarks/grid_bench.py           # looped/vmapped
+  PYTHONPATH=src python benchmarks/grid_bench.py pallas    # backend sweep
+  PYTHONPATH=src python -m benchmarks.run grid             # looped/vmapped
+  PYTHONPATH=src python -m benchmarks.run grid-pallas      # backend sweep
+  make grid-bench-pallas
 """
 from __future__ import annotations
 
 import json
+import pathlib
 import time
 from typing import Dict, List
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.simulate import _grid_scan
+from repro.core.simulate import _grid_scan, _grid_scan_xla
 from repro.core.traffic import TrafficModel
 from repro.core.twin import (QuickscalingTwin, SimpleTwin, make_twin,
-                             registry_version)
+                             policy_onehot, registry_version)
+from repro.kernels.policy_scan import policy_grid_scan
 
 N_TWINS = 8
 N_TRAFFICS = 8
 REPEATS = 5
+PALLAS_SIZES = (64, 256, 1024)
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_grid_pallas.json"
 
 
-def _grid():
+def _grid(n_twins: int = N_TWINS, n_traffics: int = N_TRAFFICS):
     twins = [
         SimpleTwin("block", 1.9512, 0.0082, 0.15),
         SimpleTwin("non-block", 6.15, 0.0703, 0.06),
@@ -42,9 +57,9 @@ def _grid():
                   base_latency_s=0.15, queue_cap_hours=2),
         make_twin("batch", "batch_window", max_rps=6.15, usd_per_hour=0.0703,
                   base_latency_s=0.06, window_hours=6),
-    ][:N_TWINS]
+    ][:n_twins]
     traffics = [TrafficModel.honda_default(f"g{g:.2f}", R=3.5, G=g)
-                for g in np.linspace(1.0, 1.7, N_TRAFFICS)]
+                for g in np.linspace(1.0, 1.7, n_traffics)]
     grid_twins, loads = [], []
     for tr in traffics:
         hl = tr.hourly_loads()
@@ -98,6 +113,62 @@ def bench() -> Dict:
     }
 
 
+def _time_best(fn, repeats: int = REPEATS) -> float:
+    fn()                                  # warm the jit cache
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def bench_pallas(sizes=PALLAS_SIZES, repeats: int = REPEATS) -> Dict:
+    """XLA vmapped-switch backend vs fused Pallas scenario-grid kernel.
+
+    On this CPU container the kernel runs in interpret mode, so the
+    numbers measure the fused-scan structure (one pallas_call, scenarios
+    on lanes, carry resident) rather than TPU silicon; parity with the
+    XLA path is asserted on every size before timing.
+    """
+    rows = []
+    for n in sizes:
+        twins, loads = _grid(n_twins=8, n_traffics=-(-n // 8))
+        twins, loads = twins[:n], loads[:n]
+        loads, params, idx, ver = _kernel_args(twins, loads)
+        loads_j, params_j = jnp.asarray(loads), jnp.asarray(params)
+        idx_j = jnp.asarray(idx)
+        onehot_j = jnp.asarray(policy_onehot(idx))
+
+        def xla():
+            jax.block_until_ready(
+                _grid_scan_xla(loads_j, params_j, idx_j, ver, 1.0))
+
+        def pallas():
+            jax.block_until_ready(
+                policy_grid_scan(loads_j, params_j, onehot_j, 1.0,
+                                 interpret=True))
+
+        # parity first (1e-5 relative on every series), then wall-clock
+        _, outs_x = _grid_scan_xla(loads_j, params_j, idx_j, ver, 1.0)
+        _, outs_p = policy_grid_scan(loads_j, params_j, onehot_j, 1.0,
+                                     interpret=True)
+        for a, b in zip(outs_x, outs_p):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       rtol=1e-5, atol=1e-5)
+
+        xla_ms = _time_best(xla, repeats)
+        pallas_ms = _time_best(pallas, repeats)
+        rows.append({"scenarios": n, "hours": int(loads.shape[1]),
+                     "xla_ms": round(xla_ms, 3),
+                     "pallas_interpret_ms": round(pallas_ms, 3),
+                     "pallas_over_xla": round(pallas_ms / xla_ms, 3)})
+    out = {"device": jax.devices()[0].platform, "repeats": repeats,
+           "mode": "interpret", "parity_rtol": 1e-5, "sizes": rows}
+    BENCH_JSON.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    return out
+
+
 def main() -> List[str]:
     r = bench()
     return [f"grid/looped_{r['scenarios']}x,{r['looped_ms'] * 1e3:.0f},"
@@ -106,5 +177,22 @@ def main() -> List[str]:
             f"speedup={r['speedup']}x;{json.dumps(r, sort_keys=True)}"]
 
 
+def main_pallas() -> List[str]:
+    r = bench_pallas()
+    lines = []
+    for row in r["sizes"]:
+        n = row["scenarios"]
+        lines.append(f"grid/xla_{n}x,{row['xla_ms'] * 1e3:.0f},"
+                     f"vmapped-switch-scan")
+        lines.append(f"grid/pallas_{n}x,{row['pallas_interpret_ms'] * 1e3:.0f},"
+                     f"interpret;ratio={row['pallas_over_xla']}")
+    lines.append(f"grid/pallas_json,0,wrote={BENCH_JSON.name}")
+    return lines
+
+
 if __name__ == "__main__":
-    print(json.dumps(bench(), indent=2, sort_keys=True))
+    import sys
+    if "pallas" in sys.argv[1:]:
+        print(json.dumps(bench_pallas(), indent=2, sort_keys=True))
+    else:
+        print(json.dumps(bench(), indent=2, sort_keys=True))

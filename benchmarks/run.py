@@ -7,8 +7,10 @@
 Tables map to the paper: table1 (twin parameters), table2 (year
 simulations), table3 (engineering comparison), table4 (retention costs),
 plus the roofline table over the assigned (arch x shape) grid, a core
-micro-benchmark of the wind-tunnel primitives, and the twin-calibration
-fit benchmark (which also writes BENCH_calibrate.json).
+micro-benchmark of the wind-tunnel primitives, the twin-calibration
+fit benchmark (which also writes BENCH_calibrate.json), and the
+grid-backend sweep ``grid-pallas`` — XLA vs Pallas-interpret at
+64/256/1024 scenarios (writes BENCH_grid_pallas.json).
 """
 from __future__ import annotations
 
@@ -48,6 +50,8 @@ TABLES = {
                                  fromlist=["main"]).main(),
     "grid": lambda: __import__("benchmarks.grid_bench",
                                fromlist=["main"]).main(),
+    "grid-pallas": lambda: __import__("benchmarks.grid_bench",
+                                      fromlist=["main_pallas"]).main_pallas(),
     "calibrate": lambda: __import__("benchmarks.calibrate_bench",
                                     fromlist=["main"]).main(),
     "roofline": lambda: __import__("benchmarks.roofline_bench",

@@ -10,6 +10,7 @@ what-if grids.
 from repro.calibrate.fit import (DEFAULT_FIT_OPT, FitResult, calibrated_twin,
                                  evaluate, fit, fit_with_holdout)
 from repro.calibrate.objective import (DEFAULT_WEIGHTS, FitSpec, fit_spec,
+                                       lane_series_loss, lane_trace_loss,
                                        params_from_z, series_loss,
                                        trace_loss, twin_from_z,
                                        z_from_params)
@@ -18,6 +19,7 @@ from repro.calibrate.trace import ObservedTrace, SERIES_KEYS, bin_loadpattern
 __all__ = [
     "DEFAULT_FIT_OPT", "DEFAULT_WEIGHTS", "FitResult", "FitSpec",
     "ObservedTrace", "SERIES_KEYS", "bin_loadpattern", "calibrated_twin",
-    "evaluate", "fit", "fit_spec", "fit_with_holdout", "params_from_z",
-    "series_loss", "trace_loss", "twin_from_z", "z_from_params",
+    "evaluate", "fit", "fit_spec", "fit_with_holdout", "lane_series_loss",
+    "lane_trace_loss", "params_from_z", "series_loss", "trace_loss",
+    "twin_from_z", "z_from_params",
 ]

@@ -2,15 +2,20 @@
 
 ``fit`` matches a registered TwinPolicy's parameter vector to an
 ``ObservedTrace`` by differentiating through the simulation scan. All K
-random restarts run as ONE vmapped dispatch: the jitted ``_fit_kernel``
+random restarts run as ONE dispatch — and as K *lanes* of the same
+scenario-grid backend the what-if engine uses: the jitted ``_fit_kernel``
 takes the [K, PARAM_DIM] stack of unconstrained starts and runs
 
-    lax.scan over steps of  vmap(grad(loss-of-scan))  +  vmap(AdamW)
+    lax.scan over steps of  grad(lane-block loss-of-scan)  +  vmap(AdamW)
 
-so a 32-restart fit costs one compile and one device program, the same
-grid trick ``core.simulate`` plays for what-if scenarios (PR 1). The
-optimizer is the existing ``repro.optim`` AdamW (warmup + cosine, global
--norm clip), vmapped so each restart clips and schedules independently.
+where the lane-block loss broadcasts the trace across K lanes and scans
+them all with the branchless lane-vectorized policy step through the
+shared backend selection (``kernels.ops.policy_scan``; the gradient pins
+its differentiable jnp path — the Pallas kernel has no VJP). A 32-restart
+fit costs one compile and one device program, the same grid trick
+``core.simulate`` plays for what-if scenarios. The optimizer is the
+existing ``repro.optim`` AdamW (warmup + cosine, global-norm clip),
+vmapped so each restart clips and schedules independently.
 
 The public surface:
 
@@ -36,8 +41,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.calibrate.objective import (DEFAULT_WEIGHTS, FitSpec, fit_spec,
-                                       params_from_z, series_loss,
-                                       trace_loss, twin_from_z, z_from_params)
+                                       lane_trace_loss, params_from_z,
+                                       series_loss, twin_from_z,
+                                       z_from_params)
 from repro.calibrate.trace import ObservedTrace, SERIES_KEYS
 from repro.config import OptimizerConfig
 from repro.core.twin import (PARAM_DIM, Twin, fit_twin, policy_spec,
@@ -99,23 +105,36 @@ class FitResult:
 def _fit_kernel(steps: int, dt_hours: float, version: int,
                 ocfg: OptimizerConfig, z0, arrivals, targets, scales,
                 weights, lo, hi, log_mask, free_mask, fixed, policy_index):
-    """K restarts, one dispatch: scan(vmap(grad(loss)) + vmap(AdamW)).
+    """K restarts, one dispatch: scan(grad(lane-block loss) + vmap(AdamW)).
+
+    The restarts are K lanes of the shared grid backend: the loss plays
+    the whole [K, PARAM_DIM] stack through ONE lane-vectorized scan
+    (``objective.lane_trace_loss`` -> ``kernels.ops.policy_scan``; the
+    traced ``policy_index`` switches in a single lane branch, so one jit
+    trace serves every policy without paying the P-way blend), and grad
+    of the summed per-lane losses recovers each restart's gradient
+    exactly (the lanes are independent). AdamW stays vmapped so every
+    restart clips and schedules on its own.
 
     ``steps``/``dt_hours``/``ocfg`` are static; ``version`` is the policy
     registry version so late registrations retrace (same contract as the
     grid kernel). Returns (z_final [K,D], final_loss [K], history [steps,K]).
     """
-    def loss_one(z):
-        return trace_loss(z, arrivals, targets, scales, weights,
-                          policy_index, dt_hours, lo, hi, log_mask,
-                          free_mask, fixed)
+    def losses(z):
+        return lane_trace_loss(z, arrivals, targets, scales, weights,
+                               policy_index, dt_hours, lo, hi, log_mask,
+                               free_mask, fixed)
 
-    vgrad = jax.vmap(jax.value_and_grad(loss_one))
+    def summed(z):
+        per_lane = losses(z)
+        return per_lane.sum(), per_lane
+
+    vgrad = jax.value_and_grad(summed, has_aux=True)
     opt0 = jax.vmap(lambda z: init_opt_state({"z": z}, ocfg))(z0)
 
     def one_step(carry, _):
         z, opt = carry
-        loss, g = vgrad(z)
+        (_, loss), g = vgrad(z)
 
         def upd(zk, gk, ok):
             new_p, new_o = adamw_update({"z": zk}, {"z": gk}, ok, ocfg)
@@ -126,7 +145,7 @@ def _fit_kernel(steps: int, dt_hours: float, version: int,
 
     (z_fin, _), history = jax.lax.scan(one_step, (z0, opt0), None,
                                        length=steps)
-    final_loss = jax.vmap(loss_one)(z_fin)
+    final_loss = losses(z_fin)
     return z_fin, final_loss, history
 
 

@@ -204,3 +204,55 @@ def trace_loss(z, arrivals, targets, scales, weights, policy_index, dt_hours,
     p = params_from_z(z, lo, hi, log_mask, free_mask, fixed)
     return series_loss(p, arrivals, targets, scales, weights, policy_index,
                        dt_hours)
+
+
+# ---------------------------------------------------------------------------
+# the lane-block loss — K restarts as K lanes of the shared grid backend
+# ---------------------------------------------------------------------------
+
+def lane_series_loss(params_block, arrivals, targets, scales, weights,
+                     policy_index, dt_hours):
+    """[K] per-restart losses for a [K, PARAM_DIM] block of candidates.
+
+    The K restarts are just K more lanes of the scenario-grid scan: the
+    trace's arrivals broadcast across the lane block and the whole stack
+    runs through the shared backend selection (``kernels.ops.
+    policy_scan``) exactly like a what-if grid — with
+    ``differentiable=True`` pinning the pure-jnp lane path, since the
+    Pallas kernel has no VJP and ``fit`` takes grad through this. All
+    restarts share one policy, so ``policy_index`` (a traced scalar; one
+    jit trace serves every policy) selects a single lane branch via
+    ``lax.switch`` — no P-way masked blend in the optimizer hot loop.
+    Same log-ratio / cumulative-flow scoring as ``series_loss``,
+    vectorized over lanes.
+    """
+    from repro.kernels import ops    # late: keep calibrate importable
+    k = params_block.shape[0]        # without the kernels package loaded
+    loads = jnp.broadcast_to(arrivals, (k,) + arrivals.shape)
+    _, (proc, _queue, lat, cost, drop) = ops.policy_scan(
+        loads, params_block, dt_hours=dt_hours, policy_index=policy_index,
+        differentiable=True)
+    sim = {"processed": proc, "latency": lat, "dropped": drop, "cost": cost}
+    total = jnp.zeros((k,))
+    for key in SERIES_KEYS:
+        s, t = sim[key], targets[key]
+        if key != "latency":            # flow series: match the running sum
+            s, t = jnp.cumsum(s, axis=1), jnp.cumsum(t)
+            eps = t[-1] * 1e-6 + 1e-12
+        else:
+            eps = scales[key] * 1e-6 + 1e-12
+        r = jnp.log((s + eps) / (t[None, :] + eps))
+        total = total + weights[key] * jnp.mean(r * r, axis=1)
+    return total
+
+
+def lane_trace_loss(z_block, arrivals, targets, scales, weights,
+                    policy_index, dt_hours, lo, hi, log_mask, free_mask,
+                    fixed):
+    """``trace_loss`` over a [K, PARAM_DIM] restart block: reparameterize
+    every lane, then score the block through the shared lane backend."""
+    p = jax.vmap(
+        lambda z: params_from_z(z, lo, hi, log_mask, free_mask, fixed)
+    )(z_block)
+    return lane_series_loss(p, arrivals, targets, scales, weights,
+                            policy_index, dt_hours)

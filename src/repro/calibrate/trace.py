@@ -20,6 +20,10 @@ latency, dropped records and cost over a uniform time grid of
   check the fit recovers them.
 * ``ObservedTrace.from_simulation`` — same, from an arrivals array you
   already have.
+* ``ObservedTrace.from_otel_spans`` — from exported OpenTelemetry-style
+  spans (plain list of dicts with start/end/status; no OTel SDK
+  dependency), so a real PlantD deployment's trace export feeds
+  ``repro.calibrate`` directly (ROADMAP "Trace importers").
 """
 from __future__ import annotations
 
@@ -137,6 +141,86 @@ class ObservedTrace:
         arrivals = bin_loadpattern(pattern, bin_s)
         return cls.from_simulation(twin, arrivals, bin_s / 3600.0,
                                    name=name or f"{pattern.name}-replay")
+
+    @classmethod
+    def from_otel_spans(cls, spans, bin_seconds: float = 60.0,
+                        name: str = "otel",
+                        usd_per_hour: float = 0.0) -> "ObservedTrace":
+        """Bin exported OpenTelemetry-style spans into a calibration trace.
+
+        ``spans`` is a plain list of dicts — no OTel SDK dependency, just
+        the shape an OTLP/JSON export (or a hand-rolled span log) already
+        has. Recognized keys per span:
+
+        * ``start`` / ``end`` — unix seconds, or the OTLP field names
+          ``start_time_unix_nano`` / ``end_time_unix_nano`` (nanoseconds);
+        * ``status`` — optional; ``"ERROR"`` (or OTLP status code 2)
+          counts the span's records as dropped instead of processed;
+        * ``records`` — optional batch size, default 1 record per span.
+
+        Arrivals bin by span start, completions (and their end-to-end
+        latency, record-weighted per bin) by span end; error spans feed
+        the dropped series at their end bin. The cost series is flat at
+        ``usd_per_hour`` (pass the deployment's known rate, or leave 0 and
+        down-weight cost in the fit). Times are rebased to the earliest
+        span start, so any epoch works.
+        """
+        if not spans:
+            raise ValueError("from_otel_spans needs at least one span")
+
+        def _time(sp, key):
+            if key in sp:
+                return float(sp[key])
+            nano = sp.get(f"{key}_time_unix_nano")
+            if nano is None:
+                raise KeyError(f"span missing {key!r} / "
+                               f"'{key}_time_unix_nano': {sp!r}")
+            return float(nano) * 1e-9
+
+        def _is_error(sp):
+            status = sp.get("status", "OK")
+            if isinstance(status, dict):      # OTLP: {"code": 2} — or the
+                status = status.get("code", 0)   # protobuf-JSON enum NAME
+            if isinstance(status, (int, float)):
+                return int(status) == 2
+            # "ERROR" / "STATUS_CODE_ERROR" / "2" string forms
+            return str(status).upper() in ("ERROR", "STATUS_CODE_ERROR",
+                                           "2")
+
+        starts = np.array([_time(sp, "start") for sp in spans])
+        ends = np.array([_time(sp, "end") for sp in spans])
+        if (ends < starts).any():
+            raise ValueError("span end precedes its start")
+        recs = np.array([float(sp.get("records", 1.0)) for sp in spans])
+        errors = np.array([_is_error(sp) for sp in spans])
+
+        t0 = starts.min()
+        dur = max(float(ends.max() - t0), bin_seconds)
+        nbins = max(1, int(math.ceil(dur / bin_seconds)))
+
+        def _binned(times, weights):
+            out = np.zeros(nbins)
+            which = np.clip((times - t0) / bin_seconds, 0,
+                            nbins - 1).astype(int)
+            np.add.at(out, which, weights)
+            return out
+
+        arrivals = _binned(starts, recs)
+        ok = ~errors
+        processed = _binned(ends[ok], recs[ok])
+        dropped = _binned(ends[errors], recs[errors])
+        # record-weighted mean end-to-end latency of the bin a span ends in
+        lat_w = _binned(ends[ok], (recs * (ends - starts))[ok])
+        latency = np.zeros(nbins)
+        seen = processed > 0
+        latency[seen] = lat_w[seen] / processed[seen]
+        if seen.any():
+            latency[~seen] = float(lat_w.sum() / processed.sum())
+
+        bin_hours = bin_seconds / 3600.0
+        return cls(name=name, bin_hours=bin_hours, arrivals=arrivals,
+                   processed=processed, latency_s=latency, dropped=dropped,
+                   cost_usd=np.full(nbins, usd_per_hour * bin_hours))
 
     @classmethod
     def from_experiment(cls, result, bin_s: float = 1.0,

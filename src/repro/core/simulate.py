@@ -23,6 +23,20 @@ core — differentiable w.r.t. the parameter vector, which is what twin
 calibration differentiates through. The year path pins dt=1.0 (a static
 jit arg) and stays bit-identical to the PR 1 kernel.
 
+The grid runs on either of two interchangeable backends, selected by
+``_grid_scan`` through the ``kernels.ops`` Pallas switch:
+
+* **XLA** (default) — ``_grid_scan_xla``: vmap over per-scenario scans of
+  the scalar ``lax.switch`` policy step. The parity anchor; hourly
+  full-year results are bit-identical to the pre-Pallas kernel.
+* **Pallas** (``kernels.ops.use_pallas(True)`` or the ``pallas_mode()``
+  context) — the fused scenario-grid kernel of
+  ``kernels/policy_scan.py``: one ``pallas_call`` scans all T bins for
+  LANES scenarios at a time using the branchless lane-vectorized policy
+  steps (``core.twin.lane_policy_step``), scenarios on the vector lanes,
+  ``interpret=True`` on CPU. Grids and K-restart calibration fits
+  (restarts are just more lanes) both route through this selection.
+
 End-of-year backlog is priced the paper's way: queue_length / capacity
 hours of extra pipeline time at the twin's hourly rate ("the cost of, for
 example, spinning up duplicate pipelines to process the backlog"). Policies
@@ -76,6 +90,18 @@ class SimulationResult:
     dropped: np.ndarray = field(default_factory=lambda: np.zeros(0))
     dropped_records: float = 0.0
 
+    def __post_init__(self):
+        # a defaulted ``dropped`` must still match the horizon — a bare
+        # shape-(0,) array silently broadcasts to nonsense (or raises)
+        # against the other hourly series in elementwise use
+        if self.dropped.shape != self.load.shape:
+            if self.dropped.size == 0:
+                self.dropped = np.zeros_like(self.load)
+            else:
+                raise ValueError(
+                    f"dropped has shape {self.dropped.shape}, want "
+                    f"{self.load.shape} to match the hourly series")
+
     @property
     def grand_total_usd(self) -> float:
         return self.total_cost_usd + self.network_cost_usd + self.storage_cost_usd
@@ -102,20 +128,49 @@ def scan_trace(load: jnp.ndarray, params: jnp.ndarray, policy_index,
 
 
 @functools.partial(jax.jit, static_argnums=(3, 4))
-def _grid_scan(loads: jnp.ndarray, params: jnp.ndarray,
-               policy_idx: jnp.ndarray, version: int, dt_hours: float = 1.0):
-    """The whole grid in one dispatch.
+def _grid_scan_xla(loads: jnp.ndarray, params: jnp.ndarray,
+                   policy_idx: jnp.ndarray, version: int,
+                   dt_hours: float = 1.0):
+    """The XLA grid backend: vmap over per-scenario ``lax.switch`` scans.
 
     loads [N, T] records/bin; params [N, PARAM_DIM] per twin.padded_params;
     policy_idx [N] int32 switch indices; ``version`` is the policy-registry
     version (static) so late policy registration forces a retrace;
     ``dt_hours`` (static) is the bin width — 1.0 for the year tables.
+    This path is the parity anchor: the hourly full-year numbers stay
+    bit-identical to the pre-Pallas kernel.
     """
     def one(load, p, idx):
         carry_end, outs = scan_trace(load, p, idx, dt_hours)
         return carry_end[0], outs
 
     return jax.vmap(one)(loads, params, policy_idx)
+
+
+def _grid_scan(loads: jnp.ndarray, params: jnp.ndarray,
+               policy_idx: jnp.ndarray, version: int, dt_hours: float = 1.0):
+    """The whole grid in one dispatch — backend-selecting entry point.
+
+    Default: the XLA vmapped switch-scan above. Under ``kernels.ops.
+    use_pallas(True)`` / ``pallas_mode()``: the fused Pallas scenario-grid
+    kernel (``kernels/policy_scan.py``), scenarios on the vector lanes,
+    ``interpret=True`` on CPU. Same operands, same (q_end [N], five
+    [N, T] series) contract either way; selection happens OUTSIDE jit, so
+    flipping the switch between calls never stales a trace cache.
+    """
+    from repro.kernels import ops
+    if ops.pallas_enabled():
+        from repro.core.twin import policy_onehot
+        onehot = jnp.asarray(policy_onehot(np.asarray(policy_idx)))
+        carry_end, outs = ops.policy_scan(loads, params, onehot, dt_hours)
+        return carry_end[:, 0], outs
+    return _grid_scan_xla(loads, params, policy_idx, version, dt_hours)
+
+
+# the jit-cache introspection the tests (and benchmarks) use lives on the
+# XLA path; expose it on the selector so callers keep one import
+_grid_scan.clear_cache = _grid_scan_xla.clear_cache
+_grid_scan._cache_size = _grid_scan_xla._cache_size
 
 
 def simulate_grid(twins: Sequence[Twin], loads: np.ndarray,
@@ -136,7 +191,9 @@ def simulate_grid(twins: Sequence[Twin], loads: np.ndarray,
     cost model + record_mb on a non-year grid is an error, not a silent
     zero."""
     loads = np.asarray(loads, np.float32)
-    assert loads.ndim == 2, loads.shape
+    if loads.ndim != 2:
+        raise ValueError(f"loads must be a [N, T] scenario grid, got shape "
+                         f"{loads.shape}")
     if bin_hours is None:
         if loads.shape[1] != HOURS_PER_YEAR:
             raise ValueError(
@@ -149,7 +206,9 @@ def simulate_grid(twins: Sequence[Twin], loads: np.ndarray,
         raise ValueError("storage/network costs need the hourly full-year "
                          "grid (daily rolling retention); drop the cost "
                          "model or simulate the full year")
-    assert len(twins) == loads.shape[0], (len(twins), loads.shape)
+    if len(twins) != loads.shape[0]:
+        raise ValueError(f"{len(twins)} twins for {loads.shape[0]} load "
+                         f"rows — the grid pairs twins[i] with loads[i]")
     params = np.stack([tw.padded_params() for tw in twins])
     idx = np.asarray([tw.policy_index for tw in twins], np.int32)
     q_end, (processed, queue, latency, cost, dropped) = _grid_scan(
@@ -177,7 +236,10 @@ def simulate_year(twin: Twin, hourly_load: np.ndarray,
                   name: Optional[str] = None) -> SimulationResult:
     """Batch-of-one wrapper over ``simulate_grid`` (the seed's API)."""
     load = np.asarray(hourly_load, np.float32)
-    assert load.shape == (HOURS_PER_YEAR,), load.shape
+    if load.shape != (HOURS_PER_YEAR,):
+        raise ValueError(f"hourly_load must cover the {HOURS_PER_YEAR}-hour "
+                         f"year, got shape {load.shape}; use simulate_grid "
+                         f"with bin_hours= for other horizons")
     return simulate_grid([twin], load[None], names=[name or twin.name],
                          slo=slo, cost_model=cost_model,
                          record_mb=record_mb)[0]

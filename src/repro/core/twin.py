@@ -25,6 +25,30 @@ sub-hour for calibration traces). Legacy three-argument steps registered
 before the dt generalization are wrapped automatically and simply ignore
 ``dt`` — at dt=1.0 every built-in reduces bit-identically to its PR 1 form.
 
+Every policy exists in TWO interchangeable step forms:
+
+* the scalar form above — dispatched per scenario with ``jax.lax.switch``
+  inside the XLA grid kernel (``core/simulate.py``), the parity anchor;
+* a *branchless, lane-vectorized* form
+
+      lane_step(carry [LANES, CARRY_DIM], arrive [LANES],
+                params [LANES, PARAM_DIM], dt) -> (carry, outs)
+
+  — pure masked ``jnp`` math over a block of LANES scenarios at once,
+  with each of the five outputs shaped [LANES]. The built-ins hand-write
+  this form (so it lowers to straight-line VPU vector code inside the
+  Pallas scenario-grid kernel, ``kernels/policy_scan.py``); policies
+  registered without one get it derived automatically via ``jax.vmap`` of
+  their scalar step. At registration the registry *asserts both forms
+  agree* on a random block, so the two backends cannot drift.
+
+``lane_policy_step(carry, arrive, params, policy_onehot, dt)`` is the
+combined branchless step over a mixed-policy lane block: every registered
+policy is evaluated on every lane and the results blended with the
+[LANES, P] one-hot policy mask — exactly what ``vmap`` of ``lax.switch``
+lowers to, and the form the Pallas kernel scans over all T bins with
+scenarios on the vector lanes.
+
 Each registered policy also declares *calibration metadata*: a per-parameter
 ``bounds`` box, the subset optimized in log-space (``log_params``), and the
 params ``frozen`` by default during gradient fitting (operator-chosen knobs
@@ -96,6 +120,9 @@ class PolicySpec:
     bounds: Dict[str, Tuple[float, float]] = None
     log_params: Tuple[str, ...] = ()
     frozen: Tuple[str, ...] = ()
+    # branchless lane-vectorized form of ``step`` (see module docstring):
+    # (carry [L, CARRY_DIM], arrive [L], params [L, PARAM_DIM], dt)
+    lane_step: Callable = None
 
     def bound(self, pname: str) -> Tuple[float, float]:
         return (self.bounds or {}).get(pname, GENERIC_BOUNDS)
@@ -120,12 +147,46 @@ def _accepts_dt(fn: Callable) -> bool:
     return len(pos) >= 4
 
 
+def _derived_lane_step(step: Callable) -> Callable:
+    """Lane-vectorize a scalar step with ``jax.vmap`` (the fallback for
+    policies registered without a hand-written lane form)."""
+    import jax
+    return jax.vmap(step, in_axes=(0, 0, 0, None))
+
+
+def _assert_lane_parity(name: str, step: Callable, lane_step: Callable,
+                        lanes: int = 4, seed: int = 0):
+    """Registry invariant: the scalar and lane-vectorized forms of a policy
+    agree on a random block of scenarios. Runs eagerly at registration so a
+    hand-written lane step cannot drift from the ``lax.switch`` form."""
+    rng = np.random.default_rng(seed)
+    carry = jnp.asarray(rng.uniform(0.0, 50.0, (lanes, CARRY_DIM)),
+                        jnp.float32)
+    arrive = jnp.asarray(rng.uniform(0.0, 2e4, (lanes,)), jnp.float32)
+    params = jnp.asarray(rng.uniform(0.05, 8.0, (lanes, PARAM_DIM)),
+                         jnp.float32)
+    for dt in (1.0, 1.0 / 60.0):
+        dt = jnp.float32(dt)
+        c_lane, o_lane = lane_step(carry, arrive, params, dt)
+        for lane in range(lanes):
+            c_s, o_s = step(carry[lane], arrive[lane], params[lane], dt)
+            np.testing.assert_allclose(
+                np.asarray(c_lane[lane]), np.asarray(c_s), rtol=1e-5,
+                atol=1e-5, err_msg=f"{name}: lane/scalar carry mismatch")
+            for k, (ol, os_) in enumerate(zip(o_lane, o_s)):
+                np.testing.assert_allclose(
+                    np.asarray(ol[lane]), np.asarray(os_), rtol=1e-5,
+                    atol=1e-5,
+                    err_msg=f"{name}: lane/scalar output {k} mismatch")
+
+
 def register_policy(name: str, param_names: Tuple[str, ...],
                     defaults: Optional[Dict[str, float]] = None,
                     doc: str = "",
                     bounds: Optional[Dict[str, Tuple[float, float]]] = None,
                     log_params: Optional[Tuple[str, ...]] = None,
-                    frozen: Tuple[str, ...] = ()):
+                    frozen: Tuple[str, ...] = (),
+                    lane_step: Optional[Callable] = None):
     """Decorator: register ``fn(carry, arrive, params, dt)`` as ``name``.
 
     ``param_names`` must start with the shared triple
@@ -136,6 +197,11 @@ def register_policy(name: str, param_names: Tuple[str, ...],
     ``bounds`` / ``log_params`` / ``frozen`` declare calibration metadata:
     the fit box per parameter (shared-triple boxes are filled in), which
     parameters are fit in log-space, and which are held fixed by default.
+
+    ``lane_step`` optionally supplies the branchless lane-vectorized form
+    (see module docstring); omitted, it is derived with ``jax.vmap``.
+    Either way the registry asserts the two forms agree on a random block
+    before the policy becomes visible.
     """
     if len(param_names) > PARAM_DIM:
         raise ValueError(f"{name}: {len(param_names)} params > {PARAM_DIM}")
@@ -151,6 +217,8 @@ def register_policy(name: str, param_names: Tuple[str, ...],
         global _VERSION
         step = fn if _accepts_dt(fn) else (
             lambda carry, arrive, p, dt, _fn=fn: _fn(carry, arrive, p))
+        lstep = lane_step or _derived_lane_step(step)
+        _assert_lane_parity(name, step, lstep)
         # overriding an existing policy keeps its switch index so twins
         # built earlier still dispatch to the right branch slot
         prev = _REGISTRY.get(name)
@@ -162,7 +230,8 @@ def register_policy(name: str, param_names: Tuple[str, ...],
                           doc=doc or (fn.__doc__ or "").strip(),
                           bounds=full_bounds,
                           log_params=logp,
-                          frozen=tuple(frozen))
+                          frozen=tuple(frozen),
+                          lane_step=lstep)
         _REGISTRY[name] = spec
         _VERSION += 1
         return fn
@@ -185,6 +254,47 @@ def policy_branches() -> Tuple[Callable, ...]:
     """Step functions ordered by switch index (the kernel's branch table)."""
     return tuple(s.step for s in
                  sorted(_REGISTRY.values(), key=lambda s: s.index))
+
+
+def lane_branches() -> Tuple[Callable, ...]:
+    """Lane-vectorized step functions ordered by switch index."""
+    return tuple(s.lane_step for s in
+                 sorted(_REGISTRY.values(), key=lambda s: s.index))
+
+
+def num_policies() -> int:
+    return len(_REGISTRY)
+
+
+def policy_onehot(policy_idx) -> np.ndarray:
+    """[N, P] f32 one-hot mask from [N] switch indices — the lane form's
+    branch selector (P = number of registered policies)."""
+    idx = np.asarray(policy_idx, np.int32)
+    return (idx[:, None] == np.arange(num_policies())[None, :]).astype(
+        np.float32)
+
+
+def lane_policy_step(carry, arrive, params, onehot, dt):
+    """The combined branchless bin-step over a mixed-policy lane block.
+
+    carry [L, CARRY_DIM]; arrive [L]; params [L, PARAM_DIM];
+    onehot [L, P] selects each lane's policy. Every registered policy is
+    evaluated on every lane (pure vector math, no control flow) and the
+    results blended with the one-hot mask — a masked sum is exact in f32
+    (1*x + 0*y == x), so this matches the ``lax.switch`` form bit for bit
+    as long as every branch stays finite on foreign parameter vectors
+    (a registry invariant checked at registration). This is the step the
+    Pallas scenario-grid kernel scans over all T bins with scenarios on
+    the vector lanes (``kernels/policy_scan.py``).
+    """
+    new_carry = jnp.zeros_like(carry)
+    outs = [jnp.zeros_like(arrive) for _ in range(5)]
+    for j, lstep in enumerate(lane_branches()):
+        c_j, o_j = lstep(carry, arrive, params, dt)
+        m = onehot[:, j]
+        new_carry = new_carry + m[:, None] * c_j
+        outs = [acc + m * o for acc, o in zip(outs, o_j)]
+    return new_carry, tuple(outs)
 
 
 def registry_version() -> int:
@@ -286,9 +396,31 @@ def make_twin(name: str, policy: str, *, kind: str = "fit",
 # (processed, queue, latency, cost, dropped). ``dt`` is the bin width in
 # hours; every formula reduces bit-identically to the hour-step at dt=1
 # (multiplying by a literal 1.0 is exact in IEEE f32).
+#
+# Each built-in also hand-writes its lane-vectorized form (``_*_lane``):
+# the same formulas over [L]-vectors with carry [L, CARRY_DIM] — the op
+# sequence is kept identical to the scalar step so the two forms agree to
+# f32 exactness (asserted at registration). Lane forms must stay finite on
+# ANY lane's parameter vector (other policies' params occupy the same
+# slots), which every division below guards with ``jnp.maximum(.., 1e-9)``.
 # ---------------------------------------------------------------------------
 
-@register_policy("fifo", ("max_rps", "usd_per_hour", "base_latency_s"))
+def _fifo_lane(carry, arrive, p, dt):
+    max_rps, usd_hr, base_lat = p[:, 0], p[:, 1], p[:, 2]
+    cap_bin = max_rps * 3600.0 * dt
+    queue = carry[:, 0]
+    avail = queue + arrive
+    processed = jnp.minimum(avail, cap_bin)
+    new_q = avail - processed
+    avg_q = 0.5 * (queue + new_q)
+    latency = base_lat + avg_q / jnp.maximum(max_rps, 1e-9)
+    return (jnp.stack([new_q, carry[:, 1]], axis=1),
+            (processed, new_q, latency, usd_hr * dt,
+             jnp.zeros_like(arrive)))
+
+
+@register_policy("fifo", ("max_rps", "usd_per_hour", "base_latency_s"),
+                 lane_step=_fifo_lane)
 def _fifo_step(carry, arrive, p, dt):
     """Fixed capacity, fixed $/hr, FIFO infinite queue (paper Table I)."""
     max_rps, usd_hr, base_lat = p[0], p[1], p[2]
@@ -304,8 +436,22 @@ def _fifo_step(carry, arrive, p, dt):
             (processed, new_q, latency, usd_hr * dt, jnp.zeros(())))
 
 
+def _quickscale_lane(carry, arrive, p, dt):
+    max_rps, usd_hr, base_lat = p[:, 0], p[:, 1], p[:, 2]
+    cap_bin = max_rps * 3600.0 * dt
+    queue = carry[:, 0]
+    instances = jnp.maximum(jnp.ceil(arrive / jnp.maximum(cap_bin, 1e-9)),
+                            1.0)
+    processed = arrive
+    new_q = queue * 0.0
+    cost = usd_hr * instances * dt
+    return (jnp.stack([new_q, carry[:, 1]], axis=1),
+            (processed, new_q, base_lat, cost, jnp.zeros_like(arrive)))
+
+
 @register_policy("quickscale", ("max_rps", "usd_per_hour",
-                                "base_latency_s"))
+                                "base_latency_s"),
+                 lane_step=_quickscale_lane)
 def _quickscale_step(carry, arrive, p, dt):
     """Optimal scaling: never queues; pay ceil(load/capacity) instances."""
     max_rps, usd_hr, base_lat = p[0], p[1], p[2]
@@ -319,6 +465,26 @@ def _quickscale_step(carry, arrive, p, dt):
             (processed, new_q, base_lat, cost, jnp.zeros(())))
 
 
+def _autoscale_lane(carry, arrive, p, dt):
+    max_rps, usd_hr, base_lat = p[:, 0], p[:, 1], p[:, 2]
+    min_i, max_i, delay = p[:, 3], p[:, 4], p[:, 5]
+    cap1 = max_rps * 3600.0 * dt
+    queue, prev = carry[:, 0], carry[:, 1]
+    prev = jnp.clip(prev, min_i, max_i)
+    avail = queue + arrive
+    target = jnp.clip(jnp.ceil(avail / jnp.maximum(cap1, 1e-9)),
+                      min_i, max_i)
+    booting = prev + (target - prev) * dt / jnp.maximum(delay, dt)
+    inst = jnp.where(target > prev, booting, target)
+    processed = jnp.minimum(avail, inst * cap1)
+    new_q = avail - processed
+    avg_q = 0.5 * (queue + new_q)
+    latency = base_lat + avg_q / jnp.maximum(inst * max_rps, 1e-9)
+    cost = usd_hr * inst * dt
+    return (jnp.stack([new_q, inst], axis=1),
+            (processed, new_q, latency, cost, jnp.zeros_like(arrive)))
+
+
 @register_policy("autoscale",
                  ("max_rps", "usd_per_hour", "base_latency_s",
                   "min_instances", "max_instances", "scale_up_hours"),
@@ -329,7 +495,8 @@ def _quickscale_step(carry, arrive, p, dt):
                          "scale_up_hours": (0.1, 48.0)},
                  log_params=("max_rps", "usd_per_hour", "base_latency_s",
                              "scale_up_hours"),
-                 frozen=("min_instances", "max_instances"))
+                 frozen=("min_instances", "max_instances"),
+                 lane_step=_autoscale_lane)
 def _autoscale_step(carry, arrive, p, dt):
     """Horizontal scaling with scale-up delay and min/max instance bounds.
 
@@ -358,13 +525,31 @@ def _autoscale_step(carry, arrive, p, dt):
             (processed, new_q, latency, cost, jnp.zeros(())))
 
 
+def _shed_lane(carry, arrive, p, dt):
+    max_rps, usd_hr, base_lat, qcap_h = p[:, 0], p[:, 1], p[:, 2], p[:, 3]
+    cap_hour = max_rps * 3600.0
+    cap_bin = cap_hour * dt
+    qmax = qcap_h * cap_hour
+    queue = carry[:, 0]
+    avail = queue + arrive
+    processed = jnp.minimum(avail, cap_bin)
+    backlog = avail - processed
+    dropped = jnp.maximum(backlog - qmax, 0.0)
+    new_q = backlog - dropped
+    avg_q = 0.5 * (queue + new_q)
+    latency = base_lat + avg_q / jnp.maximum(max_rps, 1e-9)
+    return (jnp.stack([new_q, carry[:, 1]], axis=1),
+            (processed, new_q, latency, usd_hr * dt, dropped))
+
+
 @register_policy("shed",
                  ("max_rps", "usd_per_hour", "base_latency_s",
                   "queue_cap_hours"),
                  defaults={"queue_cap_hours": 4.0},
                  bounds={"queue_cap_hours": (0.05, 168.0)},
                  log_params=("max_rps", "usd_per_hour", "base_latency_s",
-                             "queue_cap_hours"))
+                             "queue_cap_hours"),
+                 lane_step=_shed_lane)
 def _shed_step(carry, arrive, p, dt):
     """Bounded queue with load shedding: overflow beyond the cap is dropped.
 
@@ -388,6 +573,25 @@ def _shed_step(carry, arrive, p, dt):
             (processed, new_q, latency, usd_hr * dt, dropped))
 
 
+def _batch_window_lane(carry, arrive, p, dt):
+    max_rps, usd_hr, base_lat = p[:, 0], p[:, 1], p[:, 2]
+    window, idle_frac = p[:, 3], p[:, 4]
+    cap_hour = max_rps * 3600.0
+    acc, timer = carry[:, 0], carry[:, 1]
+    timer = timer + dt
+    flush = timer >= window
+    avail = acc + arrive
+    processed = jnp.where(flush, jnp.minimum(avail, cap_hour * window), 0.0)
+    new_acc = avail - processed
+    latency = (base_lat + 0.5 * window * 3600.0
+               + new_acc / jnp.maximum(max_rps, 1e-9))
+    cost = (usd_hr * idle_frac * dt
+            + usd_hr * processed / jnp.maximum(cap_hour, 1e-9))
+    new_timer = jnp.where(flush, 0.0, timer)
+    return (jnp.stack([new_acc, new_timer], axis=1),
+            (processed, new_acc, latency, cost, jnp.zeros_like(arrive)))
+
+
 @register_policy("batch_window",
                  ("max_rps", "usd_per_hour", "base_latency_s",
                   "window_hours", "idle_cost_fraction"),
@@ -395,7 +599,8 @@ def _shed_step(carry, arrive, p, dt):
                  bounds={"window_hours": (0.25, 48.0),
                          "idle_cost_fraction": (0.0, 1.0)},
                  log_params=("max_rps", "usd_per_hour", "base_latency_s",
-                             "window_hours"))
+                             "window_hours"),
+                 lane_step=_batch_window_lane)
 def _batch_window_step(carry, arrive, p, dt):
     """Accumulate-then-flush batching: cheap hours, half-a-window latency.
 

@@ -2,9 +2,13 @@
 compare retention policies, and render Table II / Table IV style results.
 
 ``run_grid`` stacks every (traffic x twin) combination into one batch and
-executes it as a single vmapped scan (one jit trace, one device dispatch)
-via ``simulate_grid`` — policies may be mixed freely in one grid since the
-hour step dispatches per scenario with ``lax.switch``.
+executes it as a single scan dispatch via ``simulate_grid`` — policies may
+be mixed freely in one grid. The scan runs on whichever backend
+``core.simulate._grid_scan`` selects: the XLA vmapped ``lax.switch`` scan
+(default), or — under ``kernels.ops.pallas_mode()`` — the fused Pallas
+scenario-grid kernel with scenarios on the vector lanes, so 1k+-scenario
+sweeps of the Jablonski & Heltweg cost levers (autoscaling delay,
+overprovisioning, queue caps) stay one device program.
 
 ``calibrated_grid`` closes the paper's loop end to end: it gradient-fits
 one twin per requested policy to a measured ``ExperimentResult`` (or a

@@ -1,9 +1,11 @@
 """jit'd dispatch layer between Pallas kernels and jnp references.
 
-``use_pallas(True)`` flips attention / rwkv6 / ssm hot paths to their
-Pallas implementations (TPU target; ``interpret=True`` on CPU for tests).
-The default is the XLA reference path so the 512-device dry-run lowers on
-the CPU container. Model code imports ONLY from this module.
+``use_pallas(True)`` flips attention / rwkv6 / ssm / policy-grid hot
+paths to their Pallas implementations (TPU target; ``interpret=True`` on
+CPU for tests). The default is the XLA reference path so the 512-device
+dry-run lowers on the CPU container. Model code imports ONLY from this
+module; the what-if grid backend (``core.simulate._grid_scan``) selects
+through ``policy_scan`` here.
 """
 from __future__ import annotations
 
@@ -80,3 +82,43 @@ def ssm_scan(x, dt, A, B, C, D, state=None):
         return ssm_kernel.ssm(x, dt, A, B, C, D, state,
                               interpret=getattr(_state, "interpret", True))
     return ref.ssm_scan(x, dt, A, B, C, D, state)
+
+
+def policy_scan(loads, params, onehot=None, dt_hours=1.0, *,
+                policy_index=None, differentiable=False):
+    """TwinPolicy scenario-grid scan: loads [N, T], params [N, PARAM_DIM]
+    -> (carry_end [N, CARRY_DIM], five [N, T] series).
+
+    Exactly one of ``onehot`` [N, P] (mixed-policy grid, masked-blend
+    lane step) or ``policy_index`` (scalar, possibly traced — a
+    uniform-policy lane block such as K calibration restarts; a single
+    lane branch executes via ``lax.switch`` instead of all P) selects
+    the policies; see ``ref.policy_grid_scan``.
+
+    ``differentiable=True`` pins the pure-jnp lane path regardless of the
+    Pallas switch — the kernel has no VJP, and twin calibration takes
+    ``jax.grad`` through this scan. Both paths run the same
+    lane-vectorized math, so the choice never changes the numbers.
+    """
+    if (onehot is None) == (policy_index is None):   # before dispatch, so
+        # both backends reject the ambiguity identically (one_hot(None)
+        # would otherwise make the Pallas path return silent zeros)
+        raise ValueError("pass exactly one of onehot= (mixed grid) or "
+                         "policy_index= (uniform lane block)")
+    if pallas_enabled() and not differentiable:
+        from repro.kernels import policy_scan as policy_kernel
+        if onehot is None:
+            # the kernel's branch selector is the mask form; a traced
+            # uniform index lowers to its one-hot row broadcast over lanes
+            import jax
+
+            from repro.core.twin import num_policies
+            onehot = jnp.broadcast_to(
+                jax.nn.one_hot(policy_index, num_policies(),
+                               dtype=jnp.float32),
+                (loads.shape[0], num_policies()))
+        return policy_kernel.policy_grid_scan(
+            loads, params, onehot, dt_hours,
+            interpret=getattr(_state, "interpret", True))
+    return ref.policy_grid_scan(loads, params, onehot, dt_hours,
+                                policy_index=policy_index)

@@ -1,0 +1,167 @@
+"""Pallas kernel: the whole TwinPolicy (scenario x bin) grid in one scan.
+
+The what-if engine's hot path is a tiny f32 bin-step scanned over T bins
+for N scenarios (paper Sec. V-G: only the load *shape* is simulated, so
+the grid engine bounds how many scenarios a sweep can afford). The XLA
+path (``core.simulate._grid_scan``) runs it as vmap-of-scan with a
+``lax.switch`` per scenario; this kernel fuses the whole grid into ONE
+``pallas_call``:
+
+* grid = (scenario blocks, time chunks), time minor — each kernel
+  instance advances a block of LANES scenarios through one chunk of bins;
+* scenarios live on the vector lanes: operand blocks are [chunk, LANES]
+  with the scenario axis minor, so each bin-step is straight-line VPU
+  vector math over the lane block (``core.twin.lane_policy_step`` — every
+  registered policy evaluated and blended by the [LANES, P] one-hot mask,
+  no control flow);
+* the [LANES, CARRY_DIM] scan carry lives in VMEM scratch and persists
+  across time chunks, so HBM sees each load bin exactly once and the
+  carry never round-trips (the XLA scan materialises it per step).
+
+On CPU this runs with ``interpret=True`` (tests, this container); the
+grid/BlockSpec structure is the TPU layout. ``chunk`` bounds VMEM: a
+(chunk x LANES) f32 block per operand/output — the default 546 splits the
+8736-hour year into 16 chunks (~280 KB per array at 128 lanes). Horizons
+the chunk doesn't divide fall back to a single chunk.
+
+Dispatch through ``kernels.ops.policy_scan`` (the ``use_pallas`` /
+``pallas_mode`` switch); the pure-jnp oracle is ``kernels.ref.
+policy_grid_scan``. No VJP is defined — gradient users (twin calibration)
+pin the reference path, which is the same branchless math.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_LANES = 128   # scenario block on the vector lanes
+DEFAULT_CHUNK = 546   # 8736-hour year -> 16 time chunks
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _policy_scan_kernel(loads_ref, params_ref, onehot_ref,
+                        proc_ref, queue_ref, lat_ref, cost_ref, drop_ref,
+                        carry_end_ref, carry_ref, *,
+                        step, dt: float, chunk: int, num_chunks: int,
+                        carry_dim: int):
+    """Grid: (scenario blocks, time chunks) — time minor; carry in scratch."""
+    c = pl.program_id(1)
+    lanes = loads_ref.shape[1]
+
+    @pl.when(c == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros((lanes, carry_dim), jnp.float32)
+
+    loads = loads_ref[...]            # [chunk, LANES]
+    params = params_ref[...]          # [LANES, PARAM_DIM]
+    onehot = onehot_ref[...]          # [LANES, P]
+    dt_f = jnp.float32(dt)
+
+    def bin_step(t, state):
+        carry, proc, queue, lat, cost, drop = state
+        carry, (p, q, l, co, dr) = step(carry, loads[t], params, onehot,
+                                        dt_f)
+        upd = functools.partial(jax.lax.dynamic_update_slice_in_dim,
+                                start_index=t, axis=0)
+        return (carry, upd(proc, p[None]), upd(queue, q[None]),
+                upd(lat, l[None]), upd(cost, co[None]),
+                upd(drop, dr[None]))
+
+    zeros = lambda: jnp.zeros((chunk, lanes), jnp.float32)  # noqa: E731
+    carry, proc, queue, lat, cost, drop = jax.lax.fori_loop(
+        0, chunk, bin_step,
+        (carry_ref[...], zeros(), zeros(), zeros(), zeros(), zeros()))
+    carry_ref[...] = carry
+    proc_ref[...] = proc
+    queue_ref[...] = queue
+    lat_ref[...] = lat
+    cost_ref[...] = cost
+    drop_ref[...] = drop
+
+    @pl.when(c == num_chunks - 1)
+    def _fin():
+        carry_end_ref[...] = carry
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("dt_hours", "version", "lanes", "chunk",
+                                    "interpret"))
+def _policy_scan(loads_t: jnp.ndarray, params: jnp.ndarray,
+                 onehot: jnp.ndarray, *, dt_hours: float, version: int,
+                 lanes: int, chunk: int, interpret: bool):
+    """loads_t [T, Npad] (scenarios minor/padded), params [Npad, D],
+    onehot [Npad, P]; ``version`` is the policy-registry version (static)
+    so late policy registration retraces the branch blend."""
+    from repro.core.twin import CARRY_DIM, lane_policy_step
+    del version
+    t_bins, npad = loads_t.shape
+    nb, nc = npad // lanes, t_bins // chunk
+
+    kernel = functools.partial(
+        _policy_scan_kernel, step=lane_policy_step, dt=float(dt_hours),
+        chunk=chunk, num_chunks=nc, carry_dim=CARRY_DIM)
+    series = jax.ShapeDtypeStruct((t_bins, npad), jnp.float32)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(nb, nc),
+        in_specs=[
+            pl.BlockSpec((chunk, lanes), lambda i, c: (c, i)),
+            pl.BlockSpec((lanes, params.shape[1]), lambda i, c: (i, 0)),
+            pl.BlockSpec((lanes, onehot.shape[1]), lambda i, c: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((chunk, lanes), lambda i, c: (c, i)),
+            pl.BlockSpec((chunk, lanes), lambda i, c: (c, i)),
+            pl.BlockSpec((chunk, lanes), lambda i, c: (c, i)),
+            pl.BlockSpec((chunk, lanes), lambda i, c: (c, i)),
+            pl.BlockSpec((chunk, lanes), lambda i, c: (c, i)),
+            pl.BlockSpec((lanes, CARRY_DIM), lambda i, c: (i, 0)),
+        ],
+        out_shape=[series, series, series, series, series,
+                   jax.ShapeDtypeStruct((npad, CARRY_DIM), jnp.float32)],
+        scratch_shapes=[_vmem((lanes, CARRY_DIM), jnp.float32)],
+        interpret=interpret,
+    )(loads_t, params, onehot)
+    return outs
+
+
+def policy_grid_scan(loads: jnp.ndarray, params: jnp.ndarray,
+                     onehot: jnp.ndarray, dt_hours: float = 1.0, *,
+                     lanes: int = DEFAULT_LANES, chunk: int = DEFAULT_CHUNK,
+                     interpret: bool = True):
+    """Fused scenario-grid scan; same contract as ``ref.policy_grid_scan``.
+
+    loads [N, T]; params [N, PARAM_DIM]; onehot [N, P]. The scenario axis
+    is padded up to a LANES multiple (padded lanes carry an all-zero
+    policy mask, so they blend to zeros) and transposed scenario-minor for
+    the kernel; outputs come back truncated to N. Returns
+    (carry_end [N, CARRY_DIM], (processed, queue, latency, cost, dropped))
+    with each series [N, T].
+    """
+    from repro.core.twin import registry_version
+    n, t_bins = loads.shape
+    lanes = min(lanes, _round_up(max(n, 1), 8))
+    npad = _round_up(max(n, 1), lanes)
+    if t_bins % chunk:
+        chunk = t_bins
+    loads_t = jnp.zeros((t_bins, npad), jnp.float32)
+    loads_t = loads_t.at[:, :n].set(jnp.asarray(loads, jnp.float32).T)
+    pad = lambda a: jnp.zeros((npad, a.shape[1]), jnp.float32).at[:n].set(  # noqa: E731
+        jnp.asarray(a, jnp.float32))
+    proc, queue, lat, cost, drop, carry_end = _policy_scan(
+        loads_t, pad(params), pad(onehot), dt_hours=float(dt_hours),
+        version=registry_version(), lanes=lanes, chunk=chunk,
+        interpret=interpret)
+    series = tuple(o[:, :n].T for o in (proc, queue, lat, cost, drop))
+    return carry_end[:n], series

@@ -96,6 +96,51 @@ def sdpa_blocked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return out.reshape(b, sq, h, dv).astype(q.dtype)
 
 
+def policy_grid_scan(loads: jnp.ndarray, params: jnp.ndarray,
+                     onehot: jnp.ndarray = None, dt_hours=1.0,
+                     policy_index=None):
+    """TwinPolicy scenario-grid scan, lane form — the semantics of the
+    Pallas kernel (``kernels/policy_scan.py``).
+
+    loads: [N, T] records/bin; params: [N, PARAM_DIM]. One ``lax.scan``
+    over the T bins steps ALL N scenarios at once through the
+    lane-vectorized policy steps. The branch selector is exactly one of:
+
+    * ``onehot`` [N, P] (see ``core.twin.policy_onehot``) — mixed-policy
+      grid: every registered policy evaluated on every lane and blended
+      by the mask (``core.twin.lane_policy_step``), which is what
+      ``vmap`` of the ``lax.switch`` step lowers to;
+    * ``policy_index`` (scalar, may be traced) — a uniform-policy lane
+      block (e.g. the K restarts of one calibration fit): a single
+      ``lax.switch`` picks that policy's lane step per bin, so only one
+      branch executes at runtime instead of all P.
+
+    Pure jnp and differentiable w.r.t. ``params`` (the Pallas kernel has
+    no VJP, so gradient users — twin calibration — pin this path).
+    Returns (carry_end [N, CARRY_DIM], (processed, queue, latency, cost,
+    dropped)) with each series [N, T].
+    """
+    from repro.core.twin import (CARRY_DIM, lane_branches,  # late: avoid a
+                                 lane_policy_step)  # kernels<->core cycle
+    if (onehot is None) == (policy_index is None):
+        raise ValueError("pass exactly one of onehot= (mixed grid) or "
+                         "policy_index= (uniform lane block)")
+    n = loads.shape[0]
+    dt = jnp.asarray(dt_hours, jnp.float32)
+
+    if onehot is not None:
+        def bin_step(carry, arrive):
+            return lane_policy_step(carry, arrive, params, onehot, dt)
+    else:
+        def bin_step(carry, arrive):
+            return jax.lax.switch(policy_index, lane_branches(), carry,
+                                  arrive, params, dt)
+
+    carry_end, outs = jax.lax.scan(
+        bin_step, jnp.zeros((n, CARRY_DIM), jnp.float32), loads.T)
+    return carry_end, tuple(o.T for o in outs)
+
+
 def rwkv6_scan(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                w: jnp.ndarray, u: jnp.ndarray,
                state: jnp.ndarray | None = None):

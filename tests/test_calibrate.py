@@ -450,3 +450,73 @@ def test_fit_spec_freeze_and_fixed_values():
         fit_spec("fifo", freeze=("bogus",))
     with pytest.raises(ValueError):
         fit_spec("fifo", init=SHED_TRUTH)
+
+
+# ---------------------------------------------------------------------------
+# OTel span importer (ROADMAP "Trace importers": smallest useful slice)
+# ---------------------------------------------------------------------------
+
+def test_from_otel_spans_bins_arrivals_completions_and_errors():
+    spans = [
+        {"start": 1000.0, "end": 1002.0},                    # bin 0 -> 0
+        {"start": 1001.0, "end": 1065.0, "records": 3},      # bin 0 -> 1
+        {"start": 1070.0, "end": 1075.0, "status": "ERROR"},  # bin 1, drop
+        {"start": 1130.0, "end": 1150.0, "records": 2},      # bin 2 -> 2
+    ]
+    tr = ObservedTrace.from_otel_spans(spans, bin_seconds=60.0, name="t",
+                                       usd_per_hour=0.36)
+    assert tr.num_bins == 3 and tr.bin_hours == pytest.approx(1 / 60.0)
+    np.testing.assert_allclose(tr.arrivals, [4.0, 1.0, 2.0])
+    np.testing.assert_allclose(tr.processed, [1.0, 3.0, 2.0])
+    np.testing.assert_allclose(tr.dropped, [0.0, 1.0, 0.0])
+    # record-weighted: bin1 = 64s (3 records), bin2 = 20s (2 records)
+    np.testing.assert_allclose(tr.latency_s, [2.0, 64.0, 20.0])
+    np.testing.assert_allclose(tr.cost_usd, 0.36 / 60.0)
+
+
+def test_from_otel_spans_otlp_field_names_and_status_codes():
+    ns = 1e9
+    # every OTLP status encoding an export can produce: numeric code,
+    # protobuf-JSON enum NAME in the dict, and bare strings
+    for status in ({"code": 2}, {"code": "STATUS_CODE_ERROR"}, "ERROR",
+                   "STATUS_CODE_ERROR", 2, "2"):
+        spans = [
+            {"start_time_unix_nano": 5_000 * ns,
+             "end_time_unix_nano": 5_010 * ns},
+            {"start_time_unix_nano": 5_020 * ns,
+             "end_time_unix_nano": 5_030 * ns, "status": status},
+        ]
+        tr = ObservedTrace.from_otel_spans(spans, bin_seconds=30.0)
+        np.testing.assert_allclose(tr.arrivals, [2.0])
+        np.testing.assert_allclose(tr.processed, [1.0], err_msg=str(status))
+        np.testing.assert_allclose(tr.dropped, [1.0], err_msg=str(status))
+    # and OK forms stay processed
+    for status in ("OK", {"code": 0}, {"code": "STATUS_CODE_OK"}, 0):
+        tr = ObservedTrace.from_otel_spans(
+            [{"start": 0.0, "end": 1.0, "status": status}], bin_seconds=30.0)
+        np.testing.assert_allclose(tr.processed, [1.0], err_msg=str(status))
+        np.testing.assert_allclose(tr.dropped, [0.0], err_msg=str(status))
+
+
+def test_from_otel_spans_feeds_calibration():
+    """The importer's trace drops straight into repro.calibrate.fit."""
+    rng = np.random.default_rng(3)
+    spans = []
+    t = 0.0
+    for _ in range(400):
+        t += float(rng.exponential(2.0))
+        spans.append({"start": t, "end": t + float(rng.uniform(0.2, 1.0))})
+    tr = ObservedTrace.from_otel_spans(spans, bin_seconds=120.0)
+    res = fit(tr, "fifo", restarts=4, steps=60, seed=0,
+              weights={"cost": 0.0})      # no cost telemetry in the spans
+    assert np.isfinite(res.loss)
+    assert res.twin.policy == "fifo"
+
+
+def test_from_otel_spans_rejects_bad_input():
+    with pytest.raises(ValueError):
+        ObservedTrace.from_otel_spans([])
+    with pytest.raises(KeyError):
+        ObservedTrace.from_otel_spans([{"end": 1.0}])
+    with pytest.raises(ValueError):
+        ObservedTrace.from_otel_spans([{"start": 2.0, "end": 1.0}])
