@@ -6,13 +6,17 @@
 #   make bench-grid        looped-vs-vmapped what-if grid microbenchmark only
 #   make grid-bench-pallas XLA vs Pallas grid backends at 64/256/1024
 #                          scenarios (writes BENCH_grid_pallas.json)
+#   make grid-bench-stream series vs streaming-aggregate simulate_grid at
+#                          1024/8192/65536 full-year scenarios
+#                          (writes BENCH_grid_stream.json)
 #   make calibrate-bench   multi-start twin-fit wall-clock vs K
 #                          (writes BENCH_calibrate.json)
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-deps bench bench-grid grid-bench-pallas calibrate-bench
+.PHONY: test test-deps bench bench-grid grid-bench-pallas \
+        grid-bench-stream calibrate-bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -28,6 +32,9 @@ bench-grid:
 
 grid-bench-pallas:
 	$(PYTHON) -m benchmarks.run grid-pallas
+
+grid-bench-stream:
+	$(PYTHON) -m benchmarks.run grid-stream
 
 calibrate-bench:
 	$(PYTHON) -m benchmarks.run calibrate

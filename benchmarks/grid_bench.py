@@ -1,4 +1,5 @@
-"""What-if grid microbenchmarks: looped vs vmapped, and XLA vs Pallas.
+"""What-if grid microbenchmarks: looped vs vmapped, XLA vs Pallas, and
+series vs streaming-aggregate.
 
 The seed ran ``run_grid`` as a Python loop of one jitted scan per scenario;
 the TwinPolicy engine stacks the whole (twin x traffic) grid and runs it as
@@ -12,11 +13,23 @@ XLA vmapped ``lax.switch`` scan vs the fused Pallas scenario-grid kernel
 lanes) — at N in {64, 256, 1024} scenarios, and writes
 ``BENCH_grid_pallas.json``.
 
+``bench_stream`` times the two result *modes* end to end through
+``simulate_grid`` — the [N, T]-series path (device series + f64 host
+conversion + per-scenario numpy summaries) vs the streaming-aggregate
+path (stats folded into the scan carry, chunked ``lax.map`` dispatch, one
+vectorized summary pass) — at N in {1024, 8192, 65536} full-year
+scenarios, and writes ``BENCH_grid_stream.json``. The series path only
+runs where its five [N, 8736] f32 + f64 buffers fit comfortably
+(N <= SERIES_MAX_N); the aggregate path streams every size through
+scenario blocks, so 65536 scenarios complete on this CPU container.
+
   PYTHONPATH=src python benchmarks/grid_bench.py           # looped/vmapped
   PYTHONPATH=src python benchmarks/grid_bench.py pallas    # backend sweep
+  PYTHONPATH=src python benchmarks/grid_bench.py stream    # series vs agg
   PYTHONPATH=src python -m benchmarks.run grid             # looped/vmapped
   PYTHONPATH=src python -m benchmarks.run grid-pallas      # backend sweep
-  make grid-bench-pallas
+  PYTHONPATH=src python -m benchmarks.run grid-stream      # series vs agg
+  make grid-bench-pallas / make grid-bench-stream
 """
 from __future__ import annotations
 
@@ -29,7 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.simulate import _grid_scan, _grid_scan_xla
+from repro.core.simulate import _grid_scan, _grid_scan_xla, simulate_grid
+from repro.core.slo import SLO
 from repro.core.traffic import TrafficModel
 from repro.core.twin import (QuickscalingTwin, SimpleTwin, make_twin,
                              policy_onehot, registry_version)
@@ -39,8 +53,13 @@ N_TWINS = 8
 N_TRAFFICS = 8
 REPEATS = 5
 PALLAS_SIZES = (64, 256, 1024)
+STREAM_SIZES = (1024, 8192, 65536)
+SERIES_MAX_N = 1024        # five [N, 8736] f32+f64 series stay <1 GB here
+STREAM_BLOCK = 4096        # aggregate-mode lax.map scenario block
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_grid_pallas.json"
+STREAM_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_grid_stream.json"
 
 
 def _grid(n_twins: int = N_TWINS, n_traffics: int = N_TRAFFICS):
@@ -169,6 +188,73 @@ def bench_pallas(sizes=PALLAS_SIZES, repeats: int = REPEATS) -> Dict:
     return out
 
 
+def _stream_grid(n: int, n_traffics: int = 16):
+    """n scenarios as twins + a [n_traffics, 8736] load matrix + index map
+    (the O(K*T + N) host encoding ``whatif.run_grid`` uses) — the 8 bench
+    twins cycled over growth-swept traffic forecasts."""
+    twins8, _ = _grid(n_twins=8, n_traffics=1)
+    twins = [twins8[i % 8] for i in range(n)]
+    matrix = np.stack([TrafficModel.honda_default(f"g{g:.3f}", R=3.5,
+                                                  G=float(g)).hourly_loads()
+                       for g in np.linspace(1.0, 1.7, n_traffics)]).astype(
+        np.float32)
+    index = (np.arange(n, dtype=np.int32) // 8) % n_traffics
+    return twins, matrix, index
+
+
+def bench_stream(sizes=STREAM_SIZES, repeats: int = 3) -> Dict:
+    """Series vs streaming-aggregate ``simulate_grid``, end to end.
+
+    Both modes run the same XLA switch-scan policy math over the same
+    (load matrix, index) grid with a 4h latency SLO; what differs is
+    everything around it — five [N, 8736] output series + f64 conversion
+    + a per-scenario numpy summary loop, vs O(N) in-carry aggregates +
+    one vectorized summary pass. Aggregate wall-clock must come out
+    >= 2x faster at N = 1024 (the acceptance bar); scalar outputs are
+    asserted bit-identical before timing wherever both modes run.
+    """
+    slo = SLO(limit_s=4 * 3600, met_fraction=0.95)
+    rows = []
+    for n in sizes:
+        twins, matrix, index = _stream_grid(n)
+        block = min(STREAM_BLOCK, n)
+
+        def agg():
+            return simulate_grid(twins, slo=slo, return_series=False,
+                                 load_matrix=matrix, load_index=index,
+                                 scenario_block=block)
+
+        row = {"scenarios": n, "hours": int(matrix.shape[1]),
+               "scenario_block": block}
+        sims_a = agg()                          # warm + parity sample
+        agg_ms = _time_best(agg, repeats)
+        row["aggregate_ms"] = round(agg_ms, 1)
+        if n <= SERIES_MAX_N:
+            def series():
+                return simulate_grid(twins, slo=slo, return_series=True,
+                                     load_matrix=matrix, load_index=index)
+
+            sims_s = series()
+            for s, a in zip(sims_s, sims_a):
+                assert s.total_cost_usd == a.total_cost_usd, s.name
+                assert s.max_throughput_rph == a.max_throughput_rph
+                assert s.slo_met == a.slo_met
+            series_ms = _time_best(series, repeats)
+            row["series_ms"] = round(series_ms, 1)
+            row["agg_speedup"] = round(series_ms / agg_ms, 2)
+        else:
+            row["series_ms"] = None             # would not fit sensibly
+            row["agg_speedup"] = None
+        rows.append(row)
+        del sims_a
+    out = {"device": jax.devices()[0].platform, "repeats": repeats,
+           "series_max_n": SERIES_MAX_N, "slo": "latency<=4h@95%",
+           "parity": "scalar outputs bit-identical where both modes ran",
+           "sizes": rows}
+    STREAM_JSON.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    return out
+
+
 def main() -> List[str]:
     r = bench()
     return [f"grid/looped_{r['scenarios']}x,{r['looped_ms'] * 1e3:.0f},"
@@ -190,9 +276,27 @@ def main_pallas() -> List[str]:
     return lines
 
 
+def main_stream() -> List[str]:
+    r = bench_stream()
+    lines = []
+    for row in r["sizes"]:
+        n = row["scenarios"]
+        lines.append(f"grid/agg_{n}x,{row['aggregate_ms'] * 1e3:.0f},"
+                     f"streaming-aggregate;block={row['scenario_block']}")
+        if row["series_ms"] is not None:
+            lines.append(f"grid/series_{n}x,{row['series_ms'] * 1e3:.0f},"
+                         f"full-series;agg_speedup={row['agg_speedup']}x")
+        else:
+            lines.append(f"grid/series_{n}x,0,skipped;over-series-budget")
+    lines.append(f"grid/stream_json,0,wrote={STREAM_JSON.name}")
+    return lines
+
+
 if __name__ == "__main__":
     import sys
     if "pallas" in sys.argv[1:]:
         print(json.dumps(bench_pallas(), indent=2, sort_keys=True))
+    elif "stream" in sys.argv[1:]:
+        print(json.dumps(bench_stream(), indent=2, sort_keys=True))
     else:
         print(json.dumps(bench(), indent=2, sort_keys=True))

@@ -8,9 +8,11 @@ Tables map to the paper: table1 (twin parameters), table2 (year
 simulations), table3 (engineering comparison), table4 (retention costs),
 plus the roofline table over the assigned (arch x shape) grid, a core
 micro-benchmark of the wind-tunnel primitives, the twin-calibration
-fit benchmark (which also writes BENCH_calibrate.json), and the
+fit benchmark (which also writes BENCH_calibrate.json), the
 grid-backend sweep ``grid-pallas`` — XLA vs Pallas-interpret at
-64/256/1024 scenarios (writes BENCH_grid_pallas.json).
+64/256/1024 scenarios (writes BENCH_grid_pallas.json) — and the
+streaming sweep ``grid-stream`` — series vs aggregate ``simulate_grid``
+at 1024/8192/65536 full-year scenarios (writes BENCH_grid_stream.json).
 """
 from __future__ import annotations
 
@@ -52,6 +54,8 @@ TABLES = {
                                fromlist=["main"]).main(),
     "grid-pallas": lambda: __import__("benchmarks.grid_bench",
                                       fromlist=["main_pallas"]).main_pallas(),
+    "grid-stream": lambda: __import__("benchmarks.grid_bench",
+                                      fromlist=["main_stream"]).main_stream(),
     "calibrate": lambda: __import__("benchmarks.calibrate_bench",
                                     fromlist=["main"]).main(),
     "roofline": lambda: __import__("benchmarks.roofline_bench",

@@ -24,6 +24,11 @@ latency, dropped records and cost over a uniform time grid of
   spans (plain list of dicts with start/end/status; no OTel SDK
   dependency), so a real PlantD deployment's trace export feeds
   ``repro.calibrate`` directly (ROADMAP "Trace importers").
+* ``ObservedTrace.from_prometheus`` — from Prometheus range-query
+  result matrices (``/api/v1/query_range`` JSON, no client dependency):
+  rate queries become per-bin record counts, a latency gauge rides
+  along, multiple label sets are summed — the metrics-side sibling of
+  the span importer.
 """
 from __future__ import annotations
 
@@ -221,6 +226,111 @@ class ObservedTrace:
         return cls(name=name, bin_hours=bin_hours, arrivals=arrivals,
                    processed=processed, latency_s=latency, dropped=dropped,
                    cost_usd=np.full(nbins, usd_per_hour * bin_hours))
+
+    @classmethod
+    def from_prometheus(cls, responses: Dict, bin_seconds: float = 60.0,
+                        name: str = "prometheus",
+                        usd_per_hour: float = 0.0) -> "ObservedTrace":
+        """Bin Prometheus range-query responses into a calibration trace.
+
+        ``responses`` maps series keys to parsed range-query JSON
+        (``/api/v1/query_range``) — either the full ``{"status", "data"}``
+        envelope, the ``data`` object (``{"resultType": "matrix",
+        "result": [...]}``), or the bare ``result`` list. Keys:
+
+        * ``"arrivals"`` (required) and ``"processed"`` (required) —
+          rates in records/second (the usual ``rate(counter[...])``
+          query); per-bin records = rate at the bin center x bin width;
+        * ``"dropped"`` — optional records/second rate (default zeros);
+        * ``"latency"`` — optional gauge in seconds (e.g. a summary/
+          histogram mean), default zeros;
+        * ``"cost"`` — optional rate in USD/hour; omitted, the cost
+          series is flat at ``usd_per_hour``.
+
+        Sample values may be strings (Prometheus returns them quoted).
+        Each response may hold several result entries (one per label
+        set, e.g. per instance): rate-like series are SUMMED across
+        entries, the latency gauge is averaged. Samples are linearly
+        interpolated onto the common bin-center grid (clamped at the
+        ends), so differing query steps and ranges line up; times are
+        rebased to the earliest sample. This closes the ROADMAP
+        "trace importers" item next to ``from_otel_spans``.
+        """
+        rate_keys = ("arrivals", "processed", "dropped", "cost")
+        known = set(rate_keys) | {"latency"}
+        unknown = set(responses) - known
+        if unknown:
+            raise ValueError(f"unknown series keys {sorted(unknown)}; "
+                             f"expected a subset of {sorted(known)}")
+        for req in ("arrivals", "processed"):
+            if req not in responses:
+                raise ValueError(f"from_prometheus needs an {req!r} "
+                                 f"range-query response")
+
+        def _entries(resp, key):
+            if isinstance(resp, dict) and "status" in resp:
+                # real Prometheus error envelopes carry NO 'data' key,
+                # so check the status before unwrapping anything
+                if resp.get("status") != "success":
+                    raise ValueError(
+                        f"{key}: Prometheus query failed: "
+                        f"{resp.get('error', resp.get('status'))!r}")
+                resp = resp.get("data", {})
+            elif isinstance(resp, dict) and "data" in resp:
+                resp = resp["data"]
+            if isinstance(resp, dict) and "result" in resp:
+                rtype = resp.get("resultType", "matrix")
+                if rtype != "matrix":
+                    raise ValueError(
+                        f"{key}: need a range-query matrix result, got "
+                        f"resultType {rtype!r} (instant queries have no "
+                        f"time axis to bin)")
+                resp = resp["result"]
+            if not isinstance(resp, (list, tuple)):
+                raise ValueError(f"{key}: unrecognized response shape "
+                                 f"{type(resp).__name__}")
+            series = []
+            for entry in resp:
+                values = entry.get("values") if isinstance(entry, dict) \
+                    else None
+                if not values:
+                    continue
+                ts = np.array([float(t) for t, _ in values])
+                vs = np.array([float(v) for _, v in values])
+                order = np.argsort(ts, kind="stable")
+                series.append((ts[order], vs[order]))
+            return series
+
+        parsed = {k: _entries(r, k) for k, r in responses.items()}
+        for key, series in parsed.items():
+            # a PROVIDED series with zero samples would silently bin to
+            # zeros (and, for cost, shadow the usd_per_hour fallback) —
+            # fitting a twin to a pipeline that apparently did nothing
+            if not series:
+                raise ValueError(f"{key} response holds no samples")
+        all_ts = np.concatenate([ts for ser in parsed.values()
+                                 for ts, _ in ser])
+        t0, t1 = float(all_ts.min()), float(all_ts.max())
+        nbins = max(1, int(math.ceil((t1 - t0) / bin_seconds)))
+        centers = t0 + (np.arange(nbins) + 0.5) * bin_seconds
+
+        def _sampled(key, combine_mean=False):
+            series = parsed.get(key) or []
+            if not series:
+                return np.zeros(nbins)
+            interped = [np.interp(centers, ts, vs) for ts, vs in series]
+            out = np.sum(interped, axis=0)
+            return out / len(interped) if combine_mean else out
+
+        bin_hours = bin_seconds / 3600.0
+        cost = (_sampled("cost") * bin_hours if "cost" in parsed
+                else np.full(nbins, usd_per_hour * bin_hours))
+        return cls(name=name, bin_hours=bin_hours,
+                   arrivals=_sampled("arrivals") * bin_seconds,
+                   processed=_sampled("processed") * bin_seconds,
+                   latency_s=_sampled("latency", combine_mean=True),
+                   dropped=_sampled("dropped") * bin_seconds,
+                   cost_usd=cost)
 
     @classmethod
     def from_experiment(cls, result, bin_s: float = 1.0,

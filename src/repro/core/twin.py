@@ -49,6 +49,13 @@ policy is evaluated on every lane and the results blended with the
 lowers to, and the form the Pallas kernel scans over all T bins with
 scenarios on the vector lanes.
 
+Next to the policy steps live the *streaming-aggregate hooks* (AGG_*
+constants, ``update_agg_scalars`` / ``lane_update_aggregate`` /
+``np_latency_histogram``): the carry extension that lets the grid
+backends fold the Table II summary statistics into the scan instead of
+materializing [N, T] series — see the section comment below and
+``core/simulate.py``.
+
 Each registered policy also declares *calibration metadata*: a per-parameter
 ``bounds`` box, the subset optimized in log-space (``log_params``), and the
 params ``frozen`` by default during gradient fitting (operator-chosen knobs
@@ -88,6 +95,7 @@ import inspect
 from dataclasses import dataclass, replace
 from typing import Callable, Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -299,6 +307,225 @@ def lane_policy_step(carry, arrive, params, onehot, dt):
 
 def registry_version() -> int:
     return _VERSION
+
+
+# ---------------------------------------------------------------------------
+# Streaming aggregates (the O(N)-memory grid backend's carry extension)
+# ---------------------------------------------------------------------------
+#
+# The what-if tables (core/whatif.table2_rows) consume only per-scenario
+# *scalars*, so the streaming grid backend folds the Table II statistics
+# into the scan carry instead of materializing five [N, T] series:
+#
+# * running sums of processed / cost / dropped / latency*load / load and
+#   the load-weighted SLO-ok mass, each carried as a twice-compensated
+#   (sum, comp, comp2) f32 triple (cascaded Neumaier: the exact two-sum
+#   residual stream is itself compensated) — recombined in f64 on the
+#   host the triple reproduces numpy's f64 series sum bit for bit at
+#   year-grid magnitudes, so aggregate totals match the series-path
+#   ``_summarise`` exactly;
+# * the per-bin max throughput and the count of SLO-ok bins (exact in f32);
+# * a fixed-width load-weighted latency histogram over AGG_HIST_BINS
+#   quarter-octave buckets — the device-side replacement for the numpy
+#   sort/cumsum median in ``_summarise`` (quantiles read off the bucket
+#   CDF are exact to one bucket width, ``AGG_HIST_W`` decades). Bucket
+#   keys come straight from the f32 exponent + top mantissa bits
+#   (``_hist_bucket`` / ``np_hist_bucket``: bitcast, shift, clip — no
+#   transcendentals), so every backend computes the identical integer
+#   bucket for every latency value.
+#
+# In the scan the aggregate state is an UNPACKED pytree (a tuple of
+# per-statistic arrays, ``init_aggregate``) rather than one packed
+# [AGG_DIM] vector: per-bin updates are then pure elementwise arithmetic
+# with no gather/stack/update-slice in the hot loop (~5x on the CPU
+# backend). ``pack_aggregate`` flattens the state into the [.., AGG_DIM]
+# slot layout once per scan (or per Pallas time chunk, where the packed
+# form is what persists in VMEM scratch — ``unpack_aggregate`` restores
+# the pytree at chunk entry).
+#
+# The histogram has two backend-appropriate realizations that perform
+# the same per-bin additions:
+#
+# * ``lane_update_aggregate`` — the branchless lane form the Pallas
+#   kernel (and the jnp lane oracle) runs: a masked compare-add over the
+#   bucket axis, resident in VMEM scratch, O(N) end to end;
+# * the XLA switch-scan backend keeps only the scalar statistics in the
+#   scan carry, stages the per-bin latencies of one scenario block as
+#   scan outputs, and bins them load-weighted with ``np_latency_
+#   histogram`` (one ``np.bincount`` per block behind ``jax.pure_
+#   callback``) — on the CPU backend a per-step [N, BINS] carry costs
+#   ~0.5 s per 1k scenarios in scan double-buffering alone, while the
+#   staged panel + bincount is ~15x cheaper and keeps the dispatch's
+#   RETURNED pytree O(N) (the panel is a block-bounded transient, the
+#   same working-set class as the Pallas kernel's HBM->VMEM streaming).
+
+AGG_HIST_BINS = 152            # quarter-octave latency buckets
+#: smallest resolvable latency: 2^-10 s ~ 0.98 ms (bucket 0 clips below)
+AGG_HIST_MIN_EXP = -10
+AGG_HIST_MIN = float(2.0 ** AGG_HIST_MIN_EXP)
+#: (biased exponent | 2-bit mantissa) key of AGG_HIST_MIN — bucket 0
+_AGG_HIST_KEY0 = (127 + AGG_HIST_MIN_EXP) << 2
+#: bucket width in decades: a quarter octave (top edge 2^28 s ~ 8.5 yr)
+AGG_HIST_W = float(np.log10(2.0) / 4.0)
+
+# scalar slot layout: (sum, comp, comp2) triples first, then exact slots
+A_PROC = 0                     # sum of processed records
+A_COST = 3                     # sum of cost_usd
+A_DROP = 6                     # sum of dropped records
+A_LATW = 9                     # sum of latency * load (record-weighted)
+A_LOAD = 12                    # sum of load
+A_OKW = 15                     # sum of load in SLO-ok bins
+A_OKH = 18                     # count of SLO-ok bins
+A_MAXP = 19                    # max processed per bin
+AGG_SCALARS = 20
+AGG_DIM = AGG_SCALARS + AGG_HIST_BINS
+
+#: SLO metric selector for the aggregate scan (a static trace argument)
+AGG_SLO_LATENCY, AGG_SLO_DROP_RATE = 0, 1
+
+
+def aggregate_hist_edges() -> np.ndarray:
+    """[AGG_HIST_BINS + 1] bucket edges in seconds (quarter-octave)."""
+    return np.power(2.0, AGG_HIST_MIN_EXP
+                    + np.arange(AGG_HIST_BINS + 1) / 4.0)
+
+
+def aggregate_hist_centers() -> np.ndarray:
+    """[AGG_HIST_BINS] geometric bucket centers in seconds — the
+    representative values quantiles read off the histogram CDF."""
+    return np.power(2.0, AGG_HIST_MIN_EXP
+                    + (np.arange(AGG_HIST_BINS) + 0.5) / 4.0)
+
+
+def _two_sum(a, b):
+    """Branch-free Knuth two-sum: (fl(a+b), exact residual)."""
+    s = a + b
+    bb = s - a
+    return s, (a - (s - bb)) + (b - bb)
+
+
+def _neumaier2(s, c, cc, x):
+    """One twice-compensated summation step: (sum, comp, comp2) += x.
+    The per-step two-sum residual is EXACT; its running sum is itself
+    compensated into (c, cc), so ``s + c + cc`` recombined in f64 on the
+    host matches numpy's f64 sum of the same f32 terms bit for bit at
+    the magnitudes the year grids produce (verified against the series
+    path in tests/test_grid_aggregate.py)."""
+    s, e = _two_sum(s, x)
+    c, ee = _two_sum(c, e)
+    return s, c, cc + ee
+
+
+def _hist_bucket(latency):
+    """Bucket index on the fixed quarter-octave grid, from the f32 bit
+    pattern: (exponent | top 2 mantissa bits) rebased to AGG_HIST_MIN.
+    Integer-exact and backend-independent (``np_hist_bucket`` is the
+    bit-identical numpy twin)."""
+    lat = jnp.maximum(latency, jnp.float32(AGG_HIST_MIN))
+    bits = jax.lax.bitcast_convert_type(lat, jnp.int32)
+    return jnp.clip((bits >> 21) - _AGG_HIST_KEY0, 0, AGG_HIST_BINS - 1)
+
+
+def np_hist_bucket(latency: np.ndarray) -> np.ndarray:
+    """Numpy twin of ``_hist_bucket`` — same bits, same buckets (one
+    temporary, then in-place int ops: this sits on the streaming grid's
+    per-block hot path)."""
+    buf = np.maximum(np.ascontiguousarray(latency, np.float32),
+                     np.float32(AGG_HIST_MIN))
+    bits = buf.view(np.int32)
+    np.right_shift(bits, 21, out=bits)
+    bits -= _AGG_HIST_KEY0
+    np.clip(bits, 0, AGG_HIST_BINS - 1, out=bits)
+    return bits
+
+
+def np_latency_histogram(latency: np.ndarray,
+                         weights: np.ndarray) -> np.ndarray:
+    """[N, T] latencies + [N, T] weights -> [N, AGG_HIST_BINS] f32
+    load-weighted histogram (one ``np.bincount`` per scenario, f64
+    accumulation per row). The host half of the XLA aggregate backend."""
+    buckets = np_hist_bucket(latency)
+    n = buckets.shape[0]
+    out = np.empty((n, AGG_HIST_BINS), np.float32)
+    for i in range(n):
+        out[i] = np.bincount(buckets[i], weights=weights[i],
+                             minlength=AGG_HIST_BINS)
+    return out
+
+
+def init_agg_scalars(shape=()):
+    """Zeroed scalar-statistic state: (sums tuple[18], okh, maxp), every
+    leaf ``shape``-shaped (scalar under the vmapped switch path, [L] for
+    a lane block)."""
+    z = jnp.zeros(shape, jnp.float32)
+    return ((z,) * 18, z, z)
+
+
+def update_agg_scalars(state, arrive, outs, slo_limit, slo_mode):
+    """Fold one bin's step outputs into the scalar statistics (shared by
+    every backend; elementwise, shape-polymorphic). ``slo_limit`` (float)
+    and ``slo_mode`` (AGG_SLO_*) are static trace constants — pass
+    ``inf`` / latency when no SLO applies."""
+    sums, okh, maxp = state
+    processed, _queue, latency, cost, dropped = outs
+    if slo_mode == AGG_SLO_DROP_RATE:
+        val = dropped / jnp.maximum(arrive, jnp.float32(1e-9))
+    else:
+        val = latency
+    ok = (val <= jnp.float32(slo_limit)).astype(jnp.float32)
+    new = []
+    # term order IS the slot order: A_PROC, A_COST, A_DROP, A_LATW,
+    # A_LOAD, A_OKW (each a (sum, comp, comp2) triple)
+    for j, x in enumerate((processed, cost, dropped, latency * arrive,
+                           arrive, arrive * ok)):
+        new += _neumaier2(sums[3 * j], sums[3 * j + 1], sums[3 * j + 2], x)
+    return (tuple(new), okh + ok, jnp.maximum(maxp, processed))
+
+
+def pack_agg_scalars(state) -> jnp.ndarray:
+    """[..., AGG_SCALARS] slot layout of a scalar-statistic state."""
+    sums, okh, maxp = state
+    return jnp.stack(tuple(sums) + (okh, maxp), axis=-1)
+
+
+def init_aggregate(shape=()):
+    """Zeroed FULL aggregate state (scalars + histogram) for the lane
+    backends: (scalar state, hist [*shape, AGG_HIST_BINS])."""
+    return (init_agg_scalars(shape),
+            jnp.zeros(tuple(shape) + (AGG_HIST_BINS,), jnp.float32))
+
+
+def lane_update_aggregate(state, arrive, outs, slo_limit, slo_mode):
+    """Fold one bin into the full aggregate state — branchless lane form.
+
+    ``state`` = (scalar state with [L] leaves, hist [L, AGG_HIST_BINS]);
+    arrive [L]; outs five [L] vectors. Scalars via the shared
+    ``update_agg_scalars``; the histogram is a masked compare-add over
+    the bucket axis (no scatter), so the Pallas kernel runs it as
+    straight-line VPU vector math with everything resident in VMEM."""
+    scal, hist = state
+    scal = update_agg_scalars(scal, arrive, outs, slo_limit, slo_mode)
+    bucket = _hist_bucket(outs[2])
+    lanes = bucket.shape[0]
+    buckets = jax.lax.broadcasted_iota(jnp.int32, (lanes, AGG_HIST_BINS), 1)
+    hist = hist + jnp.where(bucket[:, None] == buckets, arrive[:, None],
+                            jnp.float32(0.0))
+    return (scal, hist)
+
+
+def pack_aggregate(state) -> jnp.ndarray:
+    """Flatten a full aggregate state into the [..., AGG_DIM] slot layout
+    (done once per scan / per Pallas time chunk, never in the bin loop)."""
+    scal, hist = state
+    return jnp.concatenate([pack_agg_scalars(scal), hist], axis=-1)
+
+
+def unpack_aggregate(packed: jnp.ndarray):
+    """Inverse of ``pack_aggregate`` — restores the pytree a Pallas
+    kernel's VMEM-resident [L, AGG_DIM] block carries between chunks."""
+    return ((tuple(packed[..., i] for i in range(18)),
+             packed[..., A_OKH], packed[..., A_MAXP]),
+            packed[..., AGG_SCALARS:])
 
 
 def policy_table_rows() -> List[Dict]:

@@ -1,14 +1,22 @@
 """What-if scenario engine (paper Sec. VII): run (twin x traffic) grids,
 compare retention policies, and render Table II / Table IV style results.
 
-``run_grid`` stacks every (traffic x twin) combination into one batch and
-executes it as a single scan dispatch via ``simulate_grid`` — policies may
-be mixed freely in one grid. The scan runs on whichever backend
-``core.simulate._grid_scan`` selects: the XLA vmapped ``lax.switch`` scan
-(default), or — under ``kernels.ops.pallas_mode()`` — the fused Pallas
-scenario-grid kernel with scenarios on the vector lanes, so 1k+-scenario
-sweeps of the Jablonski & Heltweg cost levers (autoscaling delay,
-overprovisioning, queue caps) stay one device program.
+``run_grid`` pairs every (traffic x twin) combination and executes the
+whole batch as a single scan dispatch via ``simulate_grid`` — policies may
+be mixed freely in one grid. Each traffic's [8736] load row is held ONCE
+in a [K, T] load matrix with an [N] index map (never duplicated per twin),
+so host memory is O(traffics*T + N), and by default the grid runs in
+**streaming-aggregate mode**: the Table II statistics come back as O(N)
+``GridSummary`` rows with no [N, T] series ever materialized —
+``table2_rows`` only consumes scalars, so 100k+-scenario sweeps of the
+Jablonski & Heltweg cost levers (autoscaling delay, overprovisioning,
+queue caps) cost O(N) memory. Pass ``return_series=True`` for the full
+per-bin ``SimulationResult`` series (plots, ``monthly_table``), and
+``scenario_block=`` to stream grids larger than device memory through in
+blocks. The scan runs on whichever backend ``core.simulate`` selects: the
+XLA vmapped ``lax.switch`` scan (default), or — under
+``kernels.ops.pallas_mode()`` — the fused Pallas scenario-grid kernels
+with scenarios on the vector lanes.
 
 ``calibrated_grid`` closes the paper's loop end to end: it gradient-fits
 one twin per requested policy to a measured ``ExperimentResult`` (or a
@@ -17,16 +25,19 @@ twins through the Table II grid — measurement in, scenario table out."""
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.cost import CostModel
-from repro.core.simulate import (SimulationResult, monthly_table,
-                                 simulate_grid, simulate_year)
+from repro.core.simulate import (GridSummary, SimulationResult,
+                                 monthly_table, simulate_grid, simulate_year)
 from repro.core.slo import SLO
 from repro.core.traffic import TrafficModel
 from repro.core.twin import Twin
+
+#: what grid runners return: per-bin series or streaming-aggregate scalars
+GridResult = Union[SimulationResult, GridSummary]
 
 
 @dataclass(frozen=True)
@@ -39,22 +50,28 @@ class Scenario:
 def run_grid(twins: Sequence[Twin], traffics: Sequence[TrafficModel],
              slo: Optional[SLO] = None,
              cost_model: Optional[CostModel] = None,
-             record_mb: float = 0.0) -> List[SimulationResult]:
+             record_mb: float = 0.0, *,
+             return_series: bool = False,
+             scenario_block: Optional[int] = None) -> List[GridResult]:
     """Every (traffic x twin) combination — the paper's Table II grid —
-    simulated in one vmapped scan over the stacked scenario batch."""
-    grid_twins: List[Twin] = []
-    grid_loads: List[np.ndarray] = []
-    names: List[str] = []
-    for tr in traffics:
-        loads = tr.hourly_loads()
-        for tw in twins:
-            grid_twins.append(tw)
-            grid_loads.append(loads)
-            names.append(f"{tr.name} {tw.name}")
-    if not grid_twins:
+    simulated in one dispatch over the (load matrix, index map) batch.
+
+    Aggregate mode by default (``GridSummary`` rows, O(N) memory end to
+    end); ``return_series=True`` restores the full ``SimulationResult``
+    series, bit-identical to the pre-streaming engine. ``scenario_block``
+    chunks huge aggregate grids through the device via ``lax.map``."""
+    if not twins or not traffics:
         return []
-    return simulate_grid(grid_twins, np.stack(grid_loads), names=names,
-                         slo=slo, cost_model=cost_model, record_mb=record_mb)
+    load_matrix = np.stack([tr.hourly_loads() for tr in traffics])
+    load_index = np.repeat(np.arange(len(traffics), dtype=np.int32),
+                           len(twins))
+    grid_twins = [tw for _ in traffics for tw in twins]
+    names = [f"{tr.name} {tw.name}" for tr in traffics for tw in twins]
+    return simulate_grid(grid_twins, names=names, slo=slo,
+                         cost_model=cost_model, record_mb=record_mb,
+                         return_series=return_series,
+                         load_matrix=load_matrix, load_index=load_index,
+                         scenario_block=scenario_block)
 
 
 def calibrated_grid(source, policies: Sequence[str],
@@ -63,7 +80,7 @@ def calibrated_grid(source, policies: Sequence[str],
                     cost_model: Optional[CostModel] = None,
                     record_mb: float = 0.0,
                     bin_s: float = 1.0,
-                    **fit_kwargs) -> List[SimulationResult]:
+                    **fit_kwargs) -> List[GridResult]:
     """Measured pipeline -> fitted twins -> Table II grid, in one call.
 
     ``source`` is an ``ExperimentResult`` or an
@@ -82,17 +99,32 @@ def calibrated_grid(source, policies: Sequence[str],
 def run_scenarios(scenarios: Sequence[Scenario],
                   slo: Optional[SLO] = None,
                   cost_model: Optional[CostModel] = None,
-                  record_mb: float = 0.0) -> List[SimulationResult]:
-    """Arbitrary named (twin, traffic) pairs, batched like ``run_grid``."""
+                  record_mb: float = 0.0, *,
+                  return_series: bool = False,
+                  scenario_block: Optional[int] = None) -> List[GridResult]:
+    """Arbitrary named (twin, traffic) pairs, batched like ``run_grid``
+    (aggregate mode by default; each scenario brings its own traffic, so
+    the load matrix deduplicates repeated traffic objects only)."""
     if not scenarios:
         return []
-    loads = np.stack([s.traffic.hourly_loads() for s in scenarios])
-    return simulate_grid([s.twin for s in scenarios], loads,
+    row_of: Dict[int, int] = {}
+    rows: List[np.ndarray] = []
+    load_index = np.empty(len(scenarios), np.int32)
+    for i, s in enumerate(scenarios):
+        key = id(s.traffic)
+        if key not in row_of:
+            row_of[key] = len(rows)
+            rows.append(s.traffic.hourly_loads())
+        load_index[i] = row_of[key]
+    return simulate_grid([s.twin for s in scenarios],
                          names=[s.name for s in scenarios], slo=slo,
-                         cost_model=cost_model, record_mb=record_mb)
+                         cost_model=cost_model, record_mb=record_mb,
+                         return_series=return_series,
+                         load_matrix=np.stack(rows), load_index=load_index,
+                         scenario_block=scenario_block)
 
 
-def table2_rows(sims: Sequence[SimulationResult]) -> List[Dict]:
+def table2_rows(sims: Sequence[GridResult]) -> List[Dict]:
     rows = []
     for s in sims:
         rows.append({

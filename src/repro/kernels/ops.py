@@ -42,6 +42,12 @@ def pallas_enabled() -> bool:
     return getattr(_state, "pallas", False)
 
 
+def interpret_enabled() -> bool:
+    """Whether Pallas kernels run in interpret mode (CPU) — the public
+    accessor callers outside this module must use."""
+    return getattr(_state, "interpret", True)
+
+
 @contextlib.contextmanager
 def pallas_mode(enable: bool = True, interpret: bool = True):
     prev = (getattr(_state, "pallas", False), getattr(_state, "interpret", True))
@@ -122,3 +128,29 @@ def policy_scan(loads, params, onehot=None, dt_hours=1.0, *,
             interpret=getattr(_state, "interpret", True))
     return ref.policy_grid_scan(loads, params, onehot, dt_hours,
                                 policy_index=policy_index)
+
+
+def policy_scan_agg(loads, params, onehot, dt_hours=1.0, *,
+                    slo_limit=float("inf"), slo_mode=0):
+    """Streaming-aggregate TwinPolicy grid scan: loads [N, T], params
+    [N, PARAM_DIM], onehot [N, P] -> (carry_end [N, CARRY_DIM],
+    agg [N, AGG_DIM]) — Table II statistics folded into the scan carry,
+    NO [N, T] series materialized on either backend.
+
+    Under ``use_pallas(True)`` this is the fused Pallas aggregate kernel
+    (``kernels/policy_scan.policy_grid_agg``: carry + aggregates resident
+    in VMEM scratch across time chunks); otherwise the pure-jnp lane
+    oracle ``ref.policy_grid_agg``. ``slo_limit`` / ``slo_mode`` are
+    static trace constants (``core.twin.AGG_SLO_*``; ``inf`` = no SLO).
+    Not differentiable on either path — calibration differentiates the
+    series scan, which keeps the full trace a loss needs anyway.
+    """
+    if pallas_enabled():
+        from repro.kernels import policy_scan as policy_kernel
+        return policy_kernel.policy_grid_agg(
+            loads, params, onehot, dt_hours, slo_limit=float(slo_limit),
+            slo_mode=int(slo_mode),
+            interpret=getattr(_state, "interpret", True))
+    return ref.policy_grid_agg(loads, params, onehot, dt_hours,
+                               slo_limit=float(slo_limit),
+                               slo_mode=int(slo_mode))

@@ -24,10 +24,21 @@ grid/BlockSpec structure is the TPU layout. ``chunk`` bounds VMEM: a
 8736-hour year into 16 chunks (~280 KB per array at 128 lanes). Horizons
 the chunk doesn't divide fall back to a single chunk.
 
-Dispatch through ``kernels.ops.policy_scan`` (the ``use_pallas`` /
-``pallas_mode`` switch); the pure-jnp oracle is ``kernels.ref.
-policy_grid_scan``. No VJP is defined — gradient users (twin calibration)
-pin the reference path, which is the same branchless math.
+``policy_grid_agg`` is the STREAMING-AGGREGATE variant of the same
+kernel (the O(N)-memory backend of ``simulate_grid(return_series=
+False)``): the Table II statistics — twice-compensated sums, per-bin
+max, SLO-ok counters and the quarter-octave load-weighted latency
+histogram (``core.twin.lane_update_aggregate``, masked compare-adds on
+the vector lanes) — ride in a second VMEM scratch block across time
+chunks, and the only HBM outputs are one [LANES, CARRY_DIM] carry row
+and one [LANES, AGG_DIM] aggregate row per scenario block. The five
+[N, T] series are never allocated.
+
+Dispatch through ``kernels.ops.policy_scan`` / ``ops.policy_scan_agg``
+(the ``use_pallas`` / ``pallas_mode`` switch); the pure-jnp oracles are
+``kernels.ref.policy_grid_scan`` / ``ref.policy_grid_agg``. No VJP is
+defined — gradient users (twin calibration) pin the reference path,
+which is the same branchless math.
 """
 from __future__ import annotations
 
@@ -134,6 +145,124 @@ def _policy_scan(loads_t: jnp.ndarray, params: jnp.ndarray,
         interpret=interpret,
     )(loads_t, params, onehot)
     return outs
+
+
+def _policy_agg_kernel(loads_ref, params_ref, onehot_ref,
+                       carry_end_ref, agg_out_ref, carry_ref, agg_ref, *,
+                       step, update, pack, unpack, dt: float,
+                       slo_limit: float, slo_mode: int, chunk: int,
+                       num_chunks: int, carry_dim: int, agg_dim: int):
+    """Streaming-aggregate variant: same (scenario blocks, time chunks)
+    grid, but BOTH the policy carry and the Table II aggregate state live
+    in VMEM scratch and persist across time chunks — no [chunk, LANES]
+    output block exists at all, so HBM traffic is the loads in and one
+    [LANES, AGG_DIM] row out per scenario block. Inside the bin loop the
+    aggregate state is the unpacked pytree (pure vector arithmetic); the
+    packed [LANES, AGG_DIM] form only exists at chunk boundaries, where
+    it round-trips through the scratch block."""
+    c = pl.program_id(1)
+    lanes = loads_ref.shape[1]
+
+    @pl.when(c == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros((lanes, carry_dim), jnp.float32)
+        agg_ref[...] = jnp.zeros((lanes, agg_dim), jnp.float32)
+
+    loads = loads_ref[...]            # [chunk, LANES]
+    params = params_ref[...]          # [LANES, PARAM_DIM]
+    onehot = onehot_ref[...]          # [LANES, P]
+    dt_f = jnp.float32(dt)
+
+    def bin_step(t, state):
+        carry, agg = state
+        carry, outs = step(carry, loads[t], params, onehot, dt_f)
+        agg = update(agg, loads[t], outs, slo_limit, slo_mode)
+        return carry, agg
+
+    carry, agg = jax.lax.fori_loop(0, chunk, bin_step,
+                                   (carry_ref[...], unpack(agg_ref[...])))
+    packed = pack(agg)
+    carry_ref[...] = carry
+    agg_ref[...] = packed
+
+    @pl.when(c == num_chunks - 1)
+    def _fin():
+        carry_end_ref[...] = carry
+        agg_out_ref[...] = packed
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("dt_hours", "slo_limit", "slo_mode",
+                                    "version", "lanes", "chunk",
+                                    "interpret"))
+def _policy_agg(loads_t: jnp.ndarray, params: jnp.ndarray,
+                onehot: jnp.ndarray, *, dt_hours: float, slo_limit: float,
+                slo_mode: int, version: int, lanes: int, chunk: int,
+                interpret: bool):
+    """Aggregate twin of ``_policy_scan``: same operand layout, O(N)
+    outputs (carry_end [Npad, CARRY_DIM], agg [Npad, AGG_DIM])."""
+    from repro.core.twin import (AGG_DIM, CARRY_DIM, lane_policy_step,
+                                 lane_update_aggregate, pack_aggregate,
+                                 unpack_aggregate)
+    del version
+    t_bins, npad = loads_t.shape
+    nb, nc = npad // lanes, t_bins // chunk
+
+    kernel = functools.partial(
+        _policy_agg_kernel, step=lane_policy_step,
+        update=lane_update_aggregate, pack=pack_aggregate,
+        unpack=unpack_aggregate, dt=float(dt_hours),
+        slo_limit=float(slo_limit), slo_mode=int(slo_mode), chunk=chunk,
+        num_chunks=nc, carry_dim=CARRY_DIM, agg_dim=AGG_DIM)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb, nc),
+        in_specs=[
+            pl.BlockSpec((chunk, lanes), lambda i, c: (c, i)),
+            pl.BlockSpec((lanes, params.shape[1]), lambda i, c: (i, 0)),
+            pl.BlockSpec((lanes, onehot.shape[1]), lambda i, c: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((lanes, CARRY_DIM), lambda i, c: (i, 0)),
+            pl.BlockSpec((lanes, AGG_DIM), lambda i, c: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((npad, CARRY_DIM), jnp.float32),
+                   jax.ShapeDtypeStruct((npad, AGG_DIM), jnp.float32)],
+        scratch_shapes=[_vmem((lanes, CARRY_DIM), jnp.float32),
+                        _vmem((lanes, AGG_DIM), jnp.float32)],
+        interpret=interpret,
+    )(loads_t, params, onehot)
+
+
+def policy_grid_agg(loads: jnp.ndarray, params: jnp.ndarray,
+                    onehot: jnp.ndarray, dt_hours: float = 1.0, *,
+                    slo_limit: float = float("inf"), slo_mode: int = 0,
+                    lanes: int = DEFAULT_LANES, chunk: int = DEFAULT_CHUNK,
+                    interpret: bool = True):
+    """Fused streaming-aggregate grid scan; semantics of
+    ``ref.policy_grid_agg``. Same padding/transposition contract as
+    ``policy_grid_scan``, but the only outputs are O(N): per-scenario
+    final carries and the [AGG_DIM] aggregate rows — the five [N, T]
+    series are never allocated, on HBM or anywhere else. ``slo_limit`` /
+    ``slo_mode`` are static (see ``core.twin.AGG_SLO_*``). Returns
+    (carry_end [N, CARRY_DIM], agg [N, AGG_DIM]).
+    """
+    from repro.core.twin import registry_version
+    n, t_bins = loads.shape
+    lanes = min(lanes, _round_up(max(n, 1), 8))
+    npad = _round_up(max(n, 1), lanes)
+    if t_bins % chunk:
+        chunk = t_bins
+    loads_t = jnp.zeros((t_bins, npad), jnp.float32)
+    loads_t = loads_t.at[:, :n].set(jnp.asarray(loads, jnp.float32).T)
+    pad = lambda a: jnp.zeros((npad, a.shape[1]), jnp.float32).at[:n].set(  # noqa: E731
+        jnp.asarray(a, jnp.float32))
+    carry_end, agg = _policy_agg(
+        loads_t, pad(params), pad(onehot), dt_hours=float(dt_hours),
+        slo_limit=float(slo_limit), slo_mode=int(slo_mode),
+        version=registry_version(), lanes=lanes, chunk=chunk,
+        interpret=interpret)
+    return carry_end[:n], agg[:n]
 
 
 def policy_grid_scan(loads: jnp.ndarray, params: jnp.ndarray,

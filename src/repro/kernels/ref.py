@@ -141,6 +141,49 @@ def policy_grid_scan(loads: jnp.ndarray, params: jnp.ndarray,
     return carry_end, tuple(o.T for o in outs)
 
 
+def policy_grid_agg(loads: jnp.ndarray, params: jnp.ndarray,
+                    onehot: jnp.ndarray = None, dt_hours=1.0, *,
+                    policy_index=None, slo_limit: float = float("inf"),
+                    slo_mode: int = 0):
+    """Streaming-aggregate scenario-grid scan, lane form — the semantics
+    of the Pallas aggregate kernel (``kernels/policy_scan.py``).
+
+    Same operands and branch selection as ``policy_grid_scan``, but the
+    Table II statistics are folded into the scan carry
+    (``core.twin.lane_update_aggregate``) and NO per-bin series is kept:
+    the scan emits nothing (``ys=None``), so memory is O(N) regardless of
+    the horizon. ``slo_limit`` / ``slo_mode`` are static trace constants
+    selecting which value stream feeds the SLO-ok counters
+    (``core.twin.AGG_SLO_*``; ``inf`` when no SLO applies).
+
+    Returns (carry_end [N, CARRY_DIM], agg [N, AGG_DIM]).
+    """
+    from repro.core.twin import (CARRY_DIM, init_aggregate,  # late: avoid
+                                 lane_branches, lane_policy_step,  # cycle
+                                 lane_update_aggregate, pack_aggregate)
+    if (onehot is None) == (policy_index is None):
+        raise ValueError("pass exactly one of onehot= (mixed grid) or "
+                         "policy_index= (uniform lane block)")
+    n = loads.shape[0]
+    dt = jnp.asarray(dt_hours, jnp.float32)
+
+    def bin_step(state, arrive):
+        carry, agg = state
+        if onehot is not None:
+            carry, outs = lane_policy_step(carry, arrive, params, onehot,
+                                           dt)
+        else:
+            carry, outs = jax.lax.switch(policy_index, lane_branches(),
+                                         carry, arrive, params, dt)
+        agg = lane_update_aggregate(agg, arrive, outs, slo_limit, slo_mode)
+        return (carry, agg), None
+
+    (carry_end, agg), _ = jax.lax.scan(
+        bin_step, (jnp.zeros((n, CARRY_DIM), jnp.float32),
+                   init_aggregate((n,))), loads.T)
+    return carry_end, pack_aggregate(agg)
+
+
 def rwkv6_scan(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                w: jnp.ndarray, u: jnp.ndarray,
                state: jnp.ndarray | None = None):

@@ -1,0 +1,140 @@
+"""``ObservedTrace.from_prometheus``: range-query matrices -> fit traces.
+
+Canned ``/api/v1/query_range`` JSON responses (the envelope a real
+Prometheus returns, string-quoted sample values included) must bin into
+the same ObservedTrace shape the other importers produce, so the metrics
+side of a deployment feeds ``repro.calibrate`` without a client library.
+"""
+import numpy as np
+import pytest
+
+from repro.calibrate import ObservedTrace
+
+STEP = 30.0        # query step of the canned responses (seconds)
+T0 = 1.7e9         # an arbitrary unix epoch — times must rebase
+
+
+def _matrix(entries):
+    """Wrap result entries in the full Prometheus response envelope."""
+    return {"status": "success",
+            "data": {"resultType": "matrix", "result": entries}}
+
+
+def _entry(rate_fn, n=21, metric=None):
+    """One result entry: samples every STEP seconds, values as strings
+    (Prometheus JSON quotes numbers)."""
+    return {"metric": metric or {"job": "pipeline"},
+            "values": [[T0 + i * STEP, str(rate_fn(i * STEP))]
+                       for i in range(n)]}
+
+
+def _flat_responses(rate=10.0, latency=2.5):
+    return {
+        "arrivals": _matrix([_entry(lambda t: rate)]),
+        "processed": _matrix([_entry(lambda t: rate)]),
+        "latency": _matrix([_entry(lambda t: latency)]),
+    }
+
+
+def test_flat_rates_bin_to_counts():
+    tr = ObservedTrace.from_prometheus(_flat_responses(rate=10.0),
+                                       bin_seconds=60.0, name="prom")
+    # 21 samples x 30 s span 600 s -> 10 one-minute bins
+    assert tr.num_bins == 10
+    assert tr.bin_hours == pytest.approx(60.0 / 3600.0)
+    # 10 rec/s x 60 s bins
+    np.testing.assert_allclose(tr.arrivals, 600.0)
+    np.testing.assert_allclose(tr.processed, 600.0)
+    np.testing.assert_allclose(tr.latency_s, 2.5)
+    np.testing.assert_allclose(tr.dropped, 0.0)      # omitted -> zeros
+    assert tr.name == "prom"
+
+
+def test_multiple_label_sets_sum_rates_average_latency():
+    resp = {
+        "arrivals": _matrix([_entry(lambda t: 4.0, metric={"pod": "a"}),
+                             _entry(lambda t: 6.0, metric={"pod": "b"})]),
+        "processed": _matrix([_entry(lambda t: 10.0)]),
+        "latency": _matrix([_entry(lambda t: 1.0, metric={"pod": "a"}),
+                            _entry(lambda t: 3.0, metric={"pod": "b"})]),
+    }
+    tr = ObservedTrace.from_prometheus(resp, bin_seconds=60.0)
+    np.testing.assert_allclose(tr.arrivals, 600.0)   # 4 + 6 rec/s summed
+    np.testing.assert_allclose(tr.latency_s, 2.0)    # gauge averaged
+
+
+def test_ramp_rate_interpolates_onto_bin_centers():
+    # rate ramps 0 -> 20 rec/s over 600 s; bin-center sampling of the
+    # linear ramp integrates it exactly per bin
+    resp = {"arrivals": _matrix([_entry(lambda t: t / 30.0)]),
+            "processed": _matrix([_entry(lambda t: t / 30.0)])}
+    tr = ObservedTrace.from_prometheus(resp, bin_seconds=60.0)
+    centers = (np.arange(10) + 0.5) * 60.0
+    np.testing.assert_allclose(tr.arrivals, centers / 30.0 * 60.0)
+    assert tr.arrivals.sum() == pytest.approx(20.0 / 2 * 600.0)
+
+
+def test_accepts_data_object_and_bare_result_list():
+    full = _flat_responses()
+    tr_full = ObservedTrace.from_prometheus(full)
+    tr_data = ObservedTrace.from_prometheus(
+        {k: v["data"] for k, v in full.items()})
+    tr_bare = ObservedTrace.from_prometheus(
+        {k: v["data"]["result"] for k, v in full.items()})
+    for tr in (tr_data, tr_bare):
+        np.testing.assert_array_equal(tr.arrivals, tr_full.arrivals)
+        np.testing.assert_array_equal(tr.latency_s, tr_full.latency_s)
+
+
+def test_cost_series_rate_or_flat_fallback():
+    resp = _flat_responses()
+    tr = ObservedTrace.from_prometheus(resp, bin_seconds=60.0,
+                                       usd_per_hour=0.6)
+    np.testing.assert_allclose(tr.cost_usd, 0.6 / 60.0)   # flat rate
+    resp["cost"] = _matrix([_entry(lambda t: 1.2)])        # USD/hour rate
+    tr = ObservedTrace.from_prometheus(resp, bin_seconds=60.0)
+    np.testing.assert_allclose(tr.cost_usd, 1.2 / 60.0)
+
+
+def test_feeds_the_fit_objective_shapes():
+    tr = ObservedTrace.from_prometheus(_flat_responses(), bin_seconds=60.0)
+    series = tr.series()
+    assert set(series) == {"processed", "latency", "dropped", "cost"}
+    scales = tr.scales()
+    assert all(s > 0.0 for s in scales.values())
+    assert tr.duration_hours == pytest.approx(10 * 60.0 / 3600.0)
+
+
+def test_rejects_bad_inputs():
+    with pytest.raises(ValueError, match="arrivals"):
+        ObservedTrace.from_prometheus(
+            {"processed": _matrix([_entry(lambda t: 1.0)])})
+    with pytest.raises(ValueError, match="unknown series keys"):
+        ObservedTrace.from_prometheus(
+            {**_flat_responses(), "qps": _matrix([])})
+    failed = {"status": "error", "error": "query timed out", "data": {}}
+    with pytest.raises(ValueError, match="timed out"):
+        ObservedTrace.from_prometheus({**_flat_responses(),
+                                       "arrivals": failed})
+    # real Prometheus error envelopes carry no 'data' key at all
+    failed_no_data = {"status": "error", "errorType": "timeout",
+                      "error": "query timed out"}
+    with pytest.raises(ValueError, match="timed out"):
+        ObservedTrace.from_prometheus({**_flat_responses(),
+                                       "arrivals": failed_no_data})
+    vector = {"status": "success",
+              "data": {"resultType": "vector", "result": []}}
+    with pytest.raises(ValueError, match="matrix"):
+        ObservedTrace.from_prometheus({**_flat_responses(),
+                                       "arrivals": vector})
+    with pytest.raises(ValueError, match="no samples"):
+        ObservedTrace.from_prometheus({"arrivals": _matrix([]),
+                                       "processed": _matrix([])})
+    # ANY provided-but-empty series is an error, not silent zeros (an
+    # empty 'cost' would also silently shadow the usd_per_hour fallback)
+    with pytest.raises(ValueError, match="processed.*no samples"):
+        ObservedTrace.from_prometheus(
+            {**_flat_responses(), "processed": _matrix([])})
+    with pytest.raises(ValueError, match="cost.*no samples"):
+        ObservedTrace.from_prometheus(
+            {**_flat_responses(), "cost": _matrix([])}, usd_per_hour=3.0)

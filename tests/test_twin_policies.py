@@ -268,7 +268,9 @@ def test_run_grid_single_trace_all_policies():
 def test_grid_matches_batch_of_one():
     traffics = [TrafficModel.honda_default("nom"),
                 TrafficModel.honda_default("high", G=1.5)]
-    sims = run_grid(ALL_POLICY_TWINS, traffics)
+    # per-bin series equality needs series mode (the aggregate default
+    # returns scalars only; its parity is tests/test_grid_aggregate.py)
+    sims = run_grid(ALL_POLICY_TWINS, traffics, return_series=True)
     k = 0
     for tr in traffics:
         loads = tr.hourly_loads()
