@@ -11,12 +11,15 @@
 #                          (writes BENCH_grid_stream.json)
 #   make calibrate-bench   multi-start twin-fit wall-clock vs K
 #                          (writes BENCH_calibrate.json)
+#   make search-bench      one-dispatch K-restart policy search vs serial
+#                          loop + vs exhaustive 4096-point grid
+#                          (writes BENCH_search.json)
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-deps bench bench-grid grid-bench-pallas \
-        grid-bench-stream calibrate-bench
+        grid-bench-stream calibrate-bench search-bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -38,3 +41,6 @@ grid-bench-stream:
 
 calibrate-bench:
 	$(PYTHON) -m benchmarks.run calibrate
+
+search-bench:
+	$(PYTHON) -m benchmarks.run search

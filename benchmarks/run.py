@@ -12,7 +12,10 @@ fit benchmark (which also writes BENCH_calibrate.json), the
 grid-backend sweep ``grid-pallas`` — XLA vs Pallas-interpret at
 64/256/1024 scenarios (writes BENCH_grid_pallas.json) — and the
 streaming sweep ``grid-stream`` — series vs aggregate ``simulate_grid``
-at 1024/8192/65536 full-year scenarios (writes BENCH_grid_stream.json).
+at 1024/8192/65536 full-year scenarios (writes BENCH_grid_stream.json) —
+and the policy-search benchmark ``search`` — one-dispatch K-restart
+search vs a serial loop, and search vs the exhaustive 4096-point grid
+(writes BENCH_search.json).
 """
 from __future__ import annotations
 
@@ -58,6 +61,8 @@ TABLES = {
                                       fromlist=["main_stream"]).main_stream(),
     "calibrate": lambda: __import__("benchmarks.calibrate_bench",
                                     fromlist=["main"]).main(),
+    "search": lambda: __import__("benchmarks.search_bench",
+                                 fromlist=["main"]).main(),
     "roofline": lambda: __import__("benchmarks.roofline_bench",
                                    fromlist=["main"]).main(),
 }

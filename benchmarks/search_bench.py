@@ -1,0 +1,137 @@
+"""Policy-search benchmark: one-dispatch multi-start vs a serial loop,
+and gradient search vs the exhaustive 4096-scenario grid it replaces.
+
+Two measurements on the same full-year problem (autoscale capacity
+planning at +40% traffic under a 2h/95% latency SLO):
+
+* **batched vs serial multi-start** — ``search(restarts=K)`` runs all K
+  restarts as lanes of ONE grad-of-scan dispatch; the serial baseline
+  calls ``search(restarts=1)`` K times. Same total restarts, same steps
+  (polish disabled in both arms so the kernel dominates the clock).
+* **search vs exhaustive grid** — the optimizer (with its exact
+  re-check + polish) against ``whatif.run_grid`` over the SAME space's
+  4096-point factorial sweep, comparing wall-clock AND answer quality
+  (annual cost of the best feasible configuration found by each).
+
+Writes ``BENCH_search.json`` and emits the harness CSV rows.
+
+  PYTHONPATH=src python benchmarks/search_bench.py
+  PYTHONPATH=src python -m benchmarks.run search
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core.slo import SLO
+from repro.core.traffic import TrafficModel
+from repro.core.twin import make_twin
+from repro.core.whatif import run_grid
+from repro.search import evaluate_exact, search, search_space
+
+RESTARTS = (1, 4, 8)
+STEPS = 60
+COARSEN = 4                 # gradient-loop bins; re-checks stay hourly
+GRID_POINTS = 4096
+OUT_JSON = os.environ.get("BENCH_SEARCH_JSON", "BENCH_search.json")
+
+
+def _problem():
+    traffic = TrafficModel.honda_default("high(+40%)", R=3.5, G=1.4)
+    slo = SLO(limit_s=2 * 3600, met_fraction=0.95)
+    base = make_twin("auto", "autoscale", max_rps=1.9512,
+                     usd_per_hour=0.0082, base_latency_s=0.15,
+                     max_instances=8, scale_up_hours=2)
+    space = search_space(base, ("max_instances", "scale_up_hours"))
+    return space, traffic, slo
+
+
+def bench() -> Dict:
+    space, traffic, slo = _problem()
+    kw = dict(steps=STEPS, coarsen=COARSEN, polish_rounds=0)
+
+    # -- batched vs serial multi-start ----------------------------------
+    records = []
+    for k in RESTARTS:
+        search(space, [traffic], slo, restarts=k, seed=0, **kw)  # compile
+        batched_s = []
+        for rep in (1, 2, 3):
+            t0 = time.perf_counter()
+            res = search(space, [traffic], slo, restarts=k, seed=rep,
+                         **kw)
+            batched_s.append(time.perf_counter() - t0)
+        batched = min(batched_s)
+        t0 = time.perf_counter()
+        for i in range(k):
+            res1 = search(space, [traffic], slo, restarts=1, seed=1 + i,
+                          **kw)
+        serial_s = time.perf_counter() - t0
+        records.append({"restarts": k, "steps": STEPS,
+                        "batched_s": round(batched, 3),
+                        "serial_s": round(serial_s, 3),
+                        "speedup": round(serial_s / batched, 2),
+                        "batched_cost": round(float(res.cost_usd), 3)})
+    del res1
+
+    # -- search vs exhaustive grid, equal answer quality ----------------
+    # full resolution here (coarsen=1 + polish): the claim under test is
+    # that the optimizer's answer costs no more than the sweep's best row
+    t0 = time.perf_counter()
+    full = search(space, [traffic], slo, restarts=6, steps=80, seed=0)
+    search_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    twins = space.grid(GRID_POINTS)
+    rows = run_grid(twins, [traffic], slo=slo)
+    feas = [r for r in rows if r.slo_met]
+    grid_cost = min(r.total_cost_usd for r in feas) if feas \
+        else float("inf")
+    grid_s = time.perf_counter() - t0
+
+    return {
+        "device": jax.devices()[0].platform,
+        "steps": STEPS,
+        "coarsen": COARSEN,
+        "multi_start": records,
+        "speedup_at_max_k": records[-1]["speedup"],
+        "vs_grid": {
+            "grid_points": GRID_POINTS,
+            "search_s": round(search_s, 3),
+            "grid_s": round(grid_s, 3),
+            "search_cost_usd": round(float(full.cost_usd), 4),
+            "grid_cost_usd": round(float(grid_cost), 4),
+            "search_feasible": bool(full.feasible),
+            # "equal answer quality": the optimizer's config costs no
+            # more than the best feasible row of the exhaustive sweep
+            "search_beats_grid": bool(full.cost_usd <= grid_cost),
+        },
+    }
+
+
+def main() -> List[str]:
+    r = bench()
+    with open(OUT_JSON, "w") as f:
+        json.dump(r, f, indent=2, sort_keys=True)
+    lines = []
+    for rec in r["multi_start"]:
+        lines.append(f"search/fit_k{rec['restarts']},"
+                     f"{rec['batched_s'] * 1e6:.0f},"
+                     f"x{rec['speedup']}-vs-serial;steps={rec['steps']}")
+    vg = r["vs_grid"]
+    lines.append(f"search/vs_grid_{vg['grid_points']},"
+                 f"{vg['search_s'] * 1e6:.0f},"
+                 f"grid={vg['grid_s']}s;search=${vg['search_cost_usd']};"
+                 f"grid=${vg['grid_cost_usd']};"
+                 f"beats={vg['search_beats_grid']};json={OUT_JSON}")
+    return lines
+
+
+if __name__ == "__main__":
+    result = bench()
+    with open(OUT_JSON, "w") as fh:
+        json.dump(result, fh, indent=2, sort_keys=True)
+    print(json.dumps(result, indent=2, sort_keys=True))

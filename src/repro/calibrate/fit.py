@@ -183,15 +183,17 @@ def fit(trace: ObservedTrace, policy: str = "fifo", *,
     z0 = rng.normal(0.0, 1.5, (restarts, PARAM_DIM)).astype(np.float32)
     if init is not None:
         ip = init.padded_params()
-        outside = [n for i, n in enumerate(spec.param_names)
-                   if spec.free_mask[i]
-                   and not spec.lo[i] <= ip[i] <= spec.hi[i]]
+        outside = [
+            f"{n}={ip[i]:g} vs box ({spec.lo[i]:g}, {spec.hi[i]:g})"
+            for i, n in enumerate(spec.param_names)
+            if spec.free_mask[i] and not spec.lo[i] <= ip[i] <= spec.hi[i]]
         if outside:
             warnings.warn(
-                f"{policy} warm start lies outside the calibration bounds "
-                f"for {outside} — the sigmoid bijection cannot reach it; "
-                f"widen the policy's bounds (register_policy(bounds=...)) "
-                f"or freeze those params", stacklevel=2)
+                f"{policy} fit on trace {trace.name!r}: warm start lies "
+                f"outside the calibration bounds — {'; '.join(outside)}. "
+                f"The sigmoid bijection cannot reach it; widen that "
+                f"parameter's bounds (register_policy(bounds=...)) or "
+                f"freeze it", stacklevel=2)
         z0[0] = z_from_params(ip, spec.lo, spec.hi, spec.log_mask)
     else:
         z0[0] = 0.0          # mid-box start
@@ -211,15 +213,20 @@ def fit(trace: ObservedTrace, policy: str = "fifo", *,
         np.asarray(params_from_z(jnp.asarray(z_fin[k]), spec.lo, spec.hi,
                                  spec.log_mask, spec.free_mask, spec.fixed))
         for k in range(restarts)])
-    pinned = [n for i, n in enumerate(spec.param_names)
-              if spec.free_mask[i] and np.isfinite(spec.hi[i])
-              and abs(z_fin[best, i]) > 7.0]    # sigmoid(7) ~ 0.999
+    pinned = [
+        f"{n}={start_params[best, i]:g} at the "
+        f"{'upper' if z_fin[best, i] > 0 else 'lower'} edge of "
+        f"({spec.lo[i]:g}, {spec.hi[i]:g})"
+        for i, n in enumerate(spec.param_names)
+        if spec.free_mask[i] and np.isfinite(spec.hi[i])
+        and abs(z_fin[best, i]) > 7.0]    # sigmoid(7) ~ 0.999
     if pinned:
         warnings.warn(
-            f"{policy} fit pinned {pinned} at the edge of the calibration "
-            f"bounds — the measured pipeline likely lies outside the box; "
-            f"widen the policy's bounds (register_policy(bounds=...)) or "
-            f"treat the fit as a lower/upper bound", stacklevel=2)
+            f"{policy} fit on trace {trace.name!r} pinned "
+            f"{'; '.join(pinned)} — the measured pipeline likely lies "
+            f"outside that parameter's box; widen the policy's bounds "
+            f"(register_policy(bounds=...)) or treat the fit as a "
+            f"lower/upper bound", stacklevel=2)
     twin = twin_from_z(z_fin[best], spec,
                        name or f"{trace.name}-{policy}-cal")
     return FitResult(twin=twin, policy=policy,

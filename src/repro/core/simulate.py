@@ -109,6 +109,9 @@ class SimulationResult:
     # hourly records shed by bounded-queue policies (zeros otherwise)
     dropped: np.ndarray = field(default_factory=lambda: np.zeros(0))
     dropped_records: float = 0.0
+    # record-weighted tail latencies (same CDF the median is read from)
+    p95_latency_s: float = 0.0
+    p99_latency_s: float = 0.0
 
     def __post_init__(self):
         # a defaulted ``dropped`` must still match the horizon — a bare
@@ -157,6 +160,10 @@ class GridSummary:
     network_cost_usd: float = 0.0
     storage_cost_usd: float = 0.0
     dropped_records: float = 0.0
+    # load-weighted tail latencies read off the histogram CDF, exact to
+    # one quarter-octave bucket like the median
+    p95_latency_s: float = 0.0
+    p99_latency_s: float = 0.0
     # aggregate extras the series path derives from the full arrays
     processed_records: float = 0.0
     arrived_records: float = 0.0
@@ -581,11 +588,15 @@ def _summarise(name: str, twin: Twin, load_np: np.ndarray,
     backlog_cost = backlog_s / 3600.0 * twin.usd_per_hour
 
     # record-weighted latency stats (records arriving each hour share the
-    # hour's latency estimate)
+    # hour's latency estimate); p95/p99 read off the same CDF as the
+    # median — the tail targets p-latency SLOs constrain
     w = load_np / max(load_np.sum(), 1e-9)
     order = np.argsort(lat_np)
+    sorted_lat = lat_np[order]
     cdf = np.cumsum(w[order])
-    median_lat = float(lat_np[order][np.searchsorted(cdf, 0.5)])
+    qidx = np.minimum(np.searchsorted(cdf, (0.5, 0.95, 0.99)),
+                      len(sorted_lat) - 1)
+    median_lat, p95_lat, p99_lat = (float(v) for v in sorted_lat[qidx])
     mean_lat = float((lat_np * w).sum())
 
     pct_rec_met = pct_hours_met = 100.0
@@ -617,7 +628,8 @@ def _summarise(name: str, twin: Twin, load_np: np.ndarray,
         pct_latency_met=pct_rec_met, pct_hours_met=pct_hours_met,
         slo_met=slo_met, network_cost_usd=net_cost,
         storage_cost_usd=stor_cost, dropped=dropped,
-        dropped_records=float(dropped.sum()))
+        dropped_records=float(dropped.sum()),
+        p95_latency_s=p95_lat, p99_latency_s=p99_lat)
 
 
 def _summarise_aggregates(names: Sequence[str], twins: Sequence[Twin],
@@ -647,13 +659,16 @@ def _summarise_aggregates(names: Sequence[str], twins: Sequence[Twin],
     backlog_s = q_end / np.maximum(max_rps, 1e-9)
     backlog_cost = backlog_s / 3600.0 * usd_hr
 
-    # device-side quantile: first histogram bucket whose load-weighted
-    # CDF crosses one half (the sort/cumsum median of ``_summarise``,
-    # exact to one log-spaced bucket)
+    # device-side quantiles: first histogram bucket whose load-weighted
+    # CDF crosses each target (the sort/cumsum quantiles of
+    # ``_summarise``, exact to one log-spaced bucket). p95/p99 feed
+    # p-latency SLO checks (repro.search) and the Table II tail columns.
     hist = agg[:, AGG_SCALARS:]
     cdf = np.cumsum(hist, axis=1)
-    crossing = cdf >= 0.5 * cdf[:, -1:]
-    median = aggregate_hist_centers()[np.argmax(crossing, axis=1)]
+    centers = aggregate_hist_centers()
+    median, p95, p99 = (
+        centers[np.argmax(cdf >= q * cdf[:, -1:], axis=1)]
+        for q in (0.5, 0.95, 0.99))
     mean_lat = sum_latw / np.maximum(sum_load, 1e-9)
 
     if slo is not None:
@@ -698,6 +713,8 @@ def _summarise_aggregates(names: Sequence[str], twins: Sequence[Twin],
             network_cost_usd=float(net[i]),
             storage_cost_usd=float(stor[i]),
             dropped_records=float(sum_drop[i]),
+            p95_latency_s=float(p95[i]),
+            p99_latency_s=float(p99[i]),
             processed_records=float(sum_proc[i]),
             arrived_records=float(sum_load[i]),
             queue_end=float(q_end[i]),

@@ -131,6 +131,17 @@ class PolicySpec:
     # branchless lane-vectorized form of ``step`` (see module docstring):
     # (carry [L, CARRY_DIM], arrive [L], params [L, PARAM_DIM], dt)
     lane_step: Callable = None
+    # --- differentiability audit (repro.search) ---------------------------
+    # parameters the EXACT step hard-gates on (ceil / >= comparisons whose
+    # gradient is zero or undefined): a gradient-based policy search cannot
+    # move these through ``lane_step``. Policies flagging any must supply a
+    # ``surrogate_lane_step`` — same signature and lane semantics as
+    # ``lane_step`` but with the hard gates smoothed (fluid instance
+    # counts, sigmoid flush gates), so ``d(output)/d(param)`` is nonzero.
+    # The surrogate is ONLY used for gradients (repro.search's inner loop);
+    # every reported number still comes from the exact step.
+    nondiff_params: Tuple[str, ...] = ()
+    surrogate_lane_step: Callable = None
 
     def bound(self, pname: str) -> Tuple[float, float]:
         return (self.bounds or {}).get(pname, GENERIC_BOUNDS)
@@ -188,13 +199,41 @@ def _assert_lane_parity(name: str, step: Callable, lane_step: Callable,
                     err_msg=f"{name}: lane/scalar output {k} mismatch")
 
 
+def _assert_surrogate_sane(name: str, surrogate: Callable, lanes: int = 4,
+                           seed: int = 1):
+    """Registry invariant for surrogate steps: finite outputs and finite
+    parameter gradients on a random lane block (both bin widths). The
+    surrogate is a gradient guide, not a parity target, so closeness to
+    the exact step is NOT asserted — only that grads exist to follow."""
+    rng = np.random.default_rng(seed)
+    carry = jnp.asarray(rng.uniform(0.0, 50.0, (lanes, CARRY_DIM)),
+                        jnp.float32)
+    arrive = jnp.asarray(rng.uniform(0.0, 2e4, (lanes,)), jnp.float32)
+    params = jnp.asarray(rng.uniform(0.05, 8.0, (lanes, PARAM_DIM)),
+                         jnp.float32)
+
+    def total(p, dt):
+        c, outs = surrogate(carry, arrive, p, dt)
+        return sum(jnp.sum(o) for o in outs) + jnp.sum(c)
+
+    for dt in (1.0, 1.0 / 60.0):
+        val = total(params, jnp.float32(dt))
+        g = jax.grad(total)(params, jnp.float32(dt))
+        if not (np.isfinite(float(val)) and np.all(np.isfinite(g))):
+            raise AssertionError(
+                f"{name}: surrogate step produced non-finite output or "
+                f"gradient at dt={dt}")
+
+
 def register_policy(name: str, param_names: Tuple[str, ...],
                     defaults: Optional[Dict[str, float]] = None,
                     doc: str = "",
                     bounds: Optional[Dict[str, Tuple[float, float]]] = None,
                     log_params: Optional[Tuple[str, ...]] = None,
                     frozen: Tuple[str, ...] = (),
-                    lane_step: Optional[Callable] = None):
+                    lane_step: Optional[Callable] = None,
+                    nondiff_params: Tuple[str, ...] = (),
+                    surrogate_lane_step: Optional[Callable] = None):
     """Decorator: register ``fn(carry, arrive, params, dt)`` as ``name``.
 
     ``param_names`` must start with the shared triple
@@ -210,6 +249,12 @@ def register_policy(name: str, param_names: Tuple[str, ...],
     (see module docstring); omitted, it is derived with ``jax.vmap``.
     Either way the registry asserts the two forms agree on a random block
     before the policy becomes visible.
+
+    ``nondiff_params`` flags parameters the exact step hard-gates on
+    (zero-gradient through ceil / comparisons); flagging any requires a
+    ``surrogate_lane_step`` whose gates are smoothed so ``repro.search``
+    can take gradients w.r.t. them. Policies with no hard gates leave both
+    unset and the exact lane step doubles as its own surrogate.
     """
     if len(param_names) > PARAM_DIM:
         raise ValueError(f"{name}: {len(param_names)} params > {PARAM_DIM}")
@@ -227,6 +272,17 @@ def register_policy(name: str, param_names: Tuple[str, ...],
             lambda carry, arrive, p, dt, _fn=fn: _fn(carry, arrive, p))
         lstep = lane_step or _derived_lane_step(step)
         _assert_lane_parity(name, step, lstep)
+        unknown_nd = set(nondiff_params) - set(param_names)
+        if unknown_nd:
+            raise ValueError(f"{name}: nondiff_params {sorted(unknown_nd)} "
+                             f"not in param_names")
+        if nondiff_params and surrogate_lane_step is None:
+            raise ValueError(
+                f"{name}: flags hard-gated params {list(nondiff_params)} "
+                f"but supplies no surrogate_lane_step — gradient search "
+                f"over them would silently see zero gradients")
+        sstep = surrogate_lane_step or lstep
+        _assert_surrogate_sane(name, sstep)
         # overriding an existing policy keeps its switch index so twins
         # built earlier still dispatch to the right branch slot
         prev = _REGISTRY.get(name)
@@ -239,7 +295,9 @@ def register_policy(name: str, param_names: Tuple[str, ...],
                           bounds=full_bounds,
                           log_params=logp,
                           frozen=tuple(frozen),
-                          lane_step=lstep)
+                          lane_step=lstep,
+                          nondiff_params=tuple(nondiff_params),
+                          surrogate_lane_step=sstep)
         _REGISTRY[name] = spec
         _VERSION += 1
         return fn
@@ -270,6 +328,14 @@ def lane_branches() -> Tuple[Callable, ...]:
                  sorted(_REGISTRY.values(), key=lambda s: s.index))
 
 
+def surrogate_lane_branches() -> Tuple[Callable, ...]:
+    """Smooth-surrogate lane steps ordered by switch index — the branch
+    table gradient-based policy search scans (``repro.search``). Policies
+    without hard gates reuse their exact lane step here."""
+    return tuple(s.surrogate_lane_step for s in
+                 sorted(_REGISTRY.values(), key=lambda s: s.index))
+
+
 def num_policies() -> int:
     return len(_REGISTRY)
 
@@ -282,7 +348,7 @@ def policy_onehot(policy_idx) -> np.ndarray:
         np.float32)
 
 
-def lane_policy_step(carry, arrive, params, onehot, dt):
+def lane_policy_step(carry, arrive, params, onehot, dt, branches=None):
     """The combined branchless bin-step over a mixed-policy lane block.
 
     carry [L, CARRY_DIM]; arrive [L]; params [L, PARAM_DIM];
@@ -294,10 +360,13 @@ def lane_policy_step(carry, arrive, params, onehot, dt):
     (a registry invariant checked at registration). This is the step the
     Pallas scenario-grid kernel scans over all T bins with scenarios on
     the vector lanes (``kernels/policy_scan.py``).
+
+    ``branches`` overrides the branch table (default: the exact lane
+    steps) — ``repro.search`` passes ``surrogate_lane_branches()``.
     """
     new_carry = jnp.zeros_like(carry)
     outs = [jnp.zeros_like(arrive) for _ in range(5)]
-    for j, lstep in enumerate(lane_branches()):
+    for j, lstep in enumerate(branches or lane_branches()):
         c_j, o_j = lstep(carry, arrive, params, dt)
         m = onehot[:, j]
         new_carry = new_carry + m[:, None] * c_j
@@ -676,9 +745,26 @@ def _quickscale_lane(carry, arrive, p, dt):
             (processed, new_q, base_lat, cost, jnp.zeros_like(arrive)))
 
 
+def _quickscale_lane_smooth(carry, arrive, p, dt):
+    # fluid instance count: ceil() has zero gradient w.r.t. max_rps, so
+    # the surrogate pays for fractional instances instead — cost varies
+    # smoothly with capacity while latency/throughput stay exact
+    max_rps, usd_hr, base_lat = p[:, 0], p[:, 1], p[:, 2]
+    cap_bin = max_rps * 3600.0 * dt
+    queue = carry[:, 0]
+    instances = jnp.maximum(arrive / jnp.maximum(cap_bin, 1e-9), 1.0)
+    processed = arrive
+    new_q = queue * 0.0
+    cost = usd_hr * instances * dt
+    return (jnp.stack([new_q, carry[:, 1]], axis=1),
+            (processed, new_q, base_lat, cost, jnp.zeros_like(arrive)))
+
+
 @register_policy("quickscale", ("max_rps", "usd_per_hour",
                                 "base_latency_s"),
-                 lane_step=_quickscale_lane)
+                 lane_step=_quickscale_lane,
+                 nondiff_params=("max_rps",),
+                 surrogate_lane_step=_quickscale_lane_smooth)
 def _quickscale_step(carry, arrive, p, dt):
     """Optimal scaling: never queues; pay ceil(load/capacity) instances."""
     max_rps, usd_hr, base_lat = p[0], p[1], p[2]
@@ -712,6 +798,29 @@ def _autoscale_lane(carry, arrive, p, dt):
             (processed, new_q, latency, cost, jnp.zeros_like(arrive)))
 
 
+def _autoscale_lane_smooth(carry, arrive, p, dt):
+    # fluid scaling target: drop the ceil() (zero gradient w.r.t.
+    # max_rps); clip keeps exact subgradients w.r.t. min/max_instances,
+    # and the first-order boot dynamics already differentiate cleanly
+    # w.r.t. scale_up_hours
+    max_rps, usd_hr, base_lat = p[:, 0], p[:, 1], p[:, 2]
+    min_i, max_i, delay = p[:, 3], p[:, 4], p[:, 5]
+    cap1 = max_rps * 3600.0 * dt
+    queue, prev = carry[:, 0], carry[:, 1]
+    prev = jnp.clip(prev, min_i, max_i)
+    avail = queue + arrive
+    target = jnp.clip(avail / jnp.maximum(cap1, 1e-9), min_i, max_i)
+    booting = prev + (target - prev) * dt / jnp.maximum(delay, dt)
+    inst = jnp.where(target > prev, booting, target)
+    processed = jnp.minimum(avail, inst * cap1)
+    new_q = avail - processed
+    avg_q = 0.5 * (queue + new_q)
+    latency = base_lat + avg_q / jnp.maximum(inst * max_rps, 1e-9)
+    cost = usd_hr * inst * dt
+    return (jnp.stack([new_q, inst], axis=1),
+            (processed, new_q, latency, cost, jnp.zeros_like(arrive)))
+
+
 @register_policy("autoscale",
                  ("max_rps", "usd_per_hour", "base_latency_s",
                   "min_instances", "max_instances", "scale_up_hours"),
@@ -723,7 +832,9 @@ def _autoscale_lane(carry, arrive, p, dt):
                  log_params=("max_rps", "usd_per_hour", "base_latency_s",
                              "scale_up_hours"),
                  frozen=("min_instances", "max_instances"),
-                 lane_step=_autoscale_lane)
+                 lane_step=_autoscale_lane,
+                 nondiff_params=("max_rps",),
+                 surrogate_lane_step=_autoscale_lane_smooth)
 def _autoscale_step(carry, arrive, p, dt):
     """Horizontal scaling with scale-up delay and min/max instance bounds.
 
@@ -819,6 +930,34 @@ def _batch_window_lane(carry, arrive, p, dt):
             (processed, new_acc, latency, cost, jnp.zeros_like(arrive)))
 
 
+def _batch_window_lane_smooth(carry, arrive, p, dt):
+    # soft flush gate: the exact step's ``timer >= window`` comparison has
+    # zero gradient w.r.t. window_hours, so the surrogate flushes a
+    # sigmoid fraction of the accumulator as the timer crosses the
+    # window — flush timing (and hence cost/latency) varies smoothly.
+    # The TIMER update uses a detached gate: differentiating the soft
+    # reset would multiply a ~|d new_timer/d timer| > 1 factor per flush
+    # into the scan's backward chain (exponential blowup to inf over a
+    # year of flushes); dropping that one term keeps per-bin window
+    # sensitivity while the recurrence stays contraction-stable.
+    max_rps, usd_hr, base_lat = p[:, 0], p[:, 1], p[:, 2]
+    window, idle_frac = p[:, 3], p[:, 4]
+    cap_hour = max_rps * 3600.0
+    acc, timer = carry[:, 0], carry[:, 1]
+    timer = timer + dt
+    gate = jax.nn.sigmoid((timer - window) / (0.25 * dt))
+    avail = acc + arrive
+    processed = gate * jnp.minimum(avail, cap_hour * window)
+    new_acc = avail - processed
+    latency = (base_lat + 0.5 * window * 3600.0
+               + new_acc / jnp.maximum(max_rps, 1e-9))
+    cost = (usd_hr * idle_frac * dt
+            + usd_hr * processed / jnp.maximum(cap_hour, 1e-9))
+    new_timer = (1.0 - jax.lax.stop_gradient(gate)) * timer
+    return (jnp.stack([new_acc, new_timer], axis=1),
+            (processed, new_acc, latency, cost, jnp.zeros_like(arrive)))
+
+
 @register_policy("batch_window",
                  ("max_rps", "usd_per_hour", "base_latency_s",
                   "window_hours", "idle_cost_fraction"),
@@ -827,7 +966,9 @@ def _batch_window_lane(carry, arrive, p, dt):
                          "idle_cost_fraction": (0.0, 1.0)},
                  log_params=("max_rps", "usd_per_hour", "base_latency_s",
                              "window_hours"),
-                 lane_step=_batch_window_lane)
+                 lane_step=_batch_window_lane,
+                 nondiff_params=("window_hours",),
+                 surrogate_lane_step=_batch_window_lane_smooth)
 def _batch_window_step(carry, arrive, p, dt):
     """Accumulate-then-flush batching: cheap hours, half-a-window latency.
 

@@ -96,6 +96,30 @@ def calibrated_grid(source, policies: Sequence[str],
                     record_mb=record_mb)
 
 
+def optimize_scenario(base: Twin, traffics, slo: Optional[SLO] = None,
+                      *, search: Optional[Sequence[str]] = None,
+                      bounds: Optional[Dict] = None,
+                      tie: Optional[Dict] = None,
+                      **search_kwargs):
+    """The inverse of ``run_grid``: cheapest configuration, not a table.
+
+    Searches ``base``'s policy for the cheapest parameter setting that
+    meets ``slo`` on every traffic scenario — gradient descent on the
+    smooth annual-cost objective (``repro.search``), all restarts x
+    scenarios as one vmapped grad-of-scan dispatch, feasibility
+    re-checked through the bit-exact streaming-aggregate grid. ``search``
+    names the free parameters (default: the policy's extras, or priced
+    capacity for extra-less policies); ``bounds``/``tie`` refine the
+    space; remaining kwargs forward to ``repro.search.search`` (restarts,
+    steps, coarsen, ...). Returns a ``repro.search.SearchResult`` whose
+    ``.twin`` drops straight into ``run_grid`` / ``table2_rows``.
+    """
+    from repro.search import search as _search          # late: search
+    from repro.search import search_space               # sits above core
+    space = search_space(base, search, bounds=bounds, tie=tie)
+    return _search(space, traffics, slo, **search_kwargs)
+
+
 def run_scenarios(scenarios: Sequence[Scenario],
                   slo: Optional[SLO] = None,
                   cost_model: Optional[CostModel] = None,
@@ -132,6 +156,8 @@ def table2_rows(sims: Sequence[GridResult]) -> List[Dict]:
             "policy": s.twin.policy,
             "cost_usd": round(s.total_cost_usd, 2),
             "latency_median_s": round(s.median_latency_s, 2),
+            "latency_p95_s": round(s.p95_latency_s, 2),
+            "latency_p99_s": round(s.p99_latency_s, 2),
             "latency_mean_s": round(s.mean_latency_s, 2),
             "latency_backlog_s": round(s.backlog_s, 2),
             "thruput_mean_rph": round(s.mean_throughput_rph, 2),

@@ -91,7 +91,7 @@ def ssm_scan(x, dt, A, B, C, D, state=None):
 
 
 def policy_scan(loads, params, onehot=None, dt_hours=1.0, *,
-                policy_index=None, differentiable=False):
+                policy_index=None, differentiable=False, surrogate=False):
     """TwinPolicy scenario-grid scan: loads [N, T], params [N, PARAM_DIM]
     -> (carry_end [N, CARRY_DIM], five [N, T] series).
 
@@ -105,13 +105,19 @@ def policy_scan(loads, params, onehot=None, dt_hours=1.0, *,
     Pallas switch — the kernel has no VJP, and twin calibration takes
     ``jax.grad`` through this scan. Both paths run the same
     lane-vectorized math, so the choice never changes the numbers.
+
+    ``surrogate=True`` (implies the differentiable path) additionally
+    swaps in the smooth-surrogate lane branches so hard-gated policy
+    extras carry gradients — the policy-search inner loop
+    (``repro.search``). Surrogate numbers are a gradient guide only;
+    exact results always come from the non-surrogate forms.
     """
     if (onehot is None) == (policy_index is None):   # before dispatch, so
         # both backends reject the ambiguity identically (one_hot(None)
         # would otherwise make the Pallas path return silent zeros)
         raise ValueError("pass exactly one of onehot= (mixed grid) or "
                          "policy_index= (uniform lane block)")
-    if pallas_enabled() and not differentiable:
+    if pallas_enabled() and not differentiable and not surrogate:
         from repro.kernels import policy_scan as policy_kernel
         if onehot is None:
             # the kernel's branch selector is the mask form; a traced
@@ -127,7 +133,8 @@ def policy_scan(loads, params, onehot=None, dt_hours=1.0, *,
             loads, params, onehot, dt_hours,
             interpret=getattr(_state, "interpret", True))
     return ref.policy_grid_scan(loads, params, onehot, dt_hours,
-                                policy_index=policy_index)
+                                policy_index=policy_index,
+                                surrogate=surrogate)
 
 
 def policy_scan_agg(loads, params, onehot, dt_hours=1.0, *,

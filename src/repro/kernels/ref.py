@@ -98,7 +98,7 @@ def sdpa_blocked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
 
 def policy_grid_scan(loads: jnp.ndarray, params: jnp.ndarray,
                      onehot: jnp.ndarray = None, dt_hours=1.0,
-                     policy_index=None):
+                     policy_index=None, surrogate: bool = False):
     """TwinPolicy scenario-grid scan, lane form — the semantics of the
     Pallas kernel (``kernels/policy_scan.py``).
 
@@ -117,23 +117,30 @@ def policy_grid_scan(loads: jnp.ndarray, params: jnp.ndarray,
 
     Pure jnp and differentiable w.r.t. ``params`` (the Pallas kernel has
     no VJP, so gradient users — twin calibration — pin this path).
+    ``surrogate=True`` swaps in the smooth-surrogate lane branches
+    (``core.twin.surrogate_lane_branches``) so hard-gated policy extras
+    (quickscale/autoscale ceil, batch_window's flush comparison) carry
+    gradients — the form ``repro.search`` differentiates.
     Returns (carry_end [N, CARRY_DIM], (processed, queue, latency, cost,
     dropped)) with each series [N, T].
     """
     from repro.core.twin import (CARRY_DIM, lane_branches,  # late: avoid a
-                                 lane_policy_step)  # kernels<->core cycle
+                                 lane_policy_step,  # kernels<->core cycle
+                                 surrogate_lane_branches)
     if (onehot is None) == (policy_index is None):
         raise ValueError("pass exactly one of onehot= (mixed grid) or "
                          "policy_index= (uniform lane block)")
     n = loads.shape[0]
     dt = jnp.asarray(dt_hours, jnp.float32)
+    branches = surrogate_lane_branches() if surrogate else lane_branches()
 
     if onehot is not None:
         def bin_step(carry, arrive):
-            return lane_policy_step(carry, arrive, params, onehot, dt)
+            return lane_policy_step(carry, arrive, params, onehot, dt,
+                                    branches=branches)
     else:
         def bin_step(carry, arrive):
-            return jax.lax.switch(policy_index, lane_branches(), carry,
+            return jax.lax.switch(policy_index, branches, carry,
                                   arrive, params, dt)
 
     carry_end, outs = jax.lax.scan(

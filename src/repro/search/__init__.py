@@ -1,0 +1,44 @@
+"""Calibrated policy search: SLO-constrained differentiable optimization.
+
+This package *inverts* the what-if simulator. Where ``whatif.run_grid``
+enumerates (twin x traffic) scenarios and leaves a human to scan Table II
+for the cheapest row that still meets the SLO, ``repro.search`` descends
+a differentiable annual-cost objective (smooth softplus SLO hinge,
+evaluated through the same lane-vectorized scan backend calibration
+uses, with registry-declared smooth surrogates for hard-gated policy
+extras) and returns that configuration directly — with every reported
+number re-checked through the bit-exact streaming-aggregate grid path.
+
+Layers:
+
+* ``space``     — declarative search spaces over policy parameters
+                  (registry bounds + sigmoid/softplus reparam reused from
+                  ``repro.calibrate``, tied parameters for priced
+                  capacity, exhaustive ``grid(n)`` baselines);
+* ``objective`` — the smooth annual-cost + SLO-hinge lane objective;
+* ``optimize``  — multi-start projected AdamW (K restarts x S traffic
+                  scenarios as lanes of ONE grad-of-scan dispatch),
+                  ``search_policies`` cross-policy tournament;
+* ``frontier``  — cost-vs-SLO Pareto sweep (all targets as lanes of the
+                  same single dispatch; monotone by construction).
+
+Entry points: ``search`` / ``search_policies`` / ``pareto_frontier``
+here, or ``repro.core.whatif.optimize_scenario`` for the
+measure -> calibrate -> optimize loop the paper's business questions
+want ("cheapest config that keeps p95 under 2h at +40% traffic" —
+examples/whatif_analysis.py, What-if #6).
+"""
+from repro.search.frontier import Frontier, FrontierPoint, pareto_frontier
+from repro.search.objective import lane_objective, smooth_met_fraction
+from repro.search.optimize import (SearchInfeasibleWarning, SearchResult,
+                                   TournamentResult, evaluate_exact,
+                                   search, search_policies)
+from repro.search.space import (SearchSpace, default_space, search_space)
+
+__all__ = [
+    "Frontier", "FrontierPoint", "pareto_frontier",
+    "lane_objective", "smooth_met_fraction",
+    "SearchInfeasibleWarning", "SearchResult", "TournamentResult",
+    "evaluate_exact", "search", "search_policies",
+    "SearchSpace", "default_space", "search_space",
+]

@@ -1,0 +1,133 @@
+"""The search objective: differentiable annual cost under a smooth SLO.
+
+``lane_objective`` scores a [L, PARAM_DIM] block of candidate
+configurations against a [L, T] block of traffic scenarios in ONE
+lane-vectorized scan — the same dispatch shape (and the same
+``kernels.ops.policy_scan`` backend selection) twin calibration uses for
+its restarts, with ``surrogate=True`` so hard-gated policy extras
+(quickscale/autoscale's ceil, batch_window's flush comparison) carry
+gradients. Per lane it returns
+
+    annual cost  +  penalty_weight * penalty_scale * hinge(SLO shortfall)
+
+where annual cost is the simulated cost series total plus the paper's
+end-of-horizon backlog pricing (queue / capacity hours at the twin's
+hourly rate), scaled from the simulated horizon to the 8736-hour year;
+and the SLO term is a *fixed-weight softplus hinge* on the smoothed
+met-fraction: each bin's compliance is a sigmoid of its distance to the
+limit (width ``tau`` of the limit), load-weighted into a fraction, and
+any shortfall below ``met_fraction`` is hinged through softplus. The
+hinge is scaled by a caller-supplied reference cost (``penalty_scale``,
+normally the base configuration's exact annual cost) so the penalty is
+meaningful in dollars regardless of problem size.
+
+This objective is a *gradient guide only*: nothing it computes is ever
+reported. ``repro.search.optimize`` re-checks every candidate through
+the bit-exact streaming-aggregate path (``simulate_grid(
+return_series=False)``) before declaring it feasible or quoting a cost.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.traffic import HOURS_PER_YEAR
+from repro.core.twin import AGG_SLO_DROP_RATE
+
+#: softplus hinge softness, in met-fraction units: a razor hinge — the
+#: tail must be ~zero a few tenths of a percent INSIDE feasibility, or
+#: its slope (times the dollar-denominated penalty weight) out-muscles
+#: the real cost gradient and parks the optimum well short of the
+#: boundary the SLO actually draws
+HINGE_S = 0.001
+#: compliance-sigmoid width as a fraction of the SLO limit: narrow, so a
+#: comfortably feasible configuration scores frac ~= 1 and feels pure
+#: cost gradients (a wide sigmoid would make feasible configs look
+#: half-infeasible and chase latency instead of dollars)
+DEFAULT_TAU = 0.02
+#: weight of the violation-*magnitude* term relative to penalty_weight.
+#: The met-fraction hinge saturates once every violating bin's sigmoid
+#: does (deeply infeasible configs would feel NO restoring gradient and
+#: race down the cost slope instead); the magnitude term keeps growing
+#: with violation depth, so feasibility pressure exists everywhere. It is
+#: GATED by infeasibility (sigmoid of the met shortfall) and kept small:
+#: the SLO budget explicitly allows (1 - met_fraction) of the load to
+#: violate, so charging feasible configs for allowed violations would
+#: bias the optimum conservative — and AdamW's per-coordinate
+#: normalization follows even a tiny consistent gradient, so small is
+#: enough to escape the infeasible region.
+EXCESS_WEIGHT = 0.002
+
+
+def annual_scale(t_bins: int, bin_hours: float) -> float:
+    """Scale factor from a simulated horizon to the 8736-hour year."""
+    return HOURS_PER_YEAR / (t_bins * bin_hours)
+
+
+def smooth_met_fraction(values, loads, slo_limit_lane, width):
+    """[L] smoothed load-weighted fraction of bins within the SLO limit.
+
+    values [L, T] (latency seconds or drop fractions); loads [L, T];
+    slo_limit_lane [L] per-lane limits (the Pareto frontier runs many
+    limits as lanes of one dispatch); ``width`` [L, 1] or scalar sigmoid
+    width. Each bin contributes a sigmoid of its margin — the
+    differentiable stand-in for the aggregate path's exact ``<=``
+    counters.
+    """
+    ok = jax.nn.sigmoid((slo_limit_lane[:, None] - values) / width)
+    return (ok * loads).sum(axis=1) / jnp.maximum(loads.sum(axis=1), 1e-9)
+
+
+def lane_objective(params_block, loads_block, dt_hours, policy_index,
+                   slo_limit_lane, slo_mode: int, met_fraction,
+                   penalty_weight, penalty_scale, horizon_scale,
+                   tau=DEFAULT_TAU, surrogate: bool = True):
+    """[L] smooth objective values for a lane block (see module docstring).
+
+    params_block [L, PARAM_DIM]; loads_block [L, T]; ``policy_index``,
+    ``slo_limit_lane`` [L], ``met_fraction``, ``penalty_*``,
+    ``horizon_scale`` and ``tau`` may all be traced — one compiled kernel
+    serves every policy, SLO target and penalty setting of a tournament.
+    ``slo_mode``, ``dt_hours`` and ``surrogate`` are static; pass
+    ``surrogate=False`` (``SearchSpace.needs_surrogate``) when no
+    searched parameter is hard-gated, so the optimizer descends the TRUE
+    landscape instead of the smoothed one.
+    Returns (objective [L], (annual_cost [L], met_frac [L])).
+    """
+    from repro.kernels import ops     # late: keep repro.search importable
+    carry_end, (_proc, _q, lat, cost, drop) = ops.policy_scan(
+        loads_block, params_block, dt_hours=dt_hours,
+        policy_index=policy_index, differentiable=True,
+        surrogate=surrogate)
+    total = cost.sum(axis=1)
+    backlog_cost = (carry_end[:, 0]
+                    / jnp.maximum(params_block[:, 0], 1e-9) / 3600.0
+                    * params_block[:, 1])
+    cost_ann = (total + backlog_cost) * horizon_scale
+    if slo_mode == AGG_SLO_DROP_RATE:
+        values = drop / jnp.maximum(loads_block, 1e-9)
+        width = tau * slo_limit_lane[:, None] + 1e-4   # rate floor
+        # small absolute allowance: a zero-tolerance limit (drop_rate
+        # <= 0) would otherwise park every compliant bin at sigmoid(0)
+        # = 0.5 and the penalty could never release; the shift keeps
+        # v == limit counting as met (the exact counters' <=) at the
+        # price of a ~3-width optimism the exact re-check absorbs
+        limits = slo_limit_lane + 3e-4
+    else:
+        values = lat
+        width = tau * slo_limit_lane[:, None] + 1e-6
+        limits = slo_limit_lane
+    frac = smooth_met_fraction(values, loads_block, limits, width)
+    shortfall = met_fraction - frac
+    hinge = jax.nn.softplus(shortfall / HINGE_S) * HINGE_S
+    # violation magnitude in widths, rescaled by tau so it reads as
+    # "per unit of the limit", and gated off in the feasible region —
+    # see EXCESS_WEIGHT
+    rel = (values - limits[:, None]) / width
+    w = loads_block
+    excess = tau * (jax.nn.softplus(rel) * w).sum(axis=1) \
+        / jnp.maximum(w.sum(axis=1), 1e-9)
+    gate = jax.nn.sigmoid(shortfall / HINGE_S)
+    penalty = penalty_weight * penalty_scale * (
+        hinge + EXCESS_WEIGHT * gate * excess)
+    return cost_ann + penalty, (cost_ann, frac)

@@ -1,0 +1,559 @@
+"""Multi-start projected-AdamW policy search, one dispatch per search.
+
+``search`` inverts the what-if simulator for one policy: instead of
+enumerating configurations and eyeballing the Table II grid, it descends
+the differentiable annual-cost-plus-SLO-hinge objective
+(``repro.search.objective``) over a declarative ``SearchSpace`` and
+returns the cheapest configuration that *provably* meets the SLO — every
+candidate is re-checked through the bit-exact streaming-aggregate grid
+path before any number is reported.
+
+The optimizer is structured exactly like twin calibration's multi-start
+fit (``repro.calibrate.fit._fit_kernel``): all K restarts x S traffic
+scenarios run as K*S *lanes* of the shared scenario-grid backend, and the
+jitted ``_search_kernel`` scans
+
+    steps  of  grad(lane-block objective)  +  vmap(AdamW)  +  z-clip
+
+so a whole search is ONE device program — no Python loop over restarts,
+ever. ``policy_index`` (and the SLO target, penalty weights, boxes and
+ties) are traced operands, so one compiled kernel serves every policy of
+a tournament at equal shapes; the z-space sigmoid/softplus
+reparameterization (reused from ``calibrate``) is the projection of the
+"projected" AdamW, plus a +-Z_CLIP clamp that keeps restarts out of the
+sigmoid's dead zones.
+
+``search_policies`` is the cross-policy tournament: every requested
+policy's search in one call, ranked into a leaderboard (feasible first,
+then by exact annual cost).
+
+Feasibility failures are never silent: a search whose candidates all
+miss the SLO warns with the policy, the achieved vs required compliance,
+and any parameters pinned against their search box — the actionable
+third of diagnosing "the SLO is simply unreachable in this box".
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import warnings
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import OptimizerConfig
+from repro.core.simulate import GridSummary, simulate_grid
+from repro.core.slo import SLO
+from repro.core.traffic import TrafficModel
+from repro.core.twin import (AGG_SLO_DROP_RATE, AGG_SLO_LATENCY, PARAM_DIM,
+                             Twin, registry_version)
+from repro.calibrate.objective import params_from_z
+from repro.optim.adamw import adamw_update, init_opt_state
+from repro.search.objective import annual_scale, lane_objective
+from repro.search.space import (Z_CLIP, SearchSpace, apply_ties,
+                                default_space, search_space)
+
+#: AdamW settings for the z-space search: no decay (z=0 is mid-box, not a
+#: prior), generous clip, short warmup; total_steps is overwritten with
+#: the search's step count so the cosine tail anneals the final approach
+#: to the SLO boundary.
+DEFAULT_SEARCH_OPT = OptimizerConfig(lr=0.12, betas=(0.9, 0.95), eps=1e-8,
+                                     weight_decay=0.0, grad_clip=10.0,
+                                     warmup_steps=10, total_steps=200)
+
+#: dollars of penalty per unit of hinged SLO shortfall, in multiples of
+#: the base configuration's annual cost: a 1% compliance shortfall costs
+#: one full base-year of spend, so feasibility dominates until met
+DEFAULT_PENALTY_WEIGHT = 100.0
+
+#: stand-in SLO operands when no SLO constrains the search (sigmoid
+#: compliance saturates at 1, the hinge at met_fraction=0 is exactly 0)
+_NO_SLO_LIMIT = 1e30
+
+
+class SearchInfeasibleWarning(UserWarning):
+    """No candidate configuration met the SLO (details in the message)."""
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5, 6))
+def _search_kernel(steps: int, n_scen: int, dt_hours: float, slo_mode: int,
+                   surrogate: bool, version: int, ocfg: OptimizerConfig,
+                   z0, loads, scen_w, lo, hi, log_mask, free_mask, fixed,
+                   tie_src, tie_coeff, policy_index, slo_limit_k,
+                   met_fraction, penalty_weight, penalty_scale,
+                   horizon_scale):
+    """K restarts x S scenarios, one dispatch (see module docstring).
+
+    z0 [K, PARAM_DIM]; loads [S, T]; scen_w [S] (normalized);
+    slo_limit_k [K] per-restart SLO limits (a plain search broadcasts one
+    limit; the Pareto frontier packs its whole target vector here).
+    ``steps``/``n_scen``/``dt_hours``/``slo_mode``/``ocfg`` are static;
+    ``version`` is the policy-registry version so late registrations
+    retrace (same contract as the grid and fit kernels). Everything else
+    — including ``policy_index`` and the box/tie arrays — is traced, so
+    one compile serves a whole tournament at equal shapes.
+    Returns (z_fin [K, D], params_fin [K, D], objective [K],
+    cost_ann [K, S], met_frac [K, S], history [steps, K]).
+    """
+    k = z0.shape[0]
+    loads_block = jnp.tile(loads, (k, 1))
+    slo_lane = jnp.repeat(slo_limit_k, n_scen)
+
+    def params_of(z):
+        p = jax.vmap(lambda zz: params_from_z(zz, lo, hi, log_mask,
+                                              free_mask, fixed))(z)
+        return jax.vmap(lambda row: apply_ties(row, tie_src, tie_coeff))(p)
+
+    def objective(z):
+        p = params_of(z)
+        pb = jnp.repeat(p, n_scen, axis=0)
+        per_lane, (cost_ann, frac) = lane_objective(
+            pb, loads_block, dt_hours, policy_index, slo_lane, slo_mode,
+            met_fraction, penalty_weight, penalty_scale, horizon_scale,
+            surrogate=surrogate)
+        per_restart = (per_lane.reshape(k, n_scen) * scen_w).sum(axis=1)
+        return per_restart.sum(), (per_restart,
+                                   cost_ann.reshape(k, n_scen),
+                                   frac.reshape(k, n_scen))
+
+    vgrad = jax.value_and_grad(objective, has_aux=True)
+    opt0 = jax.vmap(lambda z: init_opt_state({"z": z}, ocfg))(z0)
+
+    def one_step(carry, _):
+        z, opt = carry
+        (_, (per_restart, _, _)), g = vgrad(z)
+
+        def upd(zk, gk, ok):
+            new_p, new_o = adamw_update({"z": zk}, {"z": gk}, ok, ocfg)
+            # the projection: stay on the live part of the bijection
+            return jnp.clip(new_p["z"], -Z_CLIP, Z_CLIP), new_o
+
+        z2, opt2 = jax.vmap(upd)(z, g, opt)
+        return (z2, opt2), per_restart
+
+    (z_fin, _), history = jax.lax.scan(one_step, (z0, opt0), None,
+                                       length=steps)
+    obj_sum, (per_restart, cost_ann, frac) = objective(z_fin)
+    del obj_sum
+    return (z_fin, params_of(z_fin), per_restart, cost_ann, frac, history)
+
+
+@dataclass
+class SearchResult:
+    """Cheapest SLO-feasible configuration plus the evidence trail."""
+    policy: str
+    space: SearchSpace
+    twin: Twin                     # best candidate (feasible when any is)
+    cost_usd: float                # exact annual cost of ``twin``
+    feasible: bool                 # SLO met on EVERY traffic scenario
+    scenario_rows: List[GridSummary]      # twin's bit-exact rows, per scen
+    base_cost_usd: float
+    base_feasible: bool
+    best_restart: int
+    restart_params: np.ndarray     # [K, PARAM_DIM]
+    restart_costs: np.ndarray      # [K] exact annual cost per restart
+    restart_feasible: np.ndarray   # [K] bool
+    restart_pct: np.ndarray        # [K] worst-scenario exact SLO pct
+    history: np.ndarray            # [steps, K] smooth objective
+    slo: Optional[SLO] = None
+
+    @property
+    def saving_vs_base(self) -> float:
+        """Annual dollars saved against the base configuration."""
+        return self.base_cost_usd - self.cost_usd
+
+    @property
+    def p95_latency_s(self) -> float:
+        """Worst-scenario p95 latency of the chosen configuration (off
+        the bit-exact aggregate histogram — the p-latency SLO evidence)."""
+        return max((r.p95_latency_s for r in self.scenario_rows),
+                   default=0.0)
+
+    @property
+    def p99_latency_s(self) -> float:
+        return max((r.p99_latency_s for r in self.scenario_rows),
+                   default=0.0)
+
+    def config(self) -> Dict[str, float]:
+        """The searched parameters of the winning configuration."""
+        return {n: float(self.twin.param(n))
+                for n in self.space.free_names}
+
+    def restart_table(self) -> List[Dict]:
+        rows = []
+        for i in range(len(self.restart_costs)):
+            row = {"restart": i,
+                   "cost_usd": round(float(self.restart_costs[i]), 2),
+                   "feasible": bool(self.restart_feasible[i]),
+                   "pct_met": round(float(self.restart_pct[i]), 3),
+                   "best": i == self.best_restart}
+            for j, n in enumerate(self.space.param_names):
+                if self.space.free_mask[j]:
+                    row[n] = round(float(self.restart_params[i, j]), 5)
+            rows.append(row)
+        return rows
+
+    def leaderboard_row(self) -> Dict:
+        row = {"policy": self.policy,
+               "feasible": self.feasible,
+               "cost_usd": round(self.cost_usd, 2),
+               "saving_vs_base": round(self.saving_vs_base, 2),
+               "latency_p95_s": round(self.p95_latency_s, 2),
+               "config": ", ".join(f"{k}={v:g}"
+                                   for k, v in self.config().items())}
+        return row
+
+
+def _norm_weights(scenario_weights, n_scen: int) -> np.ndarray:
+    w = np.asarray(scenario_weights if scenario_weights is not None
+                   else np.full(n_scen, 1.0 / n_scen), np.float32)
+    if w.shape != (n_scen,):
+        raise ValueError(f"scenario_weights has shape {w.shape} for "
+                         f"{n_scen} traffic scenarios — one weight per "
+                         f"scenario")
+    return w / max(w.sum(), 1e-12)
+
+
+def _run_kernel(space: SearchSpace, g_loads: np.ndarray, g_bin: float,
+                scen_w: np.ndarray, z0: np.ndarray, slo_limit_k: np.ndarray,
+                slo_mode: int, met: float, penalty_weight: float,
+                penalty_scale: float, g_horizon: float, steps: int,
+                ocfg: OptimizerConfig):
+    """Marshal one ``_search_kernel`` dispatch for a space and return
+    ([K, PARAM_DIM] finite candidate vectors, [steps, K] history) —
+    diverged restarts fall back to the base configuration's vector.
+    Shared by ``search`` (one SLO limit broadcast over K) and
+    ``pareto_frontier`` (M*K lane-packed limits)."""
+    (_, p_fin, _, _, _, history) = _search_kernel(
+        int(steps), g_loads.shape[0], float(g_bin), int(slo_mode),
+        bool(space.needs_surrogate), registry_version(), ocfg,
+        jnp.asarray(z0), jnp.asarray(g_loads), jnp.asarray(scen_w),
+        jnp.asarray(space.lo), jnp.asarray(space.hi),
+        jnp.asarray(space.log_mask), jnp.asarray(space.free_mask),
+        jnp.asarray(space.fixed), jnp.asarray(space.tie_src),
+        jnp.asarray(space.tie_coeff), jnp.int32(space.policy_index),
+        jnp.asarray(slo_limit_k, jnp.float32), jnp.float32(met),
+        jnp.float32(penalty_weight), jnp.float32(penalty_scale),
+        jnp.float32(g_horizon))
+    p_fin = np.asarray(p_fin, np.float64)
+    bad = ~np.isfinite(p_fin).all(axis=1)
+    if bad.any():
+        p_fin[bad] = space._resolve(space.base.padded_params())
+    return p_fin, np.asarray(history, np.float64)
+
+
+def _as_loads(traffics, loads, bin_hours):
+    if (traffics is None) == (loads is None):
+        raise ValueError("pass exactly one of traffics= (TrafficModels) "
+                         "or loads= [S, T] with bin_hours=")
+    if traffics is not None:
+        if isinstance(traffics, TrafficModel):
+            traffics = [traffics]
+        loads_np = np.stack([tr.hourly_loads() for tr in traffics]) \
+            .astype(np.float32)
+        return loads_np, 1.0, [tr.name for tr in traffics]
+    loads_np = np.asarray(loads, np.float32)
+    if loads_np.ndim == 1:
+        loads_np = loads_np[None]
+    if bin_hours is None:
+        raise ValueError("raw loads= need bin_hours=")
+    return loads_np, float(bin_hours), \
+        [f"scenario{i}" for i in range(len(loads_np))]
+
+
+def evaluate_exact(twins: Sequence[Twin], loads_np: np.ndarray,
+                   bin_hours: float, slo: Optional[SLO],
+                   scen_w: np.ndarray, horizon_scale: float
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                              List[List[GridSummary]]]:
+    """Bit-exact candidate scoring through the streaming-aggregate grid.
+
+    Every (candidate x scenario) pair runs as one aggregate-mode
+    ``simulate_grid`` dispatch; a candidate is feasible only when the SLO
+    holds on EVERY scenario (``GridSummary.slo_met`` — the exact counters,
+    with the histogram p95/p99 columns riding along as the p-latency
+    evidence ``SearchResult`` reports). Returns (annual_cost [C],
+    feasible [C], worst_pct [C], rows [C][S]).
+    """
+    c, s = len(twins), loads_np.shape[0]
+    grid_twins = [tw for tw in twins for _ in range(s)]
+    load_index = np.tile(np.arange(s, dtype=np.int32), c)
+    names = [f"{tw.name}@s{j}" for tw in twins for j in range(s)]
+    rows = simulate_grid(grid_twins, names=names, slo=slo,
+                         bin_hours=bin_hours, return_series=False,
+                         load_matrix=loads_np, load_index=load_index)
+    rows_by_cand = [rows[i * s:(i + 1) * s] for i in range(c)]
+    cost = np.array([sum(w * r.total_cost_usd
+                         for w, r in zip(scen_w, rr)) * horizon_scale
+                     for rr in rows_by_cand])
+    if slo is None:
+        feas = np.ones(c, bool)
+        pct = np.full(c, 100.0)
+    else:
+        feas = np.array([all(r.slo_met for r in rr)
+                         for rr in rows_by_cand])
+        pct = np.array([min(r.pct_latency_met for r in rr)
+                        for rr in rows_by_cand])
+    return cost, feas, pct, rows_by_cand
+
+
+def _coarsen(loads_np: np.ndarray, bin_hours: float, factor: int):
+    """Sum groups of ``factor`` bins for the gradient loop (the policy
+    steps are bin-width aware, so dt simply grows); the exact re-check
+    always runs on the original bins."""
+    if factor <= 1:
+        return loads_np, bin_hours
+    t = loads_np.shape[1] // factor * factor
+    coarse = loads_np[:, :t].reshape(loads_np.shape[0], -1, factor) \
+        .sum(axis=2)
+    return np.ascontiguousarray(coarse, np.float32), bin_hours * factor
+
+
+def _bounds_diagnosis(space: SearchSpace, params: np.ndarray) -> List[str]:
+    """Names of free parameters pinned against their search box (within
+    0.5% of an edge, measured in the parameter's own fit scale — log for
+    log-fitted parameters) — the actionable half of an infeasibility
+    report."""
+    pinned = []
+    for i, n in enumerate(space.param_names):
+        if not space.free_mask[i]:
+            continue
+        lo, hi = float(space.lo[i]), float(space.hi[i])
+        if not (np.isfinite(hi) and hi > lo):
+            continue
+        v = float(params[i])
+        if space.log_mask[i] and lo > 0:
+            frac = (np.log(max(v, 1e-300)) - np.log(lo)) \
+                / max(np.log(hi) - np.log(lo), 1e-12)
+        else:
+            frac = (v - lo) / (hi - lo)
+        if frac <= 0.005:
+            pinned.append(f"{n}={v:g} at lower bound {lo:g}")
+        elif frac >= 0.995:
+            pinned.append(f"{n}={v:g} at upper bound {hi:g}")
+    return pinned
+
+
+def _box_pos(space: SearchSpace, p: np.ndarray) -> np.ndarray:
+    """Free coords of ``p`` as normalized positions in their boxes
+    (log scale where the space fits the exponent)."""
+    u = np.zeros(PARAM_DIM)
+    for i in np.where(space.free_mask)[0]:
+        lo, hi = float(space.lo[i]), float(space.hi[i])
+        if space.log_mask[i] and lo > 0:
+            u[i] = (np.log(max(p[i], lo)) - np.log(lo)) \
+                / max(np.log(hi) - np.log(lo), 1e-12)
+        else:
+            u[i] = (p[i] - lo) / max(hi - lo, 1e-12)
+    return np.clip(u, 0.0, 1.0)
+
+
+def _box_params(space: SearchSpace, p_base: np.ndarray,
+                u: np.ndarray) -> np.ndarray:
+    """Inverse of ``_box_pos``: rebuild a full parameter vector from
+    normalized free coords (ties re-applied). Positions 0/1 land on the
+    box edges EXACTLY — the one thing the sigmoid reparam cannot do."""
+    p = p_base.astype(np.float64).copy()
+    for i in np.where(space.free_mask)[0]:
+        lo, hi = float(space.lo[i]), float(space.hi[i])
+        if space.log_mask[i] and lo > 0:
+            p[i] = lo * (hi / lo) ** u[i]
+        else:
+            p[i] = lo + u[i] * (hi - lo)
+    return space._resolve(p)
+
+
+def _polish_ladder(space: SearchSpace, p_best: np.ndarray,
+                   span: float) -> np.ndarray:
+    """[C, PARAM_DIM] polish candidates around the incumbent: per free
+    coordinate, +-span * (1, 1/2, 1/4, 1/8) steps in normalized box
+    position plus the two exact box edges; incumbent first."""
+    u0 = _box_pos(space, p_best)
+    offs = np.array([span, -span, span / 2, -span / 2,
+                     span / 4, -span / 4, span / 8, -span / 8])
+    cands = [space._resolve(p_best)]
+    for j in np.where(space.free_mask)[0]:
+        for target in list(np.clip(u0[j] + offs, 0.0, 1.0)) + [0.0, 1.0]:
+            u = u0.copy()
+            u[j] = target
+            cands.append(_box_params(space, p_best, u))
+    return np.stack(cands)
+
+
+def search(space_or_base: Union[SearchSpace, Twin],
+           traffics=None, slo: Optional[SLO] = None, *,
+           loads: Optional[np.ndarray] = None,
+           bin_hours: Optional[float] = None,
+           restarts: int = 8, steps: int = 120, seed: int = 0,
+           scenario_weights: Optional[Sequence[float]] = None,
+           opt: Optional[OptimizerConfig] = None,
+           penalty_weight: float = DEFAULT_PENALTY_WEIGHT,
+           met_margin: float = 0.002,
+           coarsen: int = 1,
+           polish_rounds: int = 3,
+           search_params: Optional[Sequence[str]] = None) -> SearchResult:
+    """Find the cheapest configuration of one policy that meets ``slo``.
+
+    ``space_or_base`` is a ``SearchSpace`` (full control) or a base
+    ``Twin`` (the policy's ``default_space`` — or ``search_params`` —
+    around it). Traffic comes as ``traffics=`` TrafficModels (hourly
+    year rows) or raw ``loads=`` [S, T] with ``bin_hours=``. All K
+    ``restarts`` x S scenarios run as one ``_search_kernel`` dispatch;
+    ``coarsen`` sums that many bins per gradient-loop step (the exact
+    re-check always uses the original bins). ``met_margin`` tightens the
+    smooth objective's compliance target slightly so candidates land on
+    the feasible side of the boundary the exact re-check draws;
+    ``polish_rounds`` batched coordinate-ladder refinements around the
+    winner (each one exact aggregate dispatch, span quartering per
+    round) then walk it onto that exact boundary — the last fraction of
+    a percent no smooth penalty can locate.
+    """
+    if isinstance(space_or_base, SearchSpace):
+        space = space_or_base
+    elif search_params is not None:
+        space = search_space(space_or_base, search_params)
+    else:
+        space = default_space(space_or_base)
+    loads_np, bin_hours, scen_names = _as_loads(traffics, loads, bin_hours)
+    s = loads_np.shape[0]
+    scen_w = _norm_weights(scenario_weights, s)
+    horizon = annual_scale(loads_np.shape[1], bin_hours)
+
+    # the base configuration's exact cost anchors the penalty scale and
+    # the "what did the search buy us" delta
+    base_cost, base_feas, _, _ = evaluate_exact(
+        [space.base], loads_np, bin_hours, slo, scen_w, horizon)
+
+    if slo is None:
+        slo_mode, slo_limit, met = AGG_SLO_LATENCY, _NO_SLO_LIMIT, 0.0
+    else:
+        slo_mode = (AGG_SLO_DROP_RATE if slo.metric == "drop_rate"
+                    else AGG_SLO_LATENCY)
+        slo_limit = float(slo.limit_s)
+        met = min(float(slo.met_fraction) + met_margin, 1.0)
+
+    g_loads, g_bin = _coarsen(loads_np, bin_hours, int(coarsen))
+    g_horizon = annual_scale(g_loads.shape[1], g_bin)
+    ocfg = dataclasses.replace(opt or DEFAULT_SEARCH_OPT, total_steps=steps)
+    p_fin, history = _run_kernel(
+        space, g_loads, g_bin, scen_w, space.z0(restarts, seed),
+        np.full((restarts,), slo_limit), slo_mode, met, penalty_weight,
+        max(base_cost[0], 1.0), g_horizon, steps, ocfg)
+    cand_twins = [space.twin(p_fin[i], f"{space.policy}-cand{i}")
+                  for i in range(restarts)]
+    cost, feas, pct, rows = evaluate_exact(cand_twins, loads_np, bin_hours,
+                                           slo, scen_w, horizon)
+    cost = np.where(np.isfinite(cost), cost, np.inf)
+    pct = np.nan_to_num(pct, nan=0.0)
+
+    if feas.any():
+        best = int(np.where(feas, cost, np.inf).argmin())
+        feasible = True
+        # polish: batched coordinate ladders around the winner (including
+        # the exact box edges), scored through the SAME exact aggregate
+        # path — one dispatch per round, span halving. This walks the
+        # config onto the exact SLO boundary the smooth hinge can only
+        # approach, and onto box-edge optima the sigmoid reparam can
+        # only asymptote toward.
+        p_best = p_fin[best].copy()
+        best_cost = float(cost[best])
+        best_twin, best_rows = cand_twins[best], rows[best]
+        span = 0.5
+        rounds = int(polish_rounds) if space.num_free else 0
+        for _ in range(rounds):
+            p_c = _polish_ladder(space, p_best, span)
+            twins_c = [space.twin(p_c[i], f"{space.policy}-pol{i}")
+                       for i in range(len(p_c))]
+            c_c, f_c, _, r_c = evaluate_exact(
+                twins_c, loads_np, bin_hours, slo, scen_w, horizon)
+            c_c = np.where(f_c & np.isfinite(c_c), c_c, np.inf)
+            i_c = int(c_c.argmin())
+            if c_c[i_c] < best_cost:
+                best_cost = float(c_c[i_c])
+                best_twin, best_rows = twins_c[i_c], r_c[i_c]
+                p_best = p_c[i_c]
+            span /= 4.0
+        cand_twins = list(cand_twins)
+        cand_twins[best] = best_twin
+        rows = list(rows)
+        rows[best] = best_rows
+        cost = cost.copy()
+        cost[best] = best_cost
+        p_fin[best] = best_twin.padded_params()
+    else:
+        best = int(pct.argmax())       # closest to compliance
+        feasible = False
+        desc = (f"{slo.metric} <= {slo.limit_s:g} in "
+                f"{slo.met_fraction:.0%} of records" if slo is not None
+                else "unconstrained")
+        pins = _bounds_diagnosis(space, p_fin[best])
+        warnings.warn(
+            f"{space.policy} search found NO feasible configuration for "
+            f"SLO ({desc}): best candidate reaches "
+            f"{pct[best]:.2f}% compliance (needs "
+            f"{(slo.met_fraction if slo else 0) * 100:.2f}%)"
+            + (f"; pinned against the search box: {'; '.join(pins)} — "
+               f"widen bounds= on those parameters or relax the SLO"
+               if pins else
+               "; no parameter is pinned at its bound — this policy "
+               "likely cannot meet the SLO on this traffic at any "
+               "configuration in the space"),
+            SearchInfeasibleWarning, stacklevel=2)
+
+    return SearchResult(
+        policy=space.policy, space=space,
+        twin=dataclasses.replace(cand_twins[best],
+                                 name=f"{space.policy}-opt"),
+        cost_usd=float(cost[best]), feasible=feasible,
+        scenario_rows=rows[best],
+        base_cost_usd=float(base_cost[0]), base_feasible=bool(base_feas[0]),
+        best_restart=best, restart_params=p_fin,
+        restart_costs=cost, restart_feasible=feas, restart_pct=pct,
+        history=np.asarray(history, np.float64), slo=slo)
+
+
+@dataclass
+class TournamentResult:
+    """Ranked cross-policy search results (feasible first, then cost)."""
+    results: List[SearchResult] = field(default_factory=list)
+
+    @property
+    def best(self) -> SearchResult:
+        return self.ranked()[0]
+
+    def ranked(self) -> List[SearchResult]:
+        return sorted(self.results,
+                      key=lambda r: (not r.feasible, r.cost_usd))
+
+    def leaderboard_rows(self) -> List[Dict]:
+        rows = []
+        best_cost = self.best.cost_usd
+        for i, r in enumerate(self.ranked()):
+            row = {"rank": i + 1}
+            row.update(r.leaderboard_row())
+            row["vs_winner_usd"] = round(r.cost_usd - best_cost, 2)
+            rows.append(row)
+        return rows
+
+
+def search_policies(bases: Sequence[Twin], traffics=None,
+                    slo: Optional[SLO] = None, *,
+                    search_params: Optional[Dict[str, Sequence[str]]] = None,
+                    spaces: Optional[Sequence[SearchSpace]] = None,
+                    **kwargs) -> TournamentResult:
+    """The cross-policy tournament: one search per base twin (its
+    policy's default space, a ``search_params[policy]`` override, or a
+    prebuilt entry of ``spaces``), every search one kernel dispatch — and
+    all of them ONE compile when shapes agree, since the policy index and
+    boxes are traced operands. Returns the ranked leaderboard."""
+    if spaces is None:
+        spaces = []
+        for base in bases:
+            override = (search_params or {}).get(base.policy)
+            spaces.append(search_space(base, override)
+                          if override is not None else default_space(base))
+    results = [search(sp, traffics, slo, **kwargs) for sp in spaces]
+    return TournamentResult(results=results)
