@@ -9,6 +9,9 @@
 #   make grid-bench-stream series vs streaming-aggregate simulate_grid at
 #                          1024/8192/65536 full-year scenarios
 #                          (writes BENCH_grid_stream.json)
+#   make grid-bench-shard  sharded block engine at 65536/262144/1048576
+#                          full-year scenarios over a 1/2/4-device
+#                          scenario mesh (writes BENCH_grid_shard.json)
 #   make calibrate-bench   multi-start twin-fit wall-clock vs K
 #                          (writes BENCH_calibrate.json)
 #   make search-bench      one-dispatch K-restart policy search vs serial
@@ -19,7 +22,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-deps bench bench-grid grid-bench-pallas \
-        grid-bench-stream calibrate-bench search-bench
+        grid-bench-stream grid-bench-shard calibrate-bench search-bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -38,6 +41,9 @@ grid-bench-pallas:
 
 grid-bench-stream:
 	$(PYTHON) -m benchmarks.run grid-stream
+
+grid-bench-shard:
+	$(PYTHON) -m benchmarks.run grid-shard
 
 calibrate-bench:
 	$(PYTHON) -m benchmarks.run calibrate

@@ -23,20 +23,41 @@ runs where its five [N, 8736] f32 + f64 buffers fit comfortably
 (N <= SERIES_MAX_N); the aggregate path streams every size through
 scenario blocks, so 65536 scenarios complete on this CPU container.
 
+``bench_shard`` sweeps the sharded block engine — the donated async
+policy-uniform block dispatch of ``core.simulate._grid_agg_dispatch``,
+single-device and over a 1/2/4-device scenario mesh — at N in
+{65536, 262144, 1048576} full-year scenarios, and writes
+``BENCH_grid_shard.json``. On this 1-core CPU container the fake host
+devices share the core, so the mesh rows document the sharded
+*structure* (and its bit-parity with the one-device engine); the
+single-device row is the wall-clock number, measured against the prior
+serial ``lax.map`` engine recorded in ``BENCH_grid_stream.json``.
+
   PYTHONPATH=src python benchmarks/grid_bench.py           # looped/vmapped
   PYTHONPATH=src python benchmarks/grid_bench.py pallas    # backend sweep
   PYTHONPATH=src python benchmarks/grid_bench.py stream    # series vs agg
+  PYTHONPATH=src python benchmarks/grid_bench.py shard     # sharded engine
   PYTHONPATH=src python -m benchmarks.run grid             # looped/vmapped
   PYTHONPATH=src python -m benchmarks.run grid-pallas      # backend sweep
   PYTHONPATH=src python -m benchmarks.run grid-stream      # series vs agg
-  make grid-bench-pallas / make grid-bench-stream
+  PYTHONPATH=src python -m benchmarks.run grid-shard       # sharded engine
+  make grid-bench-pallas / make grid-bench-stream / make grid-bench-shard
 """
 from __future__ import annotations
 
 import json
+import os
 import pathlib
+import sys
 import time
 from typing import Dict, List
+
+# the shard sweep needs multiple host devices, and XLA only reads this
+# before its first backend init — so it must be set before jax imports
+# anywhere in the process (harmless for every other sweep)
+if {"shard", "grid-shard"} & set(sys.argv[1:]):
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=4")
 
 import jax
 import jax.numpy as jnp
@@ -54,12 +75,16 @@ N_TRAFFICS = 8
 REPEATS = 5
 PALLAS_SIZES = (64, 256, 1024)
 STREAM_SIZES = (1024, 8192, 65536)
+SHARD_SIZES = (65536, 262144, 1048576)
+SHARD_MESHES = (1, 2, 4)
 SERIES_MAX_N = 1024        # five [N, 8736] f32+f64 series stay <1 GB here
 STREAM_BLOCK = 4096        # aggregate-mode lax.map scenario block
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_grid_pallas.json"
 STREAM_JSON = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_grid_stream.json"
+SHARD_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_grid_shard.json"
 
 
 def _grid(n_twins: int = N_TWINS, n_traffics: int = N_TRAFFICS):
@@ -255,6 +280,90 @@ def bench_stream(sizes=STREAM_SIZES, repeats: int = 3) -> Dict:
     return out
 
 
+def _shard_grid(n: int, n_traffics: int = 16):
+    """The shard sweep's raw dispatch operands — the ``_stream_grid``
+    scenario mix without materializing an n-element twin list (at a
+    million scenarios the engine arrays are the honest cost; a Python
+    object list is not)."""
+    twins8, _ = _grid(n_twins=8, n_traffics=1)
+    reps = -(-n // 8)
+    params = np.tile(np.stack([tw.padded_params() for tw in twins8]),
+                     (reps, 1))[:n].astype(np.float32)
+    idx = np.tile(np.asarray([tw.policy_index for tw in twins8], np.int32),
+                  reps)[:n]
+    matrix = np.stack([TrafficModel.honda_default(f"g{g:.3f}", R=3.5,
+                                                  G=float(g)).hourly_loads()
+                       for g in np.linspace(1.0, 1.7, n_traffics)]).astype(
+        np.float32)
+    index = (np.arange(n, dtype=np.int32) // 8) % n_traffics
+    return matrix, index, params, idx
+
+
+def bench_shard(sizes=SHARD_SIZES, meshes=SHARD_MESHES) -> Dict:
+    """Sharded million-scenario aggregate engine: N x mesh sweep.
+
+    Every (N, devices) cell runs the full streaming dispatch end to end —
+    policy-uniform block plan, donated async device scans, overlapped
+    host histogram binning, scatter back to grid order. devices=1 is the
+    single-device engine; devices>1 shards one block per device per
+    round through ``shard_map``. Bit-parity across mesh sizes is
+    asserted at the smallest N before any timing is recorded.
+    """
+    from repro.core.simulate import _grid_agg_dispatch, agg_auto_block
+    avail = jax.device_count()
+    usable = [d for d in meshes if d <= avail]
+    skipped = [d for d in meshes if d > avail]
+    slo_limit = 4.0 * 3600.0
+    block = agg_auto_block(8736)
+
+    def dispatch(matrix, index, params, idx, d):
+        return _grid_agg_dispatch(matrix, index, params, idx, 1.0,
+                                  slo_limit, 0, None,
+                                  devices=None if d == 1 else d)
+
+    # warm every mesh's jit cache on a 2x-block grid (same [block] shapes
+    # the big sweeps compile to), so the timed runs measure execution
+    warm = _shard_grid(2 * block)
+    for d in usable:
+        dispatch(*warm, d)
+
+    rows = []
+    for n in sizes:
+        matrix, index, params, idx = _shard_grid(n)
+        row = {"scenarios": n, "hours": int(matrix.shape[1]),
+               "scenario_block": block, "mesh": {}}
+        base = None
+        for d in usable:
+            t0 = time.perf_counter()
+            carry, agg = dispatch(matrix, index, params, idx, d)
+            ms = (time.perf_counter() - t0) * 1e3
+            row["mesh"][str(d)] = round(ms, 1)
+            if n == sizes[0]:
+                if base is None:
+                    base = (carry, agg)
+                else:
+                    np.testing.assert_array_equal(carry, base[0])
+                    np.testing.assert_array_equal(agg, base[1])
+        del carry, agg, base
+        rows.append(row)
+    baseline = None
+    if STREAM_JSON.exists():      # the prior serial lax.map engine's time
+        for r in json.loads(STREAM_JSON.read_text())["sizes"]:
+            if r["scenarios"] == sizes[0] and r.get("aggregate_ms"):
+                baseline = {"scenarios": sizes[0],
+                            "lax_map_aggregate_ms": r["aggregate_ms"]}
+    out = {"device": jax.devices()[0].platform, "device_count": avail,
+           "meshes": usable, "meshes_skipped_no_devices": skipped,
+           "scenario_block": block,
+           "parity": "mesh results bit-identical at the smallest N",
+           "note": "fake host devices share this container's one core; "
+                   "mesh>1 rows document sharded structure, devices=1 is "
+                   "the wall-clock number",
+           "serial_baseline": baseline, "sizes": rows}
+    SHARD_JSON.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    return out
+
+
 def main() -> List[str]:
     r = bench()
     return [f"grid/looped_{r['scenarios']}x,{r['looped_ms'] * 1e3:.0f},"
@@ -292,9 +401,27 @@ def main_stream() -> List[str]:
     return lines
 
 
+def main_shard() -> List[str]:
+    r = bench_shard()
+    lines = []
+    for row in r["sizes"]:
+        n = row["scenarios"]
+        for d, ms in sorted(row["mesh"].items(), key=lambda kv: int(kv[0])):
+            lines.append(f"grid/shard_{n}x_d{d},{ms * 1e3:.0f},"
+                         f"block={row['scenario_block']}")
+    if r["serial_baseline"]:
+        b = r["serial_baseline"]
+        lines.append(f"grid/shard_baseline_{b['scenarios']}x,"
+                     f"{b['lax_map_aggregate_ms'] * 1e3:.0f},"
+                     f"prior-serial-lax-map")
+    lines.append(f"grid/shard_json,0,wrote={SHARD_JSON.name}")
+    return lines
+
+
 if __name__ == "__main__":
-    import sys
-    if "pallas" in sys.argv[1:]:
+    if "shard" in sys.argv[1:]:
+        print(json.dumps(bench_shard(), indent=2, sort_keys=True))
+    elif "pallas" in sys.argv[1:]:
         print(json.dumps(bench_pallas(), indent=2, sort_keys=True))
     elif "stream" in sys.argv[1:]:
         print(json.dumps(bench_stream(), indent=2, sort_keys=True))

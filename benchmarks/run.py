@@ -13,6 +13,11 @@ grid-backend sweep ``grid-pallas`` — XLA vs Pallas-interpret at
 64/256/1024 scenarios (writes BENCH_grid_pallas.json) — and the
 streaming sweep ``grid-stream`` — series vs aggregate ``simulate_grid``
 at 1024/8192/65536 full-year scenarios (writes BENCH_grid_stream.json) —
+the sharded-engine sweep ``grid-shard`` — the policy-uniform block
+engine at 65536/262144/1048576 full-year scenarios over a 1/2/4-device
+scenario mesh (writes BENCH_grid_shard.json; run with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` or pass
+``grid-shard`` on the command line, which sets it before jax loads) —
 and the policy-search benchmark ``search`` — one-dispatch K-restart
 search vs a serial loop, and search vs the exhaustive 4096-point grid
 (writes BENCH_search.json).
@@ -59,6 +64,8 @@ TABLES = {
                                       fromlist=["main_pallas"]).main_pallas(),
     "grid-stream": lambda: __import__("benchmarks.grid_bench",
                                       fromlist=["main_stream"]).main_stream(),
+    "grid-shard": lambda: __import__("benchmarks.grid_bench",
+                                     fromlist=["main_shard"]).main_shard(),
     "calibrate": lambda: __import__("benchmarks.calibrate_bench",
                                     fromlist=["main"]).main(),
     "search": lambda: __import__("benchmarks.search_bench",

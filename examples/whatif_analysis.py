@@ -179,6 +179,31 @@ print(f"{len(sweep)} scenarios, {len(met)} meet the 4h/95% SLO; the "
       f"no per-scenario hourly series were ever materialized.")
 
 # ---------------------------------------------------------------------------
+# Scaling the grid past this sweep — the same ``run_grid`` call, bigger N.
+# Three levers (all bit-identical to the defaults; see the "Scaling the
+# grid" section of ``simulate_grid``'s docstring and ``make
+# grid-bench-shard``):
+#
+#  * do nothing: grids past ``agg_auto_block(t_bins)`` scenarios stream
+#    through the device automatically in policy-uniform blocks sized so
+#    one block's [B, T] staging panel fits a ~150 MB budget, with the
+#    host's histogram binning overlapped against the device's next block
+#    scan. A 1,048,576-scenario full-year sweep completes on a laptop
+#    -class CPU this way (BENCH_grid_shard.json records it).
+#  * ``scenario_block=``: override the block size when device memory is
+#    tighter (or roomier) than the default budget assumes.
+#  * ``devices=D``: shard the blocked grid over a 1-D scenario mesh —
+#    one block per device per round, load matrix replicated. On real
+#    accelerators each device is one shard; to try it on CPU, export
+#      XLA_FLAGS=--xla_force_host_platform_device_count=4
+#    BEFORE the first jax import and pass ``devices=4``. Results are
+#    bit-identical to devices=None.
+#
+# e.g.:  run_grid(sweep_twins, growths, slo=slo,
+#                 scenario_block=4096, devices=4)
+# ---------------------------------------------------------------------------
+
+# ---------------------------------------------------------------------------
 # What-if #6: INVERT the simulator — "what is the cheapest autoscaler
 # configuration that keeps p95 latency under 2 hours at +40% traffic?"
 # ``whatif.optimize_scenario`` (repro.search) descends a differentiable

@@ -315,65 +315,332 @@ def _grid_scan_agg(loads: jnp.ndarray, params: jnp.ndarray,
     return carry_end, np.concatenate([np.asarray(scalars), hist], axis=-1)
 
 
-@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8, 9))
-def _grid_agg_chunked(load_matrix: jnp.ndarray, load_index: jnp.ndarray,
-                      params: jnp.ndarray, policy_idx: jnp.ndarray,
-                      version: int, dt_hours: float, slo_limit: float,
-                      slo_mode: int, backend: str, interpret: bool):
-    """Chunked megabatch dispatch: ``lax.map`` over scenario blocks.
+def _agg_scan_uniform(loads: jnp.ndarray, params: jnp.ndarray,
+                      policy_index: jnp.ndarray, dt_hours: float,
+                      slo_limit: float, slo_mode: int):
+    """Single-policy sibling of ``_agg_scan_vmap``: ``policy_index`` is a
+    SCALAR (possibly traced), so the ``lax.switch`` hoists OUTSIDE the
+    vmapped scan and the block executes exactly one policy branch — on a
+    mixed five-policy grid that is ~5x less per-bin work than the vmapped
+    switch (which a batched index lowers to evaluate-all-and-select).
+    The per-scenario op sequence inside the selected branch is IDENTICAL
+    to ``_agg_scan_vmap``'s, so results stay bit-for-bit equal; the block
+    planner (``_agg_block_plan``) guarantees every chunked block is
+    single-policy. Same returns: (carry_end [N, CARRY_DIM], scalars
+    [N, AGG_SCALARS], latency panel [N, T])."""
+    branches = policy_branches()
+    dt = jnp.asarray(dt_hours, jnp.float32)
 
-    load_matrix [K, T] holds each distinct load row ONCE; load_index
-    [C, B], params [C, B, D], policy_idx [C, B] are the scenario axis
-    reshaped into C blocks of B. Each block gathers its [B, T] loads from
-    the matrix and runs the streaming-aggregate scan (the XLA branch bins
-    its staged latency panel through the ``pure_callback`` bincount), so
-    peak device memory is one block's loads + panel + the O(N)
-    aggregates — grids far larger than device memory stream through in
-    one call. ``backend`` is static ("xla" | "pallas") so flipping the
-    Pallas switch between calls never reuses a stale trace."""
-    block = load_index.shape[1]
+    def uniform(j):
+        def one(load, p):
+            def bin_step(state, arrive):
+                carry, agg = state
+                carry, outs = branches[j](carry, arrive, p, dt)
+                agg = update_agg_scalars(agg, arrive, outs, slo_limit,
+                                         slo_mode)
+                return (carry, agg), outs[2]      # stage latency only
 
-    def one_block(args):
-        lidx, p, pidx = args
-        loads = jnp.take(load_matrix, lidx, axis=0)
+            (carry, agg), latency = jax.lax.scan(
+                bin_step, (jnp.zeros((CARRY_DIM,), jnp.float32),
+                           init_agg_scalars()), load)
+            return carry, pack_agg_scalars(agg), latency
+
+        return jax.vmap(one)
+
+    return jax.lax.switch(policy_index,
+                          [uniform(j) for j in range(len(branches))],
+                          loads, params)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3),
+                   donate_argnums=(8, 9))
+def _agg_block_step_xla(version: int, dt_hours: float, slo_limit: float,
+                        slo_mode: int, load_matrix: jnp.ndarray,
+                        lidx: jnp.ndarray, params: jnp.ndarray,
+                        policy_index: jnp.ndarray, carry_acc: jnp.ndarray,
+                        scal_acc: jnp.ndarray, offset):
+    """One donated block step of the async XLA engine: gather the block's
+    [B, T] loads from the replicated matrix, run the uniform-branch
+    aggregate scan, and write the O(B) results into the donated [Npad, *]
+    accumulators at ``offset``. ``donate_argnums`` hands the accumulator
+    buffers back to XLA, so device memory stays at ONE block's loads +
+    panel + the O(N) aggregates no matter how many blocks stream through.
+    The [B, T] latency panel is returned raw: the host loop bins it
+    (``np_latency_histogram``) while the device runs the NEXT block —
+    that overlap is the async dispatch."""
+    del version
+    loads = jnp.take(load_matrix, lidx, axis=0)
+    carry, scalars, panel = _agg_scan_uniform(
+        loads, params, policy_index, dt_hours, slo_limit, slo_mode)
+    carry_acc = jax.lax.dynamic_update_slice(carry_acc, carry, (offset, 0))
+    scal_acc = jax.lax.dynamic_update_slice(scal_acc, scalars, (offset, 0))
+    return carry_acc, scal_acc, panel
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4),
+                   donate_argnums=(9, 10))
+def _agg_block_step_pallas(version: int, dt_hours: float, slo_limit: float,
+                           slo_mode: int, interpret: bool,
+                           matrix_t: jnp.ndarray, lidx: jnp.ndarray,
+                           params: jnp.ndarray, policy_index: jnp.ndarray,
+                           carry_acc: jnp.ndarray, agg_acc: jnp.ndarray,
+                           offset):
+    """Pallas twin of ``_agg_block_step_xla``: gathers the block directly
+    in the kernel's scenario-minor layout (``matrix_t`` [T, K] staged once,
+    columns gathered per block — the PR 3/4 layout follow-on: no [B, T]
+    intermediate or per-block transpose copy exists anymore) and runs the
+    fused aggregate kernel, histogram and all on-device. Accumulators are
+    donated exactly as on the XLA path."""
+    del version
+    from repro.core.twin import num_policies
+    from repro.kernels.policy_scan import policy_grid_agg
+    loads_t = jnp.take(matrix_t, lidx, axis=1)
+    onehot = jnp.broadcast_to(
+        jax.nn.one_hot(policy_index, num_policies(), dtype=jnp.float32),
+        (lidx.shape[0], num_policies()))
+    carry, agg = policy_grid_agg(
+        None, params, onehot, dt_hours, slo_limit=slo_limit,
+        slo_mode=slo_mode, interpret=interpret, loads_t=loads_t)
+    carry_acc = jax.lax.dynamic_update_slice(carry_acc, carry, (offset, 0))
+    agg_acc = jax.lax.dynamic_update_slice(agg_acc, agg, (offset, 0))
+    return carry_acc, agg_acc
+
+
+#: host-memory budget a streamed block may spend on its [B, T] staging
+#: arrays (the gathered loads / latency panel) — the block size every
+#: horizon auto-chunks to derives from this, see ``agg_auto_block``
+AGG_BLOCK_BUDGET_BYTES = 150 * 2**20
+
+
+def agg_auto_block(t_bins: int, dtype_bytes: int = 4) -> int:
+    """Auto-chunk block size for a ``t_bins``-bin horizon: the largest
+    lane-aligned scenario count whose [B, T] staging array fits the
+    ~150 MB ``AGG_BLOCK_BUDGET_BYTES``. A fixed scenario count would
+    over-chunk short calibration horizons (thousands of tiny dispatches)
+    and under-chunk long sub-hour ones (panels far past the budget);
+    deriving from the horizon keeps every grid at the same working set.
+    Clamped to [128, 65536] and rounded down to a 128-lane multiple."""
+    block = AGG_BLOCK_BUDGET_BYTES // (max(int(t_bins), 1) * dtype_bytes)
+    return int(min(max(block // 128 * 128, 128), 65536))
+
+
+#: aggregate YEAR grids beyond this many scenarios auto-chunk; kept as a
+#: constant for back-compat — non-year horizons use ``agg_auto_block``
+AGG_AUTO_BLOCK = agg_auto_block(HOURS_PER_YEAR)
+
+
+def _agg_block_plan(policy_idx: np.ndarray, block: int):
+    """Group scenarios into single-policy blocks of ``block``.
+
+    Returns (positions [NB, block] int64, block_policy [NB] int32):
+    ``positions[b, i]`` is the scenario index occupying slot i of block b,
+    or -1 for a pad slot (each policy's run is padded up to a block
+    multiple independently, so every block is policy-uniform — tail pads
+    are per policy, not one global tail). Grouping is a STABLE sort by
+    policy, so scenarios of one policy keep their grid order; results are
+    scattered back through ``positions``, making the regrouping invisible
+    to callers."""
+    policy_idx = np.asarray(policy_idx)
+    order = np.argsort(policy_idx, kind="stable")
+    positions, block_policy = [], []
+    for p in np.unique(policy_idx):
+        pos = order[policy_idx[order] == p]
+        nb = -(-len(pos) // block)
+        padded = np.full(nb * block, -1, np.int64)
+        padded[:len(pos)] = pos
+        positions.append(padded.reshape(nb, block))
+        block_policy.extend([int(p)] * nb)
+    if positions:
+        positions = np.concatenate(positions)
+    else:
+        positions = np.zeros((0, block), np.int64)
+    return positions, np.asarray(block_policy, np.int32)
+
+
+@functools.lru_cache(maxsize=16)
+def _sharded_agg_fn(devices: int, version: int, dt_hours: float,
+                    slo_limit: float, slo_mode: int, backend: str,
+                    interpret: bool, block: int):
+    """Build (and cache) the jitted ``shard_map`` ROUND step for a
+    ``devices``-wide 1-D scenario mesh: the [K, T] load matrix is
+    replicated, and one round feeds each device exactly one
+    single-policy block — lidx [D, B] / params [D, B, PARAM_DIM] /
+    block_policy [D] sharded on the leading axis, so every shard runs
+    the same uniform-branch aggregate scan the one-device engine runs
+    and results are bit-identical to unsharded by construction. The XLA
+    branch returns the raw [D, B, T] latency panels (sharded) instead
+    of binning in-graph: host callbacks inside ``shard_map`` serialize
+    (and can wedge) multi-device dispatch, so the host loop
+    (``_run_blocks_sharded``) bins round r-1's panels with
+    ``np_latency_histogram`` while the devices run round r — the same
+    async overlap as the single-device engine, one block per device."""
+    del version
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.distributed.sharding import shard_map
+
+    mesh = Mesh(np.asarray(jax.devices()[:devices]), ("scenario",))
+
+    def body(load_matrix, lidx, params, block_policy):
+        lidx_b, p_b = lidx[0], params[0]          # the shard's one block
+        pidx_b = block_policy[0]
         if backend == "pallas":
             from repro.core.twin import num_policies
             from repro.kernels.policy_scan import policy_grid_agg
-            onehot = jax.nn.one_hot(pidx, num_policies(),
-                                    dtype=jnp.float32)
-            return policy_grid_agg(loads, p, onehot, dt_hours,
-                                   slo_limit=slo_limit, slo_mode=slo_mode,
-                                   interpret=interpret)
-        carry_end, scalars, lat_panel = _agg_scan_vmap(
-            loads, p, pidx, dt_hours, slo_limit, slo_mode)
-        hist = jax.pure_callback(
-            np_latency_histogram,
-            jax.ShapeDtypeStruct((block, AGG_HIST_BINS), jnp.float32),
-            lat_panel, loads)
-        return carry_end, jnp.concatenate([scalars, hist], axis=-1)
+            loads_t = jnp.take(load_matrix.T, lidx_b, axis=1)
+            onehot = jnp.broadcast_to(
+                jax.nn.one_hot(pidx_b, num_policies(),
+                               dtype=jnp.float32),
+                (block, num_policies()))
+            carry, agg = policy_grid_agg(
+                None, p_b, onehot, dt_hours, slo_limit=slo_limit,
+                slo_mode=slo_mode, interpret=interpret, loads_t=loads_t)
+            return carry[None], agg[None]
+        loads = jnp.take(load_matrix, lidx_b, axis=0)
+        carry, scalars, panel = _agg_scan_uniform(
+            loads, p_b, pidx_b, dt_hours, slo_limit, slo_mode)
+        return carry[None], scalars[None], panel[None]
 
-    return jax.lax.map(one_block, (load_index, params, policy_idx))
+    out_specs = ((P("scenario"), P("scenario"))
+                 if backend == "pallas"
+                 else (P("scenario"), P("scenario"), P("scenario")))
+    sharded = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P("scenario"), P("scenario"), P("scenario")),
+        out_specs=out_specs,
+        check_vma=False)
+    return jax.jit(sharded)
 
 
-#: aggregate grids beyond this many scenarios auto-chunk through lax.map
-#: (bounds the per-block loads + latency panel to ~150 MB for the year)
-AGG_AUTO_BLOCK = 4096
+def _run_blocks_sharded(load_matrix: np.ndarray, lidx: np.ndarray,
+                        params: np.ndarray, block_policy: np.ndarray,
+                        devices: int, version: int, dt_hours: float,
+                        slo_limit: float, slo_mode: int, backend: str,
+                        interpret: bool):
+    """Drive the sharded round step over all blocks: rounds of one block
+    per device, host binning of the previous round's latency panels
+    overlapped with the current round's device scans. ``lidx`` arrives
+    padded to a ``devices`` multiple of blocks (dummy all-pad blocks).
+    Returns host (carry [NB*B, CARRY_DIM], agg [NB*B, AGG_DIM])."""
+    nb, block = lidx.shape
+    d = devices
+    rounds = nb // d
+    npad = nb * block
+    fn = _sharded_agg_fn(d, version, dt_hours, slo_limit, slo_mode,
+                         backend, interpret, block)
+    matrix_dev = jnp.asarray(load_matrix)
+    carry_out = np.empty((npad, CARRY_DIM), np.float32)
+    agg_out = np.empty((npad, AGG_SCALARS + AGG_HIST_BINS), np.float32)
+
+    def rnd(a, r):
+        return jnp.asarray(a[r * d:(r + 1) * d])
+
+    if backend == "pallas":
+        for r in range(rounds):
+            carry, agg = fn(matrix_dev, rnd(lidx, r), rnd(params, r),
+                            rnd(block_policy, r))
+            sl = slice(r * d * block, (r + 1) * d * block)
+            carry_out[sl] = np.asarray(carry).reshape(-1, CARRY_DIM)
+            agg_out[sl] = np.asarray(agg).reshape(-1, agg.shape[-1])
+        return carry_out, agg_out
+
+    def drain(carry, scalars, panels, r):
+        # host side of round r: copy out the O(B) results and bin the
+        # [B, T] panels — called AFTER round r+1 is enqueued, so this
+        # work overlaps the devices' next scans
+        sl = slice(r * d * block, (r + 1) * d * block)
+        carry_out[sl] = np.asarray(carry).reshape(-1, CARRY_DIM)
+        agg_out[sl, :AGG_SCALARS] = np.asarray(scalars).reshape(
+            -1, AGG_SCALARS)
+        for i in range(d):
+            b = r * d + i
+            bsl = slice(b * block, (b + 1) * block)
+            agg_out[bsl, AGG_SCALARS:] = np_latency_histogram(
+                np.asarray(panels[i]), load_matrix, weight_rows=lidx[b])
+
+    pending = None
+    for r in range(rounds):
+        out = fn(matrix_dev, rnd(lidx, r), rnd(params, r),
+                 rnd(block_policy, r))
+        if pending is not None:
+            drain(*pending)
+        pending = (*out, r)
+    if pending is not None:
+        drain(*pending)
+    return carry_out, agg_out
+
+
+def _run_blocks_single(load_matrix: np.ndarray, lidx: np.ndarray,
+                       params: np.ndarray, block_policy: np.ndarray,
+                       version: int, dt_hours: float, slo_limit: float,
+                       slo_mode: int, backend: str, interpret: bool):
+    """The one-device async engine: dispatch block b, then — while the
+    device runs it — bin block b-1's latency panel on the host. JAX's
+    async dispatch returns control at enqueue time, so host bincount and
+    device scan overlap; accumulators are donated across steps (see
+    ``_agg_block_step_*``). Returns host (carry [NB*B, CARRY_DIM],
+    agg [NB*B, AGG_DIM])."""
+    nb, block = lidx.shape
+    npad = nb * block
+    matrix_dev = jnp.asarray(load_matrix)
+    carry_acc = jnp.zeros((npad, CARRY_DIM), jnp.float32)
+    if backend == "pallas":
+        matrix_t = jnp.asarray(load_matrix.T)
+        agg_acc = jnp.zeros((npad, AGG_SCALARS + AGG_HIST_BINS),
+                            jnp.float32)
+        for b in range(nb):
+            carry_acc, agg_acc = _agg_block_step_pallas(
+                version, dt_hours, slo_limit, slo_mode, interpret,
+                matrix_t, jnp.asarray(lidx[b]), jnp.asarray(params[b]),
+                jnp.asarray(block_policy[b]), carry_acc, agg_acc,
+                b * block)
+        return np.asarray(carry_acc), np.asarray(agg_acc)
+    scal_acc = jnp.zeros((npad, AGG_SCALARS), jnp.float32)
+    hist = np.empty((npad, AGG_HIST_BINS), np.float32)
+    pending = None
+    for b in range(nb):
+        carry_acc, scal_acc, panel = _agg_block_step_xla(
+            version, dt_hours, slo_limit, slo_mode, matrix_dev,
+            jnp.asarray(lidx[b]), jnp.asarray(params[b]),
+            jnp.asarray(block_policy[b]), carry_acc, scal_acc, b * block)
+        if pending is not None:
+            prev_panel, prev_b = pending
+            hist[prev_b * block:(prev_b + 1) * block] = \
+                np_latency_histogram(np.asarray(prev_panel), load_matrix,
+                                     weight_rows=lidx[prev_b])
+        pending = (panel, b)
+    if pending is not None:
+        prev_panel, prev_b = pending
+        hist[prev_b * block:(prev_b + 1) * block] = \
+            np_latency_histogram(np.asarray(prev_panel), load_matrix,
+                                 weight_rows=lidx[prev_b])
+    scalars = np.asarray(scal_acc)
+    return (np.asarray(carry_acc),
+            np.concatenate([scalars, hist], axis=-1))
 
 
 def _grid_agg_dispatch(load_matrix: np.ndarray, load_index: np.ndarray,
                        params: np.ndarray, policy_idx: np.ndarray,
                        dt_hours: float, slo_limit: float, slo_mode: int,
-                       scenario_block: Optional[int]):
+                       scenario_block: Optional[int],
+                       devices: Optional[int] = None):
     """Run the aggregate scan over (matrix, index)-encoded scenarios,
     chunked into ``scenario_block``-sized blocks when asked — or when the
-    grid exceeds ``AGG_AUTO_BLOCK`` scenarios (padding the tail block;
-    pad rows are discarded). Returns host numpy
-    (carry_end [N, CARRY_DIM], agg [N, AGG_DIM])."""
+    grid exceeds the horizon's auto-chunk threshold (``agg_auto_block``).
+    Chunked grids are regrouped into single-policy blocks
+    (``_agg_block_plan``) and streamed through the donated async block
+    engine; ``devices`` > 1 instead shards the blocked grid over a 1-D
+    scenario mesh (``_sharded_agg_fn``). All paths return the same host
+    numpy (carry_end [N, CARRY_DIM], agg [N, AGG_DIM]), bit-identical to
+    one another."""
     n = len(load_index)
-    if scenario_block is None and n > AGG_AUTO_BLOCK:
-        scenario_block = AGG_AUTO_BLOCK
+    auto_block = agg_auto_block(load_matrix.shape[1])
+    if scenario_block is None and (n > auto_block
+                                   or (devices or 1) > 1):
+        scenario_block = auto_block
     version = registry_version()
-    if scenario_block is None or scenario_block >= n:
+    if scenario_block is None or (scenario_block >= n
+                                  and (devices or 1) <= 1):
         if (load_matrix.shape[0] == n
                 and np.array_equal(load_index, np.arange(n))):
             loads_np = load_matrix      # identity map: the rows ARE the grid
@@ -384,29 +651,57 @@ def _grid_agg_dispatch(load_matrix: np.ndarray, load_index: np.ndarray,
                                         jnp.asarray(policy_idx), version,
                                         dt_hours, slo_limit, slo_mode,
                                         weights_np=loads_np)
+        return (np.asarray(carry_end, np.float64),
+                np.asarray(agg, np.float64))
+
+    from repro.kernels import ops
+    block = int(min(scenario_block, max(n, 1)))
+    backend = "pallas" if ops.pallas_enabled() else "xla"
+    interpret = ops.interpret_enabled()
+    positions, block_policy = _agg_block_plan(policy_idx, block)
+
+    # stage the per-block host operands through the position map: pad
+    # slots (-1) read row 0 with zero params — discarded on scatter
+    valid = positions >= 0
+    safe = np.where(valid, positions, 0)
+    lidx = np.where(valid, np.asarray(load_index)[safe], 0) \
+        .astype(np.int32)
+    params_b = np.where(valid[..., None], np.asarray(params)[safe],
+                        0).astype(np.float32)
+
+    d = int(devices or 1)
+    if d > 1:
+        nb = positions.shape[0]
+        pad_blocks = (-nb) % d
+        if pad_blocks:      # dummy all-pad blocks so every round is full
+            lidx = np.concatenate(
+                [lidx, np.zeros((pad_blocks, block), np.int32)])
+            params_b = np.concatenate(
+                [params_b,
+                 np.zeros((pad_blocks, block) + params_b.shape[2:],
+                          np.float32)])
+            block_policy = np.concatenate(
+                [block_policy, np.zeros(pad_blocks, np.int32)])
+        carry, agg = _run_blocks_sharded(
+            np.asarray(load_matrix), lidx, params_b, block_policy, d,
+            version, float(dt_hours), float(slo_limit), int(slo_mode),
+            backend, interpret)
+        carry = carry[:nb * block]
+        agg = agg[:nb * block]
     else:
-        from repro.kernels import ops
-        block = int(scenario_block)
-        nblocks = -(-n // block)
-        npad = nblocks * block
-        pad = npad - n
+        carry, agg = _run_blocks_single(
+            np.asarray(load_matrix), lidx, params_b, block_policy,
+            version, float(dt_hours), float(slo_limit), int(slo_mode),
+            backend, interpret)
 
-        def blocked(a, fill=0):
-            a = np.asarray(a)
-            if pad:
-                a = np.concatenate(
-                    [a, np.full((pad,) + a.shape[1:], fill, a.dtype)])
-            return jnp.asarray(a.reshape((nblocks, block) + a.shape[1:]))
-
-        backend = "pallas" if ops.pallas_enabled() else "xla"
-        interpret = ops.interpret_enabled()
-        carry_end, agg = _grid_agg_chunked(
-            jnp.asarray(load_matrix), blocked(load_index),
-            blocked(params), blocked(policy_idx), version, dt_hours,
-            slo_limit, slo_mode, backend, interpret)
-        carry_end = carry_end.reshape(npad, -1)[:n]
-        agg = agg.reshape(npad, -1)[:n]
-    return np.asarray(carry_end, np.float64), np.asarray(agg, np.float64)
+    # scatter block results back to grid order through the position map
+    flat_pos = positions.reshape(-1)
+    vmask = flat_pos >= 0
+    carry_end = np.zeros((n, carry.shape[-1]), np.float64)
+    out_agg = np.zeros((n, agg.shape[-1]), np.float64)
+    carry_end[flat_pos[vmask]] = carry[vmask]
+    out_agg[flat_pos[vmask]] = agg[vmask]
+    return carry_end, out_agg
 
 
 # the jit-cache introspection the tests (and benchmarks) use lives on the
@@ -415,12 +710,15 @@ def _grid_agg_dispatch(load_matrix: np.ndarray, load_index: np.ndarray,
 def _clear_grid_caches():
     _grid_scan_xla.clear_cache()
     _grid_scan_agg_xla.clear_cache()
-    _grid_agg_chunked.clear_cache()
+    _agg_block_step_xla.clear_cache()
+    _agg_block_step_pallas.clear_cache()
+    _sharded_agg_fn.cache_clear()
 
 
 def _grid_cache_size():
     return (_grid_scan_xla._cache_size() + _grid_scan_agg_xla._cache_size()
-            + _grid_agg_chunked._cache_size())
+            + _agg_block_step_xla._cache_size()
+            + _agg_block_step_pallas._cache_size())
 
 
 _grid_scan.clear_cache = _clear_grid_caches
@@ -436,7 +734,8 @@ def simulate_grid(twins: Sequence[Twin], loads: Optional[np.ndarray] = None,
                   return_series: bool = True,
                   load_matrix: Optional[np.ndarray] = None,
                   load_index: Optional[np.ndarray] = None,
-                  scenario_block: Optional[int] = None):
+                  scenario_block: Optional[int] = None,
+                  devices: Optional[int] = None):
     """Simulate N scenarios — twins[i] against loads[i] — in one vmapped
     scan. ``loads`` is [N, T] records per bin of ``bin_hours`` (the year
     tables use [N, HOURS_PER_YEAR] hourly bins).
@@ -473,7 +772,30 @@ def simulate_grid(twins: Sequence[Twin], loads: Optional[np.ndarray] = None,
     including an explicit 1.0) unlocks arbitrary horizons — but storage/
     network accounting (Table IV) is daily-rolling over the year, so a
     cost model + record_mb on a non-year grid is an error, not a silent
-    zero."""
+    zero.
+
+    **Scaling the grid** (aggregate mode). Three independent levers:
+
+    * ``scenario_block`` — scenarios per streamed device block. The
+      default (``agg_auto_block(t_bins)``) sizes blocks so one block's
+      [B, T] staging arrays fit a ~150 MB budget; grids past that stream
+      automatically. Shrink it if a block plus the O(N) aggregates
+      exceeds device memory; growing it buys little — per-block overhead
+      is one dispatch plus one host bincount.
+    * Chunked blocks are regrouped to be *policy-uniform* (stable order,
+      results scattered back), so each block runs exactly one policy
+      branch instead of an evaluate-all-branches select — on a mixed
+      five-policy grid that alone is most of the engine's speedup, at
+      identical bits.
+    * ``devices=D`` — shard the blocked grid over a 1-D ``D``-device
+      scenario mesh (load matrix replicated, scenario blocks sharded).
+      Results are bit-identical to ``devices=None``. On a multi-core CPU
+      host, export ``XLA_FLAGS=--xla_force_host_platform_device_count=D``
+      *before the first jax import* to expose D host devices; on real
+      accelerators each device is one shard. Million-scenario full-year
+      sweeps complete either way — memory stays at one block per device
+      — sharding just divides the wall clock.
+    """
     if (loads is None) == (load_matrix is None):
         raise ValueError("pass exactly one of loads= (stacked [N, T] grid) "
                          "or load_matrix= [K, T] + load_index= [N]")
@@ -524,6 +846,19 @@ def simulate_grid(twins: Sequence[Twin], loads: Optional[np.ndarray] = None,
                          "[N, T] series regardless, so the memory bound "
                          "you asked for cannot be honored — drop "
                          "scenario_block or pass return_series=False")
+    if devices is not None:
+        if return_series:
+            raise ValueError("devices= shards the streaming-aggregate "
+                             "backend only; pass return_series=False")
+        if devices <= 0:
+            raise ValueError(f"devices must be a positive mesh size, "
+                             f"got {devices}")
+        if devices > jax.device_count():
+            raise ValueError(
+                f"devices={devices} but only {jax.device_count()} "
+                f"JAX device(s) are visible; on CPU export "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{devices} before the first jax import")
     params = np.stack([tw.padded_params() for tw in twins])
     idx = np.asarray([tw.policy_index for tw in twins], np.int32)
     names = list(names) if names is not None else [tw.name for tw in twins]
@@ -537,7 +872,7 @@ def simulate_grid(twins: Sequence[Twin], loads: Optional[np.ndarray] = None,
             load_matrix, load_index = loads, np.arange(n, dtype=np.int32)
         carry_end, agg = _grid_agg_dispatch(
             load_matrix, load_index, params, idx, float(bin_hours),
-            slo_limit, slo_mode, scenario_block)
+            slo_limit, slo_mode, scenario_block, devices=devices)
         return _summarise_aggregates(
             names, twins, carry_end[:, 0], agg, slo, cost_model, record_mb,
             float(bin_hours), t_bins, load_matrix, load_index)

@@ -52,14 +52,17 @@ def run_grid(twins: Sequence[Twin], traffics: Sequence[TrafficModel],
              cost_model: Optional[CostModel] = None,
              record_mb: float = 0.0, *,
              return_series: bool = False,
-             scenario_block: Optional[int] = None) -> List[GridResult]:
+             scenario_block: Optional[int] = None,
+             devices: Optional[int] = None) -> List[GridResult]:
     """Every (traffic x twin) combination — the paper's Table II grid —
     simulated in one dispatch over the (load matrix, index map) batch.
 
     Aggregate mode by default (``GridSummary`` rows, O(N) memory end to
     end); ``return_series=True`` restores the full ``SimulationResult``
     series, bit-identical to the pre-streaming engine. ``scenario_block``
-    chunks huge aggregate grids through the device via ``lax.map``."""
+    streams huge aggregate grids through the device in policy-uniform
+    blocks, and ``devices=D`` shards those blocks over a D-device
+    scenario mesh (see ``simulate_grid``'s "Scaling the grid")."""
     if not twins or not traffics:
         return []
     load_matrix = np.stack([tr.hourly_loads() for tr in traffics])
@@ -71,7 +74,7 @@ def run_grid(twins: Sequence[Twin], traffics: Sequence[TrafficModel],
                          cost_model=cost_model, record_mb=record_mb,
                          return_series=return_series,
                          load_matrix=load_matrix, load_index=load_index,
-                         scenario_block=scenario_block)
+                         scenario_block=scenario_block, devices=devices)
 
 
 def calibrated_grid(source, policies: Sequence[str],
@@ -125,10 +128,13 @@ def run_scenarios(scenarios: Sequence[Scenario],
                   cost_model: Optional[CostModel] = None,
                   record_mb: float = 0.0, *,
                   return_series: bool = False,
-                  scenario_block: Optional[int] = None) -> List[GridResult]:
+                  scenario_block: Optional[int] = None,
+                  devices: Optional[int] = None) -> List[GridResult]:
     """Arbitrary named (twin, traffic) pairs, batched like ``run_grid``
     (aggregate mode by default; each scenario brings its own traffic, so
-    the load matrix deduplicates repeated traffic objects only)."""
+    the load matrix deduplicates repeated traffic objects only).
+    ``scenario_block`` / ``devices`` stream and shard exactly as in
+    ``run_grid``."""
     if not scenarios:
         return []
     row_of: Dict[int, int] = {}
@@ -145,7 +151,7 @@ def run_scenarios(scenarios: Sequence[Scenario],
                          cost_model=cost_model, record_mb=record_mb,
                          return_series=return_series,
                          load_matrix=np.stack(rows), load_index=load_index,
-                         scenario_block=scenario_block)
+                         scenario_block=scenario_block, devices=devices)
 
 
 def table2_rows(sims: Sequence[GridResult]) -> List[Dict]:

@@ -1,19 +1,41 @@
 """Logical-axis -> mesh-axis rule table (MaxText-style).
 
 Every parameter/cache leaf declares logical axes in its schema; these rules
-map them onto the production mesh. Rules silently fall back to replication
-when a dim is not divisible by the mesh axis (specs_from_schema), so a
-single rule table serves all ten architectures — the per-arch hillclimb
-overrides live in ParallelConfig.
+map them onto the production mesh. Rules fall back to replication when a
+dim is not divisible by the mesh axis (specs_from_schema), so a single
+rule table serves all ten architectures — the per-arch hillclimb
+overrides live in ParallelConfig. Each distinct fall-back emits a
+one-time ``RuntimeWarning`` naming the axis and sizes, so lost
+parallelism is visible instead of silent.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import ParallelConfig
+
+# replication fall-backs already reported, keyed by (where, axis, dim,
+# size) — falling back is the designed behavior (one rule table serves
+# every architecture), but doing it SILENTLY hides lost parallelism, so
+# each distinct fall-back warns exactly once per process
+_REPLICATION_WARNED = set()
+
+
+def _warn_replicated(where: str, axis, dim: int, size: int):
+    key = (where, str(axis), int(dim), int(size))
+    if key in _REPLICATION_WARNED:
+        return
+    _REPLICATION_WARNED.add(key)
+    warnings.warn(
+        f"{where}: dim {dim} is not divisible by mesh axis {axis!r} "
+        f"(size {size}); falling back to replication — this dimension "
+        f"gets NO parallelism. Pad the dim to a multiple of {size} or "
+        f"shrink the mesh axis to recover it.",
+        RuntimeWarning, stacklevel=3)
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
@@ -128,6 +150,9 @@ def constrain(x, *logical_axes):
             spec.append(mesh_ax)
             used.update(axes_t)
         else:
+            if size > 1:
+                _warn_replicated(f"constrain(logical axis {ax!r})",
+                                 mesh_ax, dim, size)
             spec.append(None)
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, P(*spec)))
@@ -144,9 +169,18 @@ def input_batch_specs(batch_abstract: Dict, parallel: ParallelConfig,
     out = {}
     for k, v in batch_abstract.items():
         if k == "positions" and len(v.shape) == 3:
-            out[k] = P(None, dp, None) if v.shape[1] % size == 0 else P()
+            if v.shape[1] % size == 0:
+                out[k] = P(None, dp, None)
+            else:
+                if size > 1:
+                    _warn_replicated(f"input_batch_specs({k!r})", dp,
+                                     v.shape[1], size)
+                out[k] = P()
         elif v.ndim >= 1 and v.shape[0] % size == 0 and size > 1:
             out[k] = P(dp, *([None] * (v.ndim - 1)))
         else:
+            if size > 1 and v.ndim >= 1:
+                _warn_replicated(f"input_batch_specs({k!r})", dp,
+                                 v.shape[0], size)
             out[k] = P()
     return out

@@ -104,7 +104,12 @@ def policy_scan(loads, params, onehot=None, dt_hours=1.0, *,
     ``differentiable=True`` pins the pure-jnp lane path regardless of the
     Pallas switch — the kernel has no VJP, and twin calibration takes
     ``jax.grad`` through this scan. Both paths run the same
-    lane-vectorized math, so the choice never changes the numbers.
+    lane-vectorized math, so the choice never changes the numbers. When
+    the bin width is a static float, the differentiable path carries the
+    checkpointed O(√T) custom VJP (``kernels.policy_vjp``), so fit/search
+    backward passes rematerialize √T-bin segments instead of taping the
+    whole horizon; a traced ``dt_hours`` falls back to the plain
+    reference scan (autodiff-through-scan), same numbers either way.
 
     ``surrogate=True`` (implies the differentiable path) additionally
     swaps in the smooth-surrogate lane branches so hard-gated policy
@@ -132,6 +137,16 @@ def policy_scan(loads, params, onehot=None, dt_hours=1.0, *,
         return policy_kernel.policy_grid_scan(
             loads, params, onehot, dt_hours,
             interpret=getattr(_state, "interpret", True))
+    if differentiable or surrogate:
+        try:
+            dt_static = float(dt_hours)   # tracers raise TypeError
+        except TypeError:
+            dt_static = None
+        if dt_static is not None:
+            from repro.kernels import policy_vjp
+            return policy_vjp.policy_grid_scan_ckpt(
+                loads, params, onehot, dt_static,
+                policy_index=policy_index, surrogate=surrogate)
     return ref.policy_grid_scan(loads, params, onehot, dt_hours,
                                 policy_index=policy_index,
                                 surrogate=surrogate)

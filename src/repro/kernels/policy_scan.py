@@ -234,27 +234,53 @@ def _policy_agg(loads_t: jnp.ndarray, params: jnp.ndarray,
     )(loads_t, params, onehot)
 
 
-def policy_grid_agg(loads: jnp.ndarray, params: jnp.ndarray,
+def _stage_operands(loads, loads_t, lanes, chunk):
+    """Common operand staging for both wrappers: accepts EXACTLY one of
+    ``loads`` [N, T] (scenario-major, the historical API — transposed and
+    zero-padded into the kernel layout) or ``loads_t`` [T, N] (already
+    scenario-minor: the grid engine's block gathers produce this layout
+    directly, so handing it over skips the [N, T] transpose copy that
+    used to dominate per-block staging — the PR 3/4 layout follow-on).
+    Returns (n, t_bins, npad, lanes, chunk, staged_loads_t)."""
+    if (loads is None) == (loads_t is None):
+        raise ValueError("pass exactly one of loads= ([N, T]) or "
+                         "loads_t= ([T, N] scenario-minor)")
+    if loads_t is None:
+        n, t_bins = loads.shape
+    else:
+        t_bins, n = loads_t.shape
+    lanes = min(lanes, _round_up(max(n, 1), 8))
+    npad = _round_up(max(n, 1), lanes)
+    if t_bins % chunk:
+        chunk = t_bins
+    if loads_t is None:
+        staged = jnp.zeros((t_bins, npad), jnp.float32)
+        staged = staged.at[:, :n].set(jnp.asarray(loads, jnp.float32).T)
+    else:
+        staged = jnp.asarray(loads_t, jnp.float32)
+        if npad != n:   # no-op (and no copy) when already lane-aligned
+            staged = jnp.pad(staged, ((0, 0), (0, npad - n)))
+    return n, t_bins, npad, lanes, chunk, staged
+
+
+def policy_grid_agg(loads: jnp.ndarray | None, params: jnp.ndarray,
                     onehot: jnp.ndarray, dt_hours: float = 1.0, *,
                     slo_limit: float = float("inf"), slo_mode: int = 0,
                     lanes: int = DEFAULT_LANES, chunk: int = DEFAULT_CHUNK,
-                    interpret: bool = True):
+                    interpret: bool = True, loads_t=None):
     """Fused streaming-aggregate grid scan; semantics of
     ``ref.policy_grid_agg``. Same padding/transposition contract as
     ``policy_grid_scan``, but the only outputs are O(N): per-scenario
     final carries and the [AGG_DIM] aggregate rows — the five [N, T]
     series are never allocated, on HBM or anywhere else. ``slo_limit`` /
-    ``slo_mode`` are static (see ``core.twin.AGG_SLO_*``). Returns
+    ``slo_mode`` are static (see ``core.twin.AGG_SLO_*``). Pass
+    ``loads_t=`` ([T, N], ``loads=None``) to hand over operands already
+    in the kernel's scenario-minor layout. Returns
     (carry_end [N, CARRY_DIM], agg [N, AGG_DIM]).
     """
     from repro.core.twin import registry_version
-    n, t_bins = loads.shape
-    lanes = min(lanes, _round_up(max(n, 1), 8))
-    npad = _round_up(max(n, 1), lanes)
-    if t_bins % chunk:
-        chunk = t_bins
-    loads_t = jnp.zeros((t_bins, npad), jnp.float32)
-    loads_t = loads_t.at[:, :n].set(jnp.asarray(loads, jnp.float32).T)
+    n, t_bins, npad, lanes, chunk, loads_t = _stage_operands(
+        loads, loads_t, lanes, chunk)
     pad = lambda a: jnp.zeros((npad, a.shape[1]), jnp.float32).at[:n].set(  # noqa: E731
         jnp.asarray(a, jnp.float32))
     carry_end, agg = _policy_agg(
@@ -265,27 +291,24 @@ def policy_grid_agg(loads: jnp.ndarray, params: jnp.ndarray,
     return carry_end[:n], agg[:n]
 
 
-def policy_grid_scan(loads: jnp.ndarray, params: jnp.ndarray,
+def policy_grid_scan(loads: jnp.ndarray | None, params: jnp.ndarray,
                      onehot: jnp.ndarray, dt_hours: float = 1.0, *,
                      lanes: int = DEFAULT_LANES, chunk: int = DEFAULT_CHUNK,
-                     interpret: bool = True):
+                     interpret: bool = True, loads_t=None):
     """Fused scenario-grid scan; same contract as ``ref.policy_grid_scan``.
 
     loads [N, T]; params [N, PARAM_DIM]; onehot [N, P]. The scenario axis
     is padded up to a LANES multiple (padded lanes carry an all-zero
     policy mask, so they blend to zeros) and transposed scenario-minor for
-    the kernel; outputs come back truncated to N. Returns
+    the kernel; outputs come back truncated to N. ``loads_t=`` ([T, N],
+    with ``loads=None``) skips the transpose for callers that already
+    hold the kernel layout. Returns
     (carry_end [N, CARRY_DIM], (processed, queue, latency, cost, dropped))
     with each series [N, T].
     """
     from repro.core.twin import registry_version
-    n, t_bins = loads.shape
-    lanes = min(lanes, _round_up(max(n, 1), 8))
-    npad = _round_up(max(n, 1), lanes)
-    if t_bins % chunk:
-        chunk = t_bins
-    loads_t = jnp.zeros((t_bins, npad), jnp.float32)
-    loads_t = loads_t.at[:, :n].set(jnp.asarray(loads, jnp.float32).T)
+    n, t_bins, npad, lanes, chunk, loads_t = _stage_operands(
+        loads, loads_t, lanes, chunk)
     pad = lambda a: jnp.zeros((npad, a.shape[1]), jnp.float32).at[:n].set(  # noqa: E731
         jnp.asarray(a, jnp.float32))
     proc, queue, lat, cost, drop, carry_end = _policy_scan(

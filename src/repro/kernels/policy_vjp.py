@@ -1,0 +1,165 @@
+"""Checkpointed custom VJP for the TwinPolicy lane scan.
+
+``jax.grad`` of the plain reference scan (``ref.policy_grid_scan``)
+stores every per-bin carry for the backward pass — O(T) residual memory
+and, on the year horizon, a backward trace XLA re-materializes from the
+full 8736-step forward. This module gives the same scan an explicit
+``jax.custom_vjp`` with the classic O(√T) segment-checkpoint schedule:
+
+* **forward** — the unmodified single ``lax.scan`` over all T bins (bit
+  -identical primal values to ``ref.policy_grid_scan``; the custom rule
+  changes nothing unless a gradient is actually requested);
+* **backward** — the horizon is split into ~√T segments of ~√T bins.
+  One cheap forward replay (carry only, no series) collects the segment
+  -entry carries, then a ``reverse=True`` scan walks the segments back
+  to front, rematerializing each segment with ``jax.vjp`` and chaining
+  the carry cotangent through it. Live residuals are one segment's scan
+  tape plus the [√T, N, CARRY_DIM] entry carries, never the full tape.
+
+Cotangents flow to ``params``, ``loads`` and (on the mixed-grid path)
+``onehot`` — everything calibrate/search differentiate and more; the
+policy selector index is integer-typed and gets the mandatory ``float0``
+zero. ``dt_hours`` / ``surrogate`` / the selector form are nondiff
+trace constants, exactly as static as they are in the jitted fit/search
+kernels that consume this through ``kernels.ops.policy_scan``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _segment_plan(t_bins: int):
+    """(seg_len, num_segments, tail_len) with seg_len ≈ √T — the classic
+    even split; whatever T leaves over runs as one shorter tail segment."""
+    seg = max(1, math.isqrt(max(t_bins, 1)))
+    nseg = t_bins // seg
+    return seg, nseg, t_bins - nseg * seg
+
+
+def _bin_step(cfg, params, onehot, pidx):
+    """The lane bin-step under ``cfg`` = (dt, surrogate, use_onehot) —
+    the exact step ``ref.policy_grid_scan`` scans, so primal values (and
+    therefore the rematerialized segments) match it bit for bit."""
+    from repro.core.twin import (lane_branches, lane_policy_step,
+                                 surrogate_lane_branches)
+    dt_hours, surrogate, use_onehot = cfg
+    branches = (surrogate_lane_branches() if surrogate
+                else lane_branches())
+    dt = jnp.asarray(dt_hours, jnp.float32)
+    if use_onehot:
+        def step(carry, arrive):
+            return lane_policy_step(carry, arrive, params, onehot, dt,
+                                    branches=branches)
+    else:
+        def step(carry, arrive):
+            return jax.lax.switch(pidx, branches, carry, arrive, params,
+                                  dt)
+    return step
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _ckpt_scan(cfg, params, loads_t, onehot, pidx):
+    """Primal: ONE plain scan over all T bins (loads_t [T, N], scenario
+    -minor). Returns (carry_end [N, CARRY_DIM], five [T, N] series)."""
+    from repro.core.twin import CARRY_DIM
+    step = _bin_step(cfg, params, onehot, pidx)
+    n = loads_t.shape[1]
+    return jax.lax.scan(step, jnp.zeros((n, CARRY_DIM), jnp.float32),
+                        loads_t)
+
+
+def _ckpt_fwd(cfg, params, loads_t, onehot, pidx):
+    # residuals are just the primal inputs — segment-entry carries are
+    # recomputed in bwd (one series-free replay), keeping fwd free
+    return _ckpt_scan(cfg, params, loads_t, onehot, pidx), \
+        (params, loads_t, onehot, pidx)
+
+
+def _ckpt_bwd(cfg, res, cots):
+    from repro.core.twin import CARRY_DIM
+    params, loads_t, onehot, pidx = res
+    g_carry, ct_outs = cots
+    t_bins, n = loads_t.shape
+    seg, nseg, tail = _segment_plan(t_bins)
+    step = _bin_step(cfg, params, onehot, pidx)
+    body = t_bins - tail
+
+    def seg_scan(carry0, params_, onehot_, seg_loads):
+        # the differentiable segment: same step, params/onehot rebound so
+        # jax.vjp hands back their cotangents alongside carry and loads
+        s = _bin_step(cfg, params_, onehot_, pidx)
+        return jax.lax.scan(s, carry0, seg_loads)
+
+    # forward replay, carry only: entry carries of the nseg body segments
+    main = loads_t[:body].reshape(nseg, seg, n)
+
+    def seg_fwd(carry, seg_loads):
+        out, _ = jax.lax.scan(lambda c, a: (step(c, a)[0], None), carry,
+                              seg_loads)
+        return out, carry                       # ys = the ENTRY carry
+
+    c_tail, entries = jax.lax.scan(seg_fwd, jnp.zeros((n, CARRY_DIM),
+                                                      jnp.float32), main)
+
+    g_params = jnp.zeros_like(params)
+    g_onehot = jnp.zeros_like(onehot)
+    g_loads = jnp.zeros_like(loads_t)
+    if tail:
+        _, tail_vjp = jax.vjp(seg_scan, c_tail, params, onehot,
+                              loads_t[body:])
+        g_carry, dp, doh, dl = tail_vjp(
+            (g_carry, tuple(o[body:] for o in ct_outs)))
+        g_params, g_onehot = g_params + dp, g_onehot + doh
+        g_loads = g_loads.at[body:].set(dl)
+
+    ct_main = tuple(o[:body].reshape(nseg, seg, n) for o in ct_outs)
+
+    def seg_bwd(state, xs):
+        g_c, g_p, g_oh = state
+        entry, seg_loads, ct_seg = xs
+        _, vjp_fn = jax.vjp(seg_scan, entry, params, onehot, seg_loads)
+        dc, dp, doh, dl = vjp_fn((g_c, ct_seg))
+        return (dc, g_p + dp, g_oh + doh), dl
+
+    (g_carry, g_params, g_onehot), dls = jax.lax.scan(
+        seg_bwd, (g_carry, g_params, g_onehot), (entries, main, ct_main),
+        reverse=True)
+    g_loads = g_loads.at[:body].set(dls.reshape(body, n))
+    return (g_params, g_loads, g_onehot,
+            np.zeros(np.shape(pidx), dtype=jax.dtypes.float0))
+
+
+_ckpt_scan.defvjp(_ckpt_fwd, _ckpt_bwd)
+
+
+def policy_grid_scan_ckpt(loads, params, onehot=None, dt_hours=1.0, *,
+                          policy_index=None, surrogate: bool = False):
+    """``ref.policy_grid_scan`` semantics + the O(√T) checkpointed VJP.
+
+    Same operands, selector rule and return contract as the reference
+    (loads [N, T] → carry_end [N, CARRY_DIM] + five [N, T] series);
+    primal values are bit-identical — only the gradient schedule differs.
+    ``dt_hours`` must be a static float here (it is a trace constant of
+    the fit/search kernels); ``kernels.ops.policy_scan`` falls back to
+    the plain reference when handed a traced bin width.
+    """
+    if (onehot is None) == (policy_index is None):
+        raise ValueError("pass exactly one of onehot= (mixed grid) or "
+                         "policy_index= (uniform lane block)")
+    loads_t = jnp.asarray(loads, jnp.float32).T
+    use_onehot = onehot is not None
+    if use_onehot:
+        onehot = jnp.asarray(onehot, jnp.float32)
+        pidx = jnp.zeros((), jnp.int32)          # inert placeholder
+    else:
+        onehot = jnp.zeros((loads_t.shape[1], 0), jnp.float32)
+        pidx = jnp.asarray(policy_index, jnp.int32)
+    cfg = (float(dt_hours), bool(surrogate), use_onehot)
+    carry_end, outs_t = _ckpt_scan(cfg, jnp.asarray(params, jnp.float32),
+                                   loads_t, onehot, pidx)
+    return carry_end, tuple(o.T for o in outs_t)

@@ -1,0 +1,206 @@
+"""The O(√T) checkpointed custom VJP vs plain autodiff-through-scan.
+
+Acceptance contract of ``kernels.policy_vjp``:
+
+* the primal is BIT-IDENTICAL to ``ref.policy_grid_scan`` — carry and
+  all five series, both selector forms, surrogate included (the custom
+  rule changes nothing unless a gradient is requested);
+* ``jax.grad`` cotangents (params, loads, onehot) match plain autodiff
+  of the reference scan within the repo's guarded 1e-5 relative
+  contract, for all five policies, on horizons the segment plan splits
+  evenly AND ones with a tail segment, at hourly and sub-hour bins,
+  surrogate on and off, under jit;
+* ``kernels.ops.policy_scan`` routes differentiable scans through the
+  checkpointed VJP when the bin width is static, and falls back to the
+  plain reference scan when it is traced — same numbers either way.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.traffic import TrafficModel  # noqa: E402
+from repro.core.twin import (QuickscalingTwin, SimpleTwin,  # noqa: E402
+                             make_twin, policy_names, policy_onehot)
+from repro.kernels import ops, policy_vjp, ref  # noqa: E402
+from repro.kernels.policy_vjp import (_segment_plan,  # noqa: E402
+                                      policy_grid_scan_ckpt)
+
+ALL_POLICY_TWINS = [
+    SimpleTwin("fifo", 1.9512, 0.0082, 0.15),
+    QuickscalingTwin("quick", 1.9512, 0.0082, 0.15),
+    make_twin("auto", "autoscale", max_rps=0.5, usd_per_hour=0.002,
+              base_latency_s=0.1, max_instances=32, scale_up_hours=3),
+    make_twin("shed", "shed", max_rps=1.0, usd_per_hour=0.0082,
+              base_latency_s=0.15, queue_cap_hours=2),
+    make_twin("batch", "batch_window", max_rps=6.15, usd_per_hour=0.0703,
+              base_latency_s=0.06, window_hours=6),
+]
+
+#: mixed weights keep the scalar loss sensitive to every output series
+W = (1.0, 0.7, 1.3, -0.5, 0.9)
+
+
+def _mixed(n, t_bins):
+    twins = [ALL_POLICY_TWINS[i % len(ALL_POLICY_TWINS)] for i in range(n)]
+    hl = TrafficModel.honda_default("nom").hourly_loads()[:t_bins]
+    loads = np.stack([hl * (1.0 + 0.1 * i) for i in range(n)]) \
+        .astype(np.float32)
+    params = np.stack([tw.padded_params() for tw in twins]) \
+        .astype(np.float32)
+    idx = np.asarray([tw.policy_index for tw in twins], np.int32)
+    return loads, params, idx
+
+
+def _loss(fn, dt=1.0, surrogate=False, **sel):
+    def f(loads, params, *extra):
+        kw = dict(sel)
+        if "onehot" in kw and kw["onehot"] is None:
+            kw["onehot"] = extra[0]
+        carry, outs = fn(loads, params, kw.pop("onehot", None), dt,
+                         surrogate=surrogate, **kw)
+        return (sum(w * jnp.sum(o) for w, o in zip(W, outs))
+                + jnp.sum(carry))
+    return f
+
+
+def _assert_grads_close(a, b, rtol=1e-5, what=""):
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    denom = np.maximum(np.abs(b), 1e-6 * max(np.abs(b).max(), 1.0))
+    rel = np.abs(a - b) / denom
+    assert rel.max() <= rtol, (what, rel.max())
+
+
+# ---------------------------------------------------------------------------
+# primal parity: the custom rule must change nothing forward
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("surrogate", [False, True])
+def test_forward_bit_identical_to_ref_mixed_grid(surrogate):
+    loads, params, idx = _mixed(5, 257)
+    onehot = policy_onehot(idx)
+    c_r, outs_r = ref.policy_grid_scan(loads, params, onehot, 1.0,
+                                       surrogate=surrogate)
+    c_k, outs_k = policy_grid_scan_ckpt(loads, params, onehot, 1.0,
+                                        surrogate=surrogate)
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+    for a, b in zip(outs_k, outs_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_forward_bit_identical_uniform_index_subhour():
+    loads, params, _ = _mixed(4, 97)
+    for j, tw in enumerate(ALL_POLICY_TWINS):
+        p = np.tile(tw.padded_params(), (4, 1)).astype(np.float32)
+        c_r, outs_r = ref.policy_grid_scan(loads, p, None, 1.0 / 60.0,
+                                           policy_index=jnp.int32(j))
+        c_k, outs_k = policy_grid_scan_ckpt(loads, p, None, 1.0 / 60.0,
+                                            policy_index=jnp.int32(j))
+        np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+        for a, b in zip(outs_k, outs_r):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# gradient parity vs plain autodiff-through-scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t_bins", [97, 256])
+def test_grad_parity_mixed_onehot(t_bins):
+    # 97 leaves a tail segment (9*10+7); 256 splits evenly (16*16)
+    seg, nseg, tail = _segment_plan(t_bins)
+    assert (tail > 0) == (t_bins == 97)
+    loads, params, idx = _mixed(5, t_bins)
+    onehot = policy_onehot(idx).astype(np.float32)
+    args = (jnp.asarray(loads), jnp.asarray(params), jnp.asarray(onehot))
+    g_ref = jax.grad(_loss(ref.policy_grid_scan, onehot=None),
+                     argnums=(0, 1, 2))(*args)
+    g_ckpt = jax.grad(_loss(policy_grid_scan_ckpt, onehot=None),
+                      argnums=(0, 1, 2))(*args)
+    for name, a, b in zip(("loads", "params", "onehot"), g_ckpt, g_ref):
+        _assert_grads_close(a, b, what=(name, t_bins))
+
+
+@pytest.mark.parametrize("surrogate", [False, True])
+def test_grad_parity_uniform_index_all_policies_jit(surrogate):
+    loads, _, _ = _mixed(4, 97)
+    for j, tw in enumerate(ALL_POLICY_TWINS):
+        p = np.tile(tw.padded_params(), (4, 1)).astype(np.float32)
+        sel = dict(policy_index=jnp.int32(j))
+        g_ref = jax.jit(jax.grad(
+            _loss(ref.policy_grid_scan, dt=0.25, surrogate=surrogate,
+                  **sel), argnums=(0, 1)))(jnp.asarray(loads),
+                                           jnp.asarray(p))
+        g_ckpt = jax.jit(jax.grad(
+            _loss(policy_grid_scan_ckpt, dt=0.25, surrogate=surrogate,
+                  **sel), argnums=(0, 1)))(jnp.asarray(loads),
+                                           jnp.asarray(p))
+        for name, a, b in zip(("loads", "params"), g_ckpt, g_ref):
+            _assert_grads_close(a, b, what=(policy_names()[j], name,
+                                            surrogate))
+
+
+def test_segment_plan_shapes():
+    for t in (1, 2, 97, 100, 256, 8736):
+        seg, nseg, tail = _segment_plan(t)
+        assert seg * nseg + tail == t
+        assert seg >= 1 and nseg >= 1 and 0 <= tail < seg
+
+
+def test_selector_ambiguity_rejected():
+    loads, params, idx = _mixed(3, 10)
+    with pytest.raises(ValueError, match="exactly one"):
+        policy_grid_scan_ckpt(loads, params)
+    with pytest.raises(ValueError, match="exactly one"):
+        policy_grid_scan_ckpt(loads, params, policy_onehot(idx),
+                              policy_index=jnp.int32(0))
+
+
+# ---------------------------------------------------------------------------
+# ops.policy_scan routing: ckpt when dt is static, ref when traced
+# ---------------------------------------------------------------------------
+
+def test_ops_routes_differentiable_scan_through_ckpt(monkeypatch):
+    loads, params, idx = _mixed(5, 97)
+    onehot = policy_onehot(idx)
+    calls = []
+    orig = policy_vjp.policy_grid_scan_ckpt
+
+    def spy(*a, **k):
+        calls.append(1)
+        return orig(*a, **k)
+
+    monkeypatch.setattr(policy_vjp, "policy_grid_scan_ckpt", spy)
+    c, outs = ops.policy_scan(loads, params, onehot, 1.0,
+                              differentiable=True)
+    assert calls, "static-dt differentiable scan must use the ckpt VJP"
+    c_r, outs_r = ref.policy_grid_scan(loads, params, onehot, 1.0)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c_r))
+    for a, b in zip(outs, outs_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ops_traced_dt_falls_back_to_ref(monkeypatch):
+    loads, params, idx = _mixed(3, 50)
+    onehot = policy_onehot(idx)
+
+    def boom(*a, **k):                      # must never be reached
+        raise AssertionError("ckpt VJP called with a traced bin width")
+
+    monkeypatch.setattr(policy_vjp, "policy_grid_scan_ckpt", boom)
+
+    @jax.jit
+    def total(dt):
+        _, outs = ops.policy_scan(loads, params, onehot, dt,
+                                  differentiable=True)
+        return sum(jnp.sum(o) for o in outs)
+
+    traced = total(jnp.float32(1.0))
+    monkeypatch.setattr(policy_vjp, "policy_grid_scan_ckpt",
+                        policy_grid_scan_ckpt)
+    _, outs = ops.policy_scan(loads, params, onehot, 1.0,
+                              differentiable=True)
+    np.testing.assert_allclose(float(traced),
+                               float(sum(jnp.sum(o) for o in outs)),
+                               rtol=1e-6)
