@@ -17,12 +17,16 @@
 #   make search-bench      one-dispatch K-restart policy search vs serial
 #                          loop + vs exhaustive 4096-point grid
 #                          (writes BENCH_search.json)
+#   make faults-bench      chaos-suite overhead — fault-perturbed vs
+#                          benign aggregate grids at 1024/65536 full-year
+#                          rows, 4 futures/base (writes BENCH_faults.json)
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-deps bench bench-grid grid-bench-pallas \
-        grid-bench-stream grid-bench-shard calibrate-bench search-bench
+        grid-bench-stream grid-bench-shard calibrate-bench search-bench \
+        faults-bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -50,3 +54,6 @@ calibrate-bench:
 
 search-bench:
 	$(PYTHON) -m benchmarks.run search
+
+faults-bench:
+	$(PYTHON) -m benchmarks.run faults

@@ -1,0 +1,148 @@
+"""Chaos-suite benchmark: fault-perturbed vs benign aggregate grids.
+
+The fault layer (``repro.faults``) threads per-bin capacity multipliers,
+a reconnect-flood backlog queue and two in-carry attribution counters
+through the streaming-aggregate scan. This bench measures what that
+costs: the SAME expanded row count N runs once benign (``faults=None``
+over N scenarios) and once as a chaos suite (N/F base scenarios x F=4
+sampled fault futures — outages, disconnect/reconnect floods, brownouts
+and bursts), both through ``simulate_grid(return_series=False)`` with
+the full 8736-hour year per row.
+
+At N = 65536 this is the acceptance run: a 65,536-scenario full-year
+chaos grid (4 futures per base scenario) completing on this CPU
+container through the blocked aggregate path. Writes
+``BENCH_faults.json`` with per-size wall-clocks and the fault/benign
+overhead ratio, and emits the harness CSV rows.
+
+  PYTHONPATH=src python benchmarks/faults_bench.py
+  PYTHONPATH=src python -m benchmarks.run faults
+  make faults-bench
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro import faults
+from repro.core.simulate import simulate_grid
+from repro.core.slo import SLO
+from repro.core.traffic import TrafficModel
+from repro.core.twin import QuickscalingTwin, SimpleTwin, make_twin
+
+SIZES = (1024, 65536)       # expanded rows (base scenarios x futures)
+N_FUTURES = 4
+N_TRAFFICS = 16
+BLOCK = 4096                # aggregate-mode scenario block
+REPEATS = 2
+OUT_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_faults.json"
+
+SCHEDULE = faults.FaultSchedule(
+    specs=(faults.outage(rate_per_year=6, duration_hours=(1, 4)),
+           faults.disconnect(rate_per_year=12,
+                             disconnect_frac=(0.2, 0.5)),
+           faults.brownout(rate_per_year=8, capacity_mult=(0.3, 0.7)),
+           faults.burst(rate_per_year=8, load_mult=(1.5, 3.0))),
+    n_futures=N_FUTURES, seed=0)
+
+
+def _twins(n: int) -> List:
+    eight = [
+        SimpleTwin("fifo", 1.9512, 0.0082, 0.15),
+        QuickscalingTwin("quick", 1.9512, 0.0082, 0.15),
+        make_twin("auto", "autoscale", max_rps=0.5, usd_per_hour=0.002,
+                  base_latency_s=0.1, max_instances=32, scale_up_hours=3),
+        make_twin("shed", "shed", max_rps=1.0, usd_per_hour=0.0082,
+                  base_latency_s=0.15, queue_cap_hours=2),
+        make_twin("batch", "batch_window", max_rps=6.15,
+                  usd_per_hour=0.0703, base_latency_s=0.06,
+                  window_hours=6),
+        SimpleTwin("fifo-lean", 1.2, 0.005, 0.2),
+        QuickscalingTwin("quick-fat", 3.0, 0.016, 0.1),
+        SimpleTwin("fifo-fat", 3.9, 0.0164, 0.1),
+    ]
+    return [eight[i % 8] for i in range(n)]
+
+
+def _grid(n_scen: int):
+    matrix = np.stack(
+        [TrafficModel.honda_default(f"g{g:.3f}", R=3.5,
+                                    G=float(g)).hourly_loads()
+         for g in np.linspace(1.0, 1.7, N_TRAFFICS)]).astype(np.float32)
+    index = (np.arange(n_scen, dtype=np.int32) // 8) % N_TRAFFICS
+    return _twins(n_scen), matrix, index
+
+
+def _time_best(fn, repeats: int = REPEATS) -> float:
+    fn()                                  # warm the jit cache
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def bench(sizes=SIZES, repeats: int = REPEATS) -> Dict:
+    slo = SLO(limit_s=4 * 3600, met_fraction=0.95)
+    rows = []
+    for n in sizes:
+        n_base = n // N_FUTURES
+        b_twins, matrix, b_index = _grid(n)
+        f_twins, _, f_index = _grid(n_base)
+        block = min(BLOCK, n)
+
+        def benign():
+            return simulate_grid(b_twins, slo=slo, return_series=False,
+                                 load_matrix=matrix, load_index=b_index,
+                                 scenario_block=block)
+
+        def chaos():
+            return simulate_grid(f_twins, slo=slo, return_series=False,
+                                 load_matrix=matrix, load_index=f_index,
+                                 scenario_block=block, faults=SCHEDULE)
+
+        sims = chaos()                      # warm + acceptance sample
+        assert len(sims) == n, (len(sims), n)
+        assert any(s.fault_hours > 0 for s in sims)
+        benign_ms = _time_best(benign, repeats)
+        chaos_ms = _time_best(chaos, repeats)
+        rows.append({
+            "rows": n, "base_scenarios": n_base, "futures": N_FUTURES,
+            "hours": int(matrix.shape[1]), "scenario_block": block,
+            "benign_ms": round(benign_ms, 1),
+            "chaos_ms": round(chaos_ms, 1),
+            "overhead": round(chaos_ms / benign_ms, 3),
+            "fault_rows_pct": round(
+                100.0 * sum(s.fault_hours > 0 for s in sims) / n, 1),
+        })
+        del sims
+    out = {"device": jax.devices()[0].platform, "repeats": repeats,
+           "schedule": [s.name for s in SCHEDULE.specs],
+           "parity": "empty schedule bit-identical to faults=None "
+                     "(tests/test_faults.py)",
+           "sizes": rows}
+    OUT_JSON.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    return out
+
+
+def main() -> List[str]:
+    out = bench()
+    lines = []
+    for r in out["sizes"]:
+        lines.append(
+            f"faults/rows{r['rows']},{r['chaos_ms'] * 1e3:.0f},"
+            f"overhead={r['overhead']}x_vs_benign;"
+            f"futures={r['futures']};block={r['scenario_block']}")
+    lines.append(f"faults/json,0,wrote={OUT_JSON.name}")
+    return lines
+
+
+if __name__ == "__main__":
+    print(json.dumps(bench(), indent=2, sort_keys=True))

@@ -68,6 +68,8 @@ TABLES = {
                                      fromlist=["main_shard"]).main_shard(),
     "calibrate": lambda: __import__("benchmarks.calibrate_bench",
                                     fromlist=["main"]).main(),
+    "faults": lambda: __import__("benchmarks.faults_bench",
+                                 fromlist=["main"]).main(),
     "search": lambda: __import__("benchmarks.search_bench",
                                  fromlist=["main"]).main(),
     "roofline": lambda: __import__("benchmarks.roofline_bench",

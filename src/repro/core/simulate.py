@@ -74,13 +74,14 @@ import numpy as np
 from repro.core.cost import CostModel
 from repro.core.slo import SLO
 from repro.core.traffic import DAYS_PER_YEAR, HOURS_PER_YEAR, MONTH_DAYS
-from repro.core.twin import (A_COST, A_DROP, A_LATW, A_LOAD, A_MAXP, A_OKH,
-                             A_OKW, A_PROC, AGG_HIST_BINS, AGG_SCALARS,
-                             AGG_SLO_DROP_RATE, AGG_SLO_LATENCY, CARRY_DIM,
-                             Twin, aggregate_hist_centers,
-                             init_agg_scalars, np_latency_histogram,
-                             pack_agg_scalars, policy_branches,
-                             registry_version, update_agg_scalars)
+from repro.core.twin import (A_COST, A_DROP, A_FLTH, A_FOKH, A_LATW, A_LOAD,
+                             A_MAXP, A_OKH, A_OKW, A_PROC, AGG_HIST_BINS,
+                             AGG_SCALARS, AGG_SLO_DROP_RATE,
+                             AGG_SLO_LATENCY, CARRY_DIM, Twin,
+                             aggregate_hist_centers, init_agg_scalars,
+                             np_latency_histogram, pack_agg_scalars,
+                             policy_branches, registry_version,
+                             update_agg_scalars)
 
 
 @dataclass
@@ -169,6 +170,11 @@ class GridSummary:
     arrived_records: float = 0.0
     queue_end: float = 0.0
     latency_hist: np.ndarray = field(default_factory=lambda: np.zeros(0))
+    # fault attribution (``simulate_grid(faults=...)``), read from the
+    # in-carry A_FLTH/A_FOKH counters — zero / 100% on benign grids
+    fault_hours: float = 0.0
+    pct_hours_met_in_fault: float = 100.0
+    pct_hours_met_outside_fault: float = 100.0
 
     @property
     def grand_total_usd(self) -> float:
@@ -288,10 +294,93 @@ def _grid_scan_agg_xla(loads: jnp.ndarray, params: jnp.ndarray,
                           slo_mode)
 
 
+def _fault_scalar_step(branches, dt):
+    """Scalar (per-scenario) form of the fault perturbation layer — the
+    same arithmetic, in the same order, as ``core.twin.
+    fault_lane_policy_step``, over one scenario's CARRY_DIM carry."""
+    def fstep(state, arrive, capmul, p, idx):
+        carry, fq = state
+        gate = (capmul > 0).astype(jnp.float32)
+        avail = fq + arrive
+        a_eff = gate * avail
+        new_fq = avail - a_eff
+        p_eff = p.at[0].set(p[0] * capmul)
+        carry, outs = jax.lax.switch(idx, branches, carry, a_eff, p_eff,
+                                     dt)
+        wait = new_fq / jnp.maximum(p[0], jnp.float32(1e-9))
+        outs = (outs[0], outs[1] + new_fq, outs[2] + wait, outs[3],
+                outs[4])
+        return (carry, new_fq), outs
+    return fstep
+
+
+@functools.partial(jax.jit, static_argnums=(4, 5))
+def _grid_scan_fault_xla(loads: jnp.ndarray, caps: jnp.ndarray,
+                         params: jnp.ndarray, policy_idx: jnp.ndarray,
+                         version: int, dt_hours: float = 1.0):
+    """Fault sibling of ``_grid_scan_xla`` (series mode): per-scenario
+    switch-scans through the fault perturbation layer. The fault SERIES
+    path is XLA-only regardless of the Pallas switch — the fused series
+    kernel covers benign grids; chaos grids lean on the aggregate
+    backend (``return_series=False``), where the Pallas fault kernel
+    lives. Returns (q_end [N] with the fault backlog folded in, five
+    [N, T] series)."""
+    branches = policy_branches()
+    dt = jnp.asarray(dt_hours, jnp.float32)
+    fstep = _fault_scalar_step(branches, dt)
+
+    def one(load, cap, p, idx):
+        def bin_step(state, xs):
+            arrive, capmul = xs
+            return fstep(state, arrive, capmul, p, idx)
+
+        (carry, fq), outs = jax.lax.scan(
+            bin_step, (jnp.zeros((CARRY_DIM,), jnp.float32),
+                       jnp.float32(0.0)), (load, cap))
+        return carry[0] + fq, outs
+
+    return jax.vmap(one)(loads, caps, params, policy_idx)
+
+
+@functools.partial(jax.jit, static_argnums=(5, 6, 7, 8))
+def _grid_scan_agg_fault_xla(loads: jnp.ndarray, caps: jnp.ndarray,
+                             fmask: jnp.ndarray, params: jnp.ndarray,
+                             policy_idx: jnp.ndarray, version: int,
+                             dt_hours: float, slo_limit: float,
+                             slo_mode: int):
+    """Fault sibling of ``_grid_scan_agg_xla``: the vmapped switch-scan
+    steps through the fault layer (``caps``/``fmask`` [N, T] per-bin
+    series), the in-carry counters gain the A_FLTH/A_FOKH attribution
+    slots, and the fault backlog residue folds into ``carry_end[:, 0]``.
+    Same staged-latency-panel histogram contract as the benign path."""
+    branches = policy_branches()
+    dt = jnp.asarray(dt_hours, jnp.float32)
+    fstep = _fault_scalar_step(branches, dt)
+
+    def one(load, cap, fm, p, idx):
+        def bin_step(state, xs):
+            arrive, capmul, fmk = xs
+            (carry, fq), agg = state
+            (carry, fq), outs = fstep((carry, fq), arrive, capmul, p, idx)
+            agg = update_agg_scalars(agg, arrive, outs, slo_limit,
+                                     slo_mode, fmk)
+            return ((carry, fq), agg), outs[2]    # stage latency only
+
+        ((carry, fq), agg), latency = jax.lax.scan(
+            bin_step, ((jnp.zeros((CARRY_DIM,), jnp.float32),
+                        jnp.float32(0.0)), init_agg_scalars()),
+            (load, cap, fm))
+        carry = carry.at[0].add(fq)
+        return carry, pack_agg_scalars(agg), latency
+
+    return jax.vmap(one)(loads, caps, fmask, params, policy_idx)
+
+
 def _grid_scan_agg(loads: jnp.ndarray, params: jnp.ndarray,
                    policy_idx: jnp.ndarray, version: int, dt_hours: float,
                    slo_limit: float, slo_mode: int,
-                   weights_np: Optional[np.ndarray] = None):
+                   weights_np: Optional[np.ndarray] = None,
+                   caps=None, fmask=None):
     """Backend-selecting entry point of the streaming-aggregate scan —
     the O(N)-memory sibling of ``_grid_scan``. Same selection rule:
     XLA vmapped switch-scan by default, the fused Pallas aggregate kernel
@@ -300,15 +389,23 @@ def _grid_scan_agg(loads: jnp.ndarray, params: jnp.ndarray,
     (carry_end [N, CARRY_DIM], agg [N, AGG_DIM]). On the XLA path the
     histogram is binned host-side from the staged latency panel
     (``weights_np`` — the block's loads — skips a device round-trip when
-    the caller already holds them in host memory)."""
+    the caller already holds them in host memory). ``caps``/``fmask``
+    [N, T] (together) thread a fault schedule through either backend."""
     from repro.kernels import ops
     if ops.pallas_enabled():
         from repro.core.twin import policy_onehot
         onehot = jnp.asarray(policy_onehot(np.asarray(policy_idx)))
         return ops.policy_scan_agg(loads, params, onehot, dt_hours,
-                                   slo_limit=slo_limit, slo_mode=slo_mode)
-    carry_end, scalars, lat_panel = _grid_scan_agg_xla(
-        loads, params, policy_idx, version, dt_hours, slo_limit, slo_mode)
+                                   slo_limit=slo_limit, slo_mode=slo_mode,
+                                   caps=caps, fmask=fmask)
+    if caps is not None:
+        carry_end, scalars, lat_panel = _grid_scan_agg_fault_xla(
+            loads, caps, fmask, params, policy_idx, version, dt_hours,
+            slo_limit, slo_mode)
+    else:
+        carry_end, scalars, lat_panel = _grid_scan_agg_xla(
+            loads, params, policy_idx, version, dt_hours, slo_limit,
+            slo_mode)
     hist = np_latency_histogram(
         np.asarray(lat_panel),
         weights_np if weights_np is not None else np.asarray(loads))
@@ -352,13 +449,58 @@ def _agg_scan_uniform(loads: jnp.ndarray, params: jnp.ndarray,
                           loads, params)
 
 
+def _agg_scan_uniform_fault(loads: jnp.ndarray, caps: jnp.ndarray,
+                            fmask: jnp.ndarray, params: jnp.ndarray,
+                            policy_index: jnp.ndarray, dt_hours: float,
+                            slo_limit: float, slo_mode: int):
+    """Fault sibling of ``_agg_scan_uniform``: the single hoisted
+    ``lax.switch`` picks the policy branch, every scenario of the block
+    steps through the scalar fault layer, and the A_FLTH/A_FOKH counters
+    ride the scalar aggregate state. Same returns plus the backlog folded
+    into the carry's queue slot."""
+    branches = policy_branches()
+    dt = jnp.asarray(dt_hours, jnp.float32)
+
+    def uniform(j):
+        def one(load, cap, fm, p):
+            def bin_step(state, xs):
+                arrive, capmul, fmk = xs
+                (carry, fq), agg = state
+                gate = (capmul > 0).astype(jnp.float32)
+                avail = fq + arrive
+                a_eff = gate * avail
+                new_fq = avail - a_eff
+                p_eff = p.at[0].set(p[0] * capmul)
+                carry, outs = branches[j](carry, a_eff, p_eff, dt)
+                wait = new_fq / jnp.maximum(p[0], jnp.float32(1e-9))
+                outs = (outs[0], outs[1] + new_fq, outs[2] + wait,
+                        outs[3], outs[4])
+                agg = update_agg_scalars(agg, arrive, outs, slo_limit,
+                                         slo_mode, fmk)
+                return ((carry, new_fq), agg), outs[2]  # stage latency
+
+            ((carry, fq), agg), latency = jax.lax.scan(
+                bin_step, ((jnp.zeros((CARRY_DIM,), jnp.float32),
+                            jnp.float32(0.0)), init_agg_scalars()),
+                (load, cap, fm))
+            carry = carry.at[0].add(fq)
+            return carry, pack_agg_scalars(agg), latency
+
+        return jax.vmap(one)
+
+    return jax.lax.switch(policy_index,
+                          [uniform(j) for j in range(len(branches))],
+                          loads, caps, fmask, params)
+
+
 @functools.partial(jax.jit, static_argnums=(0, 1, 2, 3),
                    donate_argnums=(8, 9))
 def _agg_block_step_xla(version: int, dt_hours: float, slo_limit: float,
                         slo_mode: int, load_matrix: jnp.ndarray,
                         lidx: jnp.ndarray, params: jnp.ndarray,
                         policy_index: jnp.ndarray, carry_acc: jnp.ndarray,
-                        scal_acc: jnp.ndarray, offset):
+                        scal_acc: jnp.ndarray, offset,
+                        cap_matrix=None, fmask_matrix=None, fidx=None):
     """One donated block step of the async XLA engine: gather the block's
     [B, T] loads from the replicated matrix, run the uniform-branch
     aggregate scan, and write the O(B) results into the donated [Npad, *]
@@ -367,11 +509,21 @@ def _agg_block_step_xla(version: int, dt_hours: float, slo_limit: float,
     panel + the O(N) aggregates no matter how many blocks stream through.
     The [B, T] latency panel is returned raw: the host loop bins it
     (``np_latency_histogram``) while the device runs the NEXT block —
-    that overlap is the async dispatch."""
+    that overlap is the async dispatch. Fault grids add the replicated
+    [F, T] capacity/mask matrices + the block's [B] ``fidx`` gather map
+    (appended AFTER ``offset`` so the donated accumulator positions
+    never move)."""
     del version
     loads = jnp.take(load_matrix, lidx, axis=0)
-    carry, scalars, panel = _agg_scan_uniform(
-        loads, params, policy_index, dt_hours, slo_limit, slo_mode)
+    if cap_matrix is None:
+        carry, scalars, panel = _agg_scan_uniform(
+            loads, params, policy_index, dt_hours, slo_limit, slo_mode)
+    else:
+        caps = jnp.take(cap_matrix, fidx, axis=0)
+        fmask = jnp.take(fmask_matrix, fidx, axis=0)
+        carry, scalars, panel = _agg_scan_uniform_fault(
+            loads, caps, fmask, params, policy_index, dt_hours,
+            slo_limit, slo_mode)
     carry_acc = jax.lax.dynamic_update_slice(carry_acc, carry, (offset, 0))
     scal_acc = jax.lax.dynamic_update_slice(scal_acc, scalars, (offset, 0))
     return carry_acc, scal_acc, panel
@@ -384,23 +536,30 @@ def _agg_block_step_pallas(version: int, dt_hours: float, slo_limit: float,
                            matrix_t: jnp.ndarray, lidx: jnp.ndarray,
                            params: jnp.ndarray, policy_index: jnp.ndarray,
                            carry_acc: jnp.ndarray, agg_acc: jnp.ndarray,
-                           offset):
+                           offset, cap_mt=None, fmask_mt=None, fidx=None):
     """Pallas twin of ``_agg_block_step_xla``: gathers the block directly
     in the kernel's scenario-minor layout (``matrix_t`` [T, K] staged once,
     columns gathered per block — the PR 3/4 layout follow-on: no [B, T]
     intermediate or per-block transpose copy exists anymore) and runs the
     fused aggregate kernel, histogram and all on-device. Accumulators are
-    donated exactly as on the XLA path."""
+    donated exactly as on the XLA path. Fault grids gather the [T, F]
+    ``cap_mt``/``fmask_mt`` columns through ``fidx`` the same way and run
+    the kernel's fault variant."""
     del version
     from repro.core.twin import num_policies
     from repro.kernels.policy_scan import policy_grid_agg
     loads_t = jnp.take(matrix_t, lidx, axis=1)
+    caps_t = fmask_t = None
+    if cap_mt is not None:
+        caps_t = jnp.take(cap_mt, fidx, axis=1)
+        fmask_t = jnp.take(fmask_mt, fidx, axis=1)
     onehot = jnp.broadcast_to(
         jax.nn.one_hot(policy_index, num_policies(), dtype=jnp.float32),
         (lidx.shape[0], num_policies()))
     carry, agg = policy_grid_agg(
         None, params, onehot, dt_hours, slo_limit=slo_limit,
-        slo_mode=slo_mode, interpret=interpret, loads_t=loads_t)
+        slo_mode=slo_mode, interpret=interpret, loads_t=loads_t,
+        caps_t=caps_t, fmask_t=fmask_t)
     carry_acc = jax.lax.dynamic_update_slice(carry_acc, carry, (offset, 0))
     agg_acc = jax.lax.dynamic_update_slice(agg_acc, agg, (offset, 0))
     return carry_acc, agg_acc
@@ -460,7 +619,7 @@ def _agg_block_plan(policy_idx: np.ndarray, block: int):
 @functools.lru_cache(maxsize=16)
 def _sharded_agg_fn(devices: int, version: int, dt_hours: float,
                     slo_limit: float, slo_mode: int, backend: str,
-                    interpret: bool, block: int):
+                    interpret: bool, block: int, faulted: bool = False):
     """Build (and cache) the jitted ``shard_map`` ROUND step for a
     ``devices``-wide 1-D scenario mesh: the [K, T] load matrix is
     replicated, and one round feeds each device exactly one
@@ -473,7 +632,10 @@ def _sharded_agg_fn(devices: int, version: int, dt_hours: float,
     (and can wedge) multi-device dispatch, so the host loop
     (``_run_blocks_sharded``) bins round r-1's panels with
     ``np_latency_histogram`` while the devices run round r — the same
-    async overlap as the single-device engine, one block per device."""
+    async overlap as the single-device engine, one block per device.
+    ``faulted`` builds the fault-grid variant: the [F, T] capacity/mask
+    matrices replicate like the load matrix and a sharded [D, B] fault
+    index gathers each block's per-bin fault series."""
     del version
     from jax.sharding import Mesh, PartitionSpec as P
 
@@ -481,32 +643,48 @@ def _sharded_agg_fn(devices: int, version: int, dt_hours: float,
 
     mesh = Mesh(np.asarray(jax.devices()[:devices]), ("scenario",))
 
-    def body(load_matrix, lidx, params, block_policy):
+    def body(load_matrix, lidx, params, block_policy, cap_matrix=None,
+             fmask_matrix=None, fidx=None):
         lidx_b, p_b = lidx[0], params[0]          # the shard's one block
         pidx_b = block_policy[0]
         if backend == "pallas":
             from repro.core.twin import num_policies
             from repro.kernels.policy_scan import policy_grid_agg
             loads_t = jnp.take(load_matrix.T, lidx_b, axis=1)
+            caps_t = fmask_t = None
+            if faulted:
+                caps_t = jnp.take(cap_matrix.T, fidx[0], axis=1)
+                fmask_t = jnp.take(fmask_matrix.T, fidx[0], axis=1)
             onehot = jnp.broadcast_to(
                 jax.nn.one_hot(pidx_b, num_policies(),
                                dtype=jnp.float32),
                 (block, num_policies()))
             carry, agg = policy_grid_agg(
                 None, p_b, onehot, dt_hours, slo_limit=slo_limit,
-                slo_mode=slo_mode, interpret=interpret, loads_t=loads_t)
+                slo_mode=slo_mode, interpret=interpret, loads_t=loads_t,
+                caps_t=caps_t, fmask_t=fmask_t)
             return carry[None], agg[None]
         loads = jnp.take(load_matrix, lidx_b, axis=0)
-        carry, scalars, panel = _agg_scan_uniform(
-            loads, p_b, pidx_b, dt_hours, slo_limit, slo_mode)
+        if faulted:
+            caps = jnp.take(cap_matrix, fidx[0], axis=0)
+            fmask = jnp.take(fmask_matrix, fidx[0], axis=0)
+            carry, scalars, panel = _agg_scan_uniform_fault(
+                loads, caps, fmask, p_b, pidx_b, dt_hours, slo_limit,
+                slo_mode)
+        else:
+            carry, scalars, panel = _agg_scan_uniform(
+                loads, p_b, pidx_b, dt_hours, slo_limit, slo_mode)
         return carry[None], scalars[None], panel[None]
 
     out_specs = ((P("scenario"), P("scenario"))
                  if backend == "pallas"
                  else (P("scenario"), P("scenario"), P("scenario")))
+    in_specs = (P(), P("scenario"), P("scenario"), P("scenario"))
+    if faulted:
+        in_specs = in_specs + (P(), P(), P("scenario"))
     sharded = shard_map(
         body, mesh=mesh,
-        in_specs=(P(), P("scenario"), P("scenario"), P("scenario")),
+        in_specs=in_specs,
         out_specs=out_specs,
         check_vma=False)
     return jax.jit(sharded)
@@ -516,18 +694,21 @@ def _run_blocks_sharded(load_matrix: np.ndarray, lidx: np.ndarray,
                         params: np.ndarray, block_policy: np.ndarray,
                         devices: int, version: int, dt_hours: float,
                         slo_limit: float, slo_mode: int, backend: str,
-                        interpret: bool):
+                        interpret: bool, fault=None):
     """Drive the sharded round step over all blocks: rounds of one block
     per device, host binning of the previous round's latency panels
     overlapped with the current round's device scans. ``lidx`` arrives
     padded to a ``devices`` multiple of blocks (dummy all-pad blocks).
-    Returns host (carry [NB*B, CARRY_DIM], agg [NB*B, AGG_DIM])."""
+    ``fault`` = (cap [F, T], fmask [F, T], fidx [NB, B]) threads a fault
+    grid through every round. Returns host (carry [NB*B, CARRY_DIM],
+    agg [NB*B, AGG_DIM])."""
     nb, block = lidx.shape
     d = devices
     rounds = nb // d
     npad = nb * block
     fn = _sharded_agg_fn(d, version, dt_hours, slo_limit, slo_mode,
-                         backend, interpret, block)
+                         backend, interpret, block,
+                         faulted=fault is not None)
     matrix_dev = jnp.asarray(load_matrix)
     carry_out = np.empty((npad, CARRY_DIM), np.float32)
     agg_out = np.empty((npad, AGG_SCALARS + AGG_HIST_BINS), np.float32)
@@ -535,10 +716,18 @@ def _run_blocks_sharded(load_matrix: np.ndarray, lidx: np.ndarray,
     def rnd(a, r):
         return jnp.asarray(a[r * d:(r + 1) * d])
 
+    if fault is not None:
+        cap_dev = jnp.asarray(fault[0])
+        fmask_dev = jnp.asarray(fault[1])
+        fidx_blocks = fault[2]
+        fargs = lambda r: (cap_dev, fmask_dev, rnd(fidx_blocks, r))  # noqa: E731
+    else:
+        fargs = lambda r: ()  # noqa: E731
+
     if backend == "pallas":
         for r in range(rounds):
             carry, agg = fn(matrix_dev, rnd(lidx, r), rnd(params, r),
-                            rnd(block_policy, r))
+                            rnd(block_policy, r), *fargs(r))
             sl = slice(r * d * block, (r + 1) * d * block)
             carry_out[sl] = np.asarray(carry).reshape(-1, CARRY_DIM)
             agg_out[sl] = np.asarray(agg).reshape(-1, agg.shape[-1])
@@ -561,7 +750,7 @@ def _run_blocks_sharded(load_matrix: np.ndarray, lidx: np.ndarray,
     pending = None
     for r in range(rounds):
         out = fn(matrix_dev, rnd(lidx, r), rnd(params, r),
-                 rnd(block_policy, r))
+                 rnd(block_policy, r), *fargs(r))
         if pending is not None:
             drain(*pending)
         pending = (*out, r)
@@ -573,19 +762,29 @@ def _run_blocks_sharded(load_matrix: np.ndarray, lidx: np.ndarray,
 def _run_blocks_single(load_matrix: np.ndarray, lidx: np.ndarray,
                        params: np.ndarray, block_policy: np.ndarray,
                        version: int, dt_hours: float, slo_limit: float,
-                       slo_mode: int, backend: str, interpret: bool):
+                       slo_mode: int, backend: str, interpret: bool,
+                       fault=None):
     """The one-device async engine: dispatch block b, then — while the
     device runs it — bin block b-1's latency panel on the host. JAX's
     async dispatch returns control at enqueue time, so host bincount and
     device scan overlap; accumulators are donated across steps (see
-    ``_agg_block_step_*``). Returns host (carry [NB*B, CARRY_DIM],
-    agg [NB*B, AGG_DIM])."""
+    ``_agg_block_step_*``). ``fault`` = (cap [F, T], fmask [F, T],
+    fidx [NB, B]) threads a fault grid through every block. Returns host
+    (carry [NB*B, CARRY_DIM], agg [NB*B, AGG_DIM])."""
     nb, block = lidx.shape
     npad = nb * block
     matrix_dev = jnp.asarray(load_matrix)
     carry_acc = jnp.zeros((npad, CARRY_DIM), jnp.float32)
     if backend == "pallas":
         matrix_t = jnp.asarray(load_matrix.T)
+        if fault is not None:
+            cap_mt = jnp.asarray(np.asarray(fault[0]).T)
+            fmask_mt = jnp.asarray(np.asarray(fault[1]).T)
+            fidx_blocks = fault[2]
+            fargs = lambda b: (cap_mt, fmask_mt,  # noqa: E731
+                               jnp.asarray(fidx_blocks[b]))
+        else:
+            fargs = lambda b: ()  # noqa: E731
         agg_acc = jnp.zeros((npad, AGG_SCALARS + AGG_HIST_BINS),
                             jnp.float32)
         for b in range(nb):
@@ -593,8 +792,16 @@ def _run_blocks_single(load_matrix: np.ndarray, lidx: np.ndarray,
                 version, dt_hours, slo_limit, slo_mode, interpret,
                 matrix_t, jnp.asarray(lidx[b]), jnp.asarray(params[b]),
                 jnp.asarray(block_policy[b]), carry_acc, agg_acc,
-                b * block)
+                b * block, *fargs(b))
         return np.asarray(carry_acc), np.asarray(agg_acc)
+    if fault is not None:
+        cap_dev = jnp.asarray(fault[0])
+        fmask_dev = jnp.asarray(fault[1])
+        fidx_blocks = fault[2]
+        fargs = lambda b: (cap_dev, fmask_dev,  # noqa: E731
+                           jnp.asarray(fidx_blocks[b]))
+    else:
+        fargs = lambda b: ()  # noqa: E731
     scal_acc = jnp.zeros((npad, AGG_SCALARS), jnp.float32)
     hist = np.empty((npad, AGG_HIST_BINS), np.float32)
     pending = None
@@ -602,7 +809,8 @@ def _run_blocks_single(load_matrix: np.ndarray, lidx: np.ndarray,
         carry_acc, scal_acc, panel = _agg_block_step_xla(
             version, dt_hours, slo_limit, slo_mode, matrix_dev,
             jnp.asarray(lidx[b]), jnp.asarray(params[b]),
-            jnp.asarray(block_policy[b]), carry_acc, scal_acc, b * block)
+            jnp.asarray(block_policy[b]), carry_acc, scal_acc, b * block,
+            *fargs(b))
         if pending is not None:
             prev_panel, prev_b = pending
             hist[prev_b * block:(prev_b + 1) * block] = \
@@ -623,16 +831,19 @@ def _grid_agg_dispatch(load_matrix: np.ndarray, load_index: np.ndarray,
                        params: np.ndarray, policy_idx: np.ndarray,
                        dt_hours: float, slo_limit: float, slo_mode: int,
                        scenario_block: Optional[int],
-                       devices: Optional[int] = None):
+                       devices: Optional[int] = None, fault=None):
     """Run the aggregate scan over (matrix, index)-encoded scenarios,
     chunked into ``scenario_block``-sized blocks when asked — or when the
     grid exceeds the horizon's auto-chunk threshold (``agg_auto_block``).
     Chunked grids are regrouped into single-policy blocks
     (``_agg_block_plan``) and streamed through the donated async block
     engine; ``devices`` > 1 instead shards the blocked grid over a 1-D
-    scenario mesh (``_sharded_agg_fn``). All paths return the same host
-    numpy (carry_end [N, CARRY_DIM], agg [N, AGG_DIM]), bit-identical to
-    one another."""
+    scenario mesh (``_sharded_agg_fn``). ``fault`` = (cap [F, T],
+    fmask [F, T], fault_index [N]) threads a fault grid through every
+    path — fault rows gather through ``fault_index`` exactly like load
+    rows through ``load_index``, so a 65k chaos grid ships F fault rows,
+    not 65k. All paths return the same host numpy (carry_end
+    [N, CARRY_DIM], agg [N, AGG_DIM]), bit-identical to one another."""
     n = len(load_index)
     auto_block = agg_auto_block(load_matrix.shape[1])
     if scenario_block is None and (n > auto_block
@@ -646,11 +857,17 @@ def _grid_agg_dispatch(load_matrix: np.ndarray, load_index: np.ndarray,
             loads_np = load_matrix      # identity map: the rows ARE the grid
         else:
             loads_np = np.ascontiguousarray(load_matrix[load_index])
+        caps = fmask = None
+        if fault is not None:
+            cap_m, fmask_m, fidx = fault
+            caps = jnp.asarray(np.asarray(cap_m)[fidx])
+            fmask = jnp.asarray(np.asarray(fmask_m)[fidx])
         carry_end, agg = _grid_scan_agg(jnp.asarray(loads_np),
                                         jnp.asarray(params),
                                         jnp.asarray(policy_idx), version,
                                         dt_hours, slo_limit, slo_mode,
-                                        weights_np=loads_np)
+                                        weights_np=loads_np,
+                                        caps=caps, fmask=fmask)
         return (np.asarray(carry_end, np.float64),
                 np.asarray(agg, np.float64))
 
@@ -668,6 +885,13 @@ def _grid_agg_dispatch(load_matrix: np.ndarray, load_index: np.ndarray,
         .astype(np.int32)
     params_b = np.where(valid[..., None], np.asarray(params)[safe],
                         0).astype(np.float32)
+    block_fault = None
+    if fault is not None:
+        cap_m, fmask_m, fidx_all = fault
+        fidx_b = np.where(valid, np.asarray(fidx_all)[safe], 0) \
+            .astype(np.int32)
+        block_fault = (np.asarray(cap_m, np.float32),
+                       np.asarray(fmask_m, np.float32), fidx_b)
 
     d = int(devices or 1)
     if d > 1:
@@ -682,17 +906,23 @@ def _grid_agg_dispatch(load_matrix: np.ndarray, load_index: np.ndarray,
                           np.float32)])
             block_policy = np.concatenate(
                 [block_policy, np.zeros(pad_blocks, np.int32)])
+            if block_fault is not None:
+                block_fault = (block_fault[0], block_fault[1],
+                               np.concatenate(
+                                   [block_fault[2],
+                                    np.zeros((pad_blocks, block),
+                                             np.int32)]))
         carry, agg = _run_blocks_sharded(
             np.asarray(load_matrix), lidx, params_b, block_policy, d,
             version, float(dt_hours), float(slo_limit), int(slo_mode),
-            backend, interpret)
+            backend, interpret, fault=block_fault)
         carry = carry[:nb * block]
         agg = agg[:nb * block]
     else:
         carry, agg = _run_blocks_single(
             np.asarray(load_matrix), lidx, params_b, block_policy,
             version, float(dt_hours), float(slo_limit), int(slo_mode),
-            backend, interpret)
+            backend, interpret, fault=block_fault)
 
     # scatter block results back to grid order through the position map
     flat_pos = positions.reshape(-1)
@@ -735,7 +965,8 @@ def simulate_grid(twins: Sequence[Twin], loads: Optional[np.ndarray] = None,
                   load_matrix: Optional[np.ndarray] = None,
                   load_index: Optional[np.ndarray] = None,
                   scenario_block: Optional[int] = None,
-                  devices: Optional[int] = None):
+                  devices: Optional[int] = None,
+                  faults=None):
     """Simulate N scenarios — twins[i] against loads[i] — in one vmapped
     scan. ``loads`` is [N, T] records per bin of ``bin_hours`` (the year
     tables use [N, HOURS_PER_YEAR] hourly bins).
@@ -795,6 +1026,30 @@ def simulate_grid(twins: Sequence[Twin], loads: Optional[np.ndarray] = None,
       accelerators each device is one shard. Million-scenario full-year
       sweeps complete either way — memory stays at one block per device
       — sharding just divides the wall clock.
+
+    **Chaos suites** (``faults=``). Pass a ``repro.faults.FaultSchedule``
+    (sampled here, seeded and deterministic) or a pre-sampled
+    ``repro.faults.SampledFaults`` to play every scenario against F
+    fault futures: outage windows zero the twin's capacity, brownouts
+    scale it down, correlated device disconnects strip a load fraction
+    and replay it as a reconnect flood right after the window, bursts
+    multiply the load. The grid expands in place to N*F scenarios named
+    ``"{name}/f{f}"``, ordered scenario-major / future-minor (row
+    ``i*F + f``), with ``twins[i]`` repeated across its futures. Load
+    perturbations are baked into extra load-matrix rows (futures that
+    don't touch the load alias the ORIGINAL rows — an empty or benign
+    schedule is bit-identical to the fault-free grid on both backends,
+    including under ``devices=D``); capacity perturbations stream
+    through the scan as [F, T] fault rows gathered per scenario, so a
+    65k-scenario full-year chaos grid ships F rows, not 65k. Aggregate
+    mode additionally reports fault attribution per scenario
+    (``GridSummary.fault_hours`` / ``pct_hours_met_in_fault`` /
+    ``pct_hours_met_outside_fault``) from in-carry counters — no [N, T]
+    series materialized. Sampled series are validated before any device
+    work: a negative or non-finite capacity/load multiplier raises
+    ``ValueError`` naming the fault spec and bin index. Chance-
+    constrained search over the same futures lives in
+    ``repro.search.search(faults=..., quantile=...)``.
     """
     if (loads is None) == (load_matrix is None):
         raise ValueError("pass exactly one of loads= (stacked [N, T] grid) "
@@ -863,6 +1118,38 @@ def simulate_grid(twins: Sequence[Twin], loads: Optional[np.ndarray] = None,
     idx = np.asarray([tw.policy_index for tw in twins], np.int32)
     names = list(names) if names is not None else [tw.name for tw in twins]
 
+    fault = None
+    if faults is not None:
+        from repro.faults import (FaultSchedule, SampledFaults, expand_grid,
+                                  sample_futures, validate_sampled)
+        if isinstance(faults, FaultSchedule):
+            sampled = sample_futures(faults, t_bins, float(bin_hours))
+        elif isinstance(faults, SampledFaults):
+            if faults.t_bins != t_bins:
+                raise ValueError(
+                    f"SampledFaults covers {faults.t_bins} bins but the "
+                    f"grid has {t_bins}; resample with sample_futures("
+                    f"schedule, {t_bins}, bin_hours={bin_hours})")
+            sampled = faults
+        else:
+            raise TypeError(
+                f"faults= must be a repro.faults.FaultSchedule or "
+                f"SampledFaults, got {type(faults).__name__}")
+        validate_sampled(sampled)
+        if load_matrix is None:    # expansion needs the matrix encoding
+            load_matrix = loads
+            load_index = np.arange(n, dtype=np.int32)
+            loads = None
+        fg = expand_grid(sampled, load_matrix, load_index)
+        nf = fg.n_futures
+        load_matrix, load_index = fg.load_matrix, fg.load_index
+        params = np.repeat(params, nf, axis=0)
+        idx = np.repeat(idx, nf)
+        twins = [tw for tw in twins for _ in range(nf)]
+        names = [f"{nm}/f{f}" for nm in names for f in range(nf)]
+        n = n * nf
+        fault = (fg.cap, fg.fmask, fg.fault_index)
+
     if not return_series:
         slo_mode = (AGG_SLO_DROP_RATE
                     if slo is not None and slo.metric == "drop_rate"
@@ -872,7 +1159,8 @@ def simulate_grid(twins: Sequence[Twin], loads: Optional[np.ndarray] = None,
             load_matrix, load_index = loads, np.arange(n, dtype=np.int32)
         carry_end, agg = _grid_agg_dispatch(
             load_matrix, load_index, params, idx, float(bin_hours),
-            slo_limit, slo_mode, scenario_block, devices=devices)
+            slo_limit, slo_mode, scenario_block, devices=devices,
+            fault=fault)
         return _summarise_aggregates(
             names, twins, carry_end[:, 0], agg, slo, cost_model, record_mb,
             float(bin_hours), t_bins, load_matrix, load_index)
@@ -881,9 +1169,17 @@ def simulate_grid(twins: Sequence[Twin], loads: Optional[np.ndarray] = None,
         # series mode needs the full grid — the O(N*T) stack is the cost
         # of asking for per-bin series; aggregate mode never builds it
         loads = load_matrix[load_index]
-    q_end, (processed, queue, latency, cost, dropped) = _grid_scan(
-        jnp.asarray(loads), jnp.asarray(params), jnp.asarray(idx),
-        registry_version(), float(bin_hours))
+    if fault is not None:
+        caps_np = np.asarray(fault[0])[fault[2]]
+        q_end, (processed, queue, latency, cost, dropped) = \
+            _grid_scan_fault_xla(
+                jnp.asarray(loads), jnp.asarray(caps_np),
+                jnp.asarray(params), jnp.asarray(idx),
+                registry_version(), float(bin_hours))
+    else:
+        q_end, (processed, queue, latency, cost, dropped) = _grid_scan(
+            jnp.asarray(loads), jnp.asarray(params), jnp.asarray(idx),
+            registry_version(), float(bin_hours))
     q_end = np.asarray(q_end, np.float64)
     processed = np.asarray(processed, np.float64)
     queue = np.asarray(queue, np.float64)
@@ -988,6 +1284,7 @@ def _summarise_aggregates(names: Sequence[str], twins: Sequence[Twin],
     sum_drop, sum_latw = tri(A_DROP), tri(A_LATW)
     sum_load, sum_okw = tri(A_LOAD), tri(A_OKW)
     okh, maxp = agg[:, A_OKH], agg[:, A_MAXP]
+    flth, fokh = agg[:, A_FLTH], agg[:, A_FOKH]
 
     max_rps = np.array([tw.max_rps for tw in twins], np.float64)
     usd_hr = np.array([tw.usd_per_hour for tw in twins], np.float64)
@@ -1013,6 +1310,17 @@ def _summarise_aggregates(names: Sequence[str], twins: Sequence[Twin],
     else:
         pct_rec = pct_hours = np.full(n, 100.0)
         met = None
+
+    # fault attribution (repro.faults): in-carry counters split the
+    # SLO-ok bins inside vs outside fault windows — no [N, T] series.
+    # Benign grids carry flth == 0 everywhere, so both splits read 100.
+    fault_hours = flth * bin_hours
+    pct_in = np.where(flth > 0, fokh / np.maximum(flth, 1.0) * 100.0,
+                      100.0)
+    out_bins = t_bins - flth
+    pct_out = np.where(out_bins > 0,
+                       (okh - fokh) / np.maximum(out_bins, 1.0) * 100.0,
+                       100.0)
 
     net = stor = np.zeros(n)
     if cost_model is not None and record_mb > 0.0:
@@ -1053,7 +1361,10 @@ def _summarise_aggregates(names: Sequence[str], twins: Sequence[Twin],
             processed_records=float(sum_proc[i]),
             arrived_records=float(sum_load[i]),
             queue_end=float(q_end[i]),
-            latency_hist=hist[i])
+            latency_hist=hist[i],
+            fault_hours=float(fault_hours[i]),
+            pct_hours_met_in_fault=float(pct_in[i]),
+            pct_hours_met_outside_fault=float(pct_out[i]))
         for i in range(n)
     ]
 

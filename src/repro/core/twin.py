@@ -374,6 +374,45 @@ def lane_policy_step(carry, arrive, params, onehot, dt, branches=None):
     return new_carry, tuple(outs)
 
 
+def fault_lane_policy_step(state, arrive, capmul, params, onehot, dt,
+                           branches=None):
+    """``lane_policy_step`` wrapped in the fault perturbation layer.
+
+    ``state`` = (policy carry [L, CARRY_DIM], fault backlog ``fq`` [L]);
+    ``capmul`` [L] is this bin's capacity multiplier from the fault
+    schedule. The layer sits *outside* the policy step, so every
+    registered policy composes with every fault kind unchanged:
+
+    * capacity scales: the policy sees ``max_rps * capmul`` (brownouts);
+    * hard outage (``capmul == 0``) gates arrivals into a fault-layer
+      backlog queue instead of the policy — the policy drains its own
+      queue and then idles, rather than autoscaling against a dead
+      pipeline. When capacity returns the whole backlog re-enters in one
+      bin: the reconnect flood, conserving every record;
+    * backlog waiting time is priced into reported latency at NOMINAL
+      capacity (``fq / max_rps``) — a deliberate lower bound that keeps
+      outage latencies finite instead of dividing by a zeroed rate.
+
+    The benign bin (``capmul == 1``, ``fq == 0``) is IEEE-exact identity:
+    ``1 * (0 + arrive) == arrive``, ``max_rps * 1.0 == max_rps``, and
+    ``lat + 0.0 == lat``, so an all-ones capacity series is bit-identical
+    to the unwrapped step — the structural guarantee behind the
+    empty-schedule parity tests.
+    """
+    carry, fq = state
+    gate = (capmul > 0).astype(jnp.float32)
+    avail = fq + arrive
+    a_eff = gate * avail
+    new_fq = avail - a_eff
+    p_eff = jnp.concatenate([(params[:, 0] * capmul)[:, None],
+                             params[:, 1:]], axis=1)
+    carry, outs = lane_policy_step(carry, a_eff, p_eff, onehot, dt,
+                                   branches=branches)
+    wait = new_fq / jnp.maximum(params[:, 0], jnp.float32(1e-9))
+    outs = (outs[0], outs[1] + new_fq, outs[2] + wait, outs[3], outs[4])
+    return (carry, new_fq), outs
+
+
 def registry_version() -> int:
     return _VERSION
 
@@ -446,7 +485,9 @@ A_LOAD = 12                    # sum of load
 A_OKW = 15                     # sum of load in SLO-ok bins
 A_OKH = 18                     # count of SLO-ok bins
 A_MAXP = 19                    # max processed per bin
-AGG_SCALARS = 20
+A_FLTH = 20                    # count of bins inside a fault window
+A_FOKH = 21                    # count of SLO-ok bins inside fault windows
+AGG_SCALARS = 22
 AGG_DIM = AGG_SCALARS + AGG_HIST_BINS
 
 #: SLO metric selector for the aggregate scan (a static trace argument)
@@ -538,19 +579,26 @@ def np_latency_histogram(latency: np.ndarray, weights: np.ndarray,
 
 
 def init_agg_scalars(shape=()):
-    """Zeroed scalar-statistic state: (sums tuple[18], okh, maxp), every
-    leaf ``shape``-shaped (scalar under the vmapped switch path, [L] for
-    a lane block)."""
+    """Zeroed scalar-statistic state: (sums tuple[18], okh, maxp, flth,
+    fokh), every leaf ``shape``-shaped (scalar under the vmapped switch
+    path, [L] for a lane block)."""
     z = jnp.zeros(shape, jnp.float32)
-    return ((z,) * 18, z, z)
+    return ((z,) * 18, z, z, z, z)
 
 
-def update_agg_scalars(state, arrive, outs, slo_limit, slo_mode):
+def update_agg_scalars(state, arrive, outs, slo_limit, slo_mode,
+                       fmask=None):
     """Fold one bin's step outputs into the scalar statistics (shared by
     every backend; elementwise, shape-polymorphic). ``slo_limit`` (float)
     and ``slo_mode`` (AGG_SLO_*) are static trace constants — pass
-    ``inf`` / latency when no SLO applies."""
-    sums, okh, maxp = state
+    ``inf`` / latency when no SLO applies.
+
+    ``fmask`` (0/1, same shape as ``arrive``) marks bins inside a fault
+    window; it drives the exact fault-attribution counters (A_FLTH /
+    A_FOKH — integer counts, exact in f32). ``None`` (the benign path)
+    leaves both counters untouched, so faulted and benign traces share
+    one code path bit for bit."""
+    sums, okh, maxp, flth, fokh = state
     processed, _queue, latency, cost, dropped = outs
     if slo_mode == AGG_SLO_DROP_RATE:
         val = dropped / jnp.maximum(arrive, jnp.float32(1e-9))
@@ -563,13 +611,16 @@ def update_agg_scalars(state, arrive, outs, slo_limit, slo_mode):
     for j, x in enumerate((processed, cost, dropped, latency * arrive,
                            arrive, arrive * ok)):
         new += _neumaier2(sums[3 * j], sums[3 * j + 1], sums[3 * j + 2], x)
-    return (tuple(new), okh + ok, jnp.maximum(maxp, processed))
+    if fmask is not None:
+        flth = flth + fmask
+        fokh = fokh + fmask * ok
+    return (tuple(new), okh + ok, jnp.maximum(maxp, processed), flth, fokh)
 
 
 def pack_agg_scalars(state) -> jnp.ndarray:
     """[..., AGG_SCALARS] slot layout of a scalar-statistic state."""
-    sums, okh, maxp = state
-    return jnp.stack(tuple(sums) + (okh, maxp), axis=-1)
+    sums, okh, maxp, flth, fokh = state
+    return jnp.stack(tuple(sums) + (okh, maxp, flth, fokh), axis=-1)
 
 
 def init_aggregate(shape=()):
@@ -579,16 +630,19 @@ def init_aggregate(shape=()):
             jnp.zeros(tuple(shape) + (AGG_HIST_BINS,), jnp.float32))
 
 
-def lane_update_aggregate(state, arrive, outs, slo_limit, slo_mode):
+def lane_update_aggregate(state, arrive, outs, slo_limit, slo_mode,
+                          fmask=None):
     """Fold one bin into the full aggregate state — branchless lane form.
 
     ``state`` = (scalar state with [L] leaves, hist [L, AGG_HIST_BINS]);
     arrive [L]; outs five [L] vectors. Scalars via the shared
     ``update_agg_scalars``; the histogram is a masked compare-add over
     the bucket axis (no scatter), so the Pallas kernel runs it as
-    straight-line VPU vector math with everything resident in VMEM."""
+    straight-line VPU vector math with everything resident in VMEM.
+    ``fmask`` [L] (optional) feeds the fault-attribution counters."""
     scal, hist = state
-    scal = update_agg_scalars(scal, arrive, outs, slo_limit, slo_mode)
+    scal = update_agg_scalars(scal, arrive, outs, slo_limit, slo_mode,
+                              fmask)
     bucket = _hist_bucket(outs[2])
     lanes = bucket.shape[0]
     buckets = jax.lax.broadcasted_iota(jnp.int32, (lanes, AGG_HIST_BINS), 1)
@@ -608,7 +662,8 @@ def unpack_aggregate(packed: jnp.ndarray):
     """Inverse of ``pack_aggregate`` — restores the pytree a Pallas
     kernel's VMEM-resident [L, AGG_DIM] block carries between chunks."""
     return ((tuple(packed[..., i] for i in range(18)),
-             packed[..., A_OKH], packed[..., A_MAXP]),
+             packed[..., A_OKH], packed[..., A_MAXP],
+             packed[..., A_FLTH], packed[..., A_FOKH]),
             packed[..., AGG_SCALARS:])
 
 

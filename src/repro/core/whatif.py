@@ -53,7 +53,8 @@ def run_grid(twins: Sequence[Twin], traffics: Sequence[TrafficModel],
              record_mb: float = 0.0, *,
              return_series: bool = False,
              scenario_block: Optional[int] = None,
-             devices: Optional[int] = None) -> List[GridResult]:
+             devices: Optional[int] = None,
+             faults=None) -> List[GridResult]:
     """Every (traffic x twin) combination — the paper's Table II grid —
     simulated in one dispatch over the (load matrix, index map) batch.
 
@@ -62,7 +63,11 @@ def run_grid(twins: Sequence[Twin], traffics: Sequence[TrafficModel],
     series, bit-identical to the pre-streaming engine. ``scenario_block``
     streams huge aggregate grids through the device in policy-uniform
     blocks, and ``devices=D`` shards those blocks over a D-device
-    scenario mesh (see ``simulate_grid``'s "Scaling the grid")."""
+    scenario mesh (see ``simulate_grid``'s "Scaling the grid").
+    ``faults=`` (a ``repro.faults.FaultSchedule`` or ``SampledFaults``)
+    crosses the grid with F fault futures — chaos-suite Table II, rows
+    named ``"{traffic} {twin}/f{f}"`` (see ``simulate_grid``'s "Chaos
+    suites"); ``table2_rows`` then adds the fault-attribution columns."""
     if not twins or not traffics:
         return []
     load_matrix = np.stack([tr.hourly_loads() for tr in traffics])
@@ -74,7 +79,8 @@ def run_grid(twins: Sequence[Twin], traffics: Sequence[TrafficModel],
                          cost_model=cost_model, record_mb=record_mb,
                          return_series=return_series,
                          load_matrix=load_matrix, load_index=load_index,
-                         scenario_block=scenario_block, devices=devices)
+                         scenario_block=scenario_block, devices=devices,
+                         faults=faults)
 
 
 def calibrated_grid(source, policies: Sequence[str],
@@ -116,6 +122,13 @@ def optimize_scenario(base: Twin, traffics, slo: Optional[SLO] = None,
     space; remaining kwargs forward to ``repro.search.search`` (restarts,
     steps, coarsen, ...). Returns a ``repro.search.SearchResult`` whose
     ``.twin`` drops straight into ``run_grid`` / ``table2_rows``.
+
+    Pass ``faults=`` (a ``repro.faults.FaultSchedule``) and
+    ``quantile=`` for the chance-constrained resilience variant: the
+    cheapest configuration meeting ``slo`` in at least that fraction of
+    the schedule's fault futures on every traffic scenario, with the
+    achieved empirical quantile re-checked bit-exactly
+    (``SearchResult.achieved_quantile``).
     """
     from repro.search import search as _search          # late: search
     from repro.search import search_space               # sits above core
@@ -155,9 +168,13 @@ def run_scenarios(scenarios: Sequence[Scenario],
 
 
 def table2_rows(sims: Sequence[GridResult]) -> List[Dict]:
+    # chaos-suite grids (any row simulated through fault windows) grow
+    # three attribution columns; benign tables keep the seed's exact
+    # column set
+    fault_cols = any(getattr(s, "fault_hours", 0.0) > 0.0 for s in sims)
     rows = []
     for s in sims:
-        rows.append({
+        row = {
             "run": s.name,
             "policy": s.twin.policy,
             "cost_usd": round(s.total_cost_usd, 2),
@@ -171,7 +188,14 @@ def table2_rows(sims: Sequence[GridResult]) -> List[Dict]:
             "dropped": round(s.dropped_records, 1),
             "pct_latency_met": round(s.pct_latency_met, 2),
             "slo_met": s.slo_met,
-        })
+        }
+        if fault_cols:
+            row["fault_hours"] = round(getattr(s, "fault_hours", 0.0), 1)
+            row["pct_hours_met_in_fault"] = round(
+                getattr(s, "pct_hours_met_in_fault", 100.0), 2)
+            row["pct_hours_met_outside_fault"] = round(
+                getattr(s, "pct_hours_met_outside_fault", 100.0), 2)
+        rows.append(row)
     return rows
 
 

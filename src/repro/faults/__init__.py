@@ -1,0 +1,29 @@
+"""Fault & outage scenario library (ROADMAP: chaos suites).
+
+Declarative fault specs -> seeded deterministic futures -> grid rows:
+
+    from repro import faults
+    schedule = faults.FaultSchedule(
+        specs=(faults.outage(rate_per_year=6),
+               faults.disconnect(disconnect_frac=(0.2, 0.5))),
+        n_futures=8, seed=0)
+    summaries = simulate_grid(twins, traffics, slo, cost,
+                              return_series=False, faults=schedule)
+
+and chance-constrained resilience search:
+
+    result = optimize_scenario(base, [surge], slo, search=(...),
+                               faults=schedule, quantile=0.95)
+"""
+from .spec import (FAULT_KINDS, FaultSchedule, FaultSpec, brownout, burst,
+                   disconnect, outage)
+from .sampler import (ReplayTerm, SampledFaults, sample_futures,
+                      validate_sampled)
+from .grid import FaultGrid, expand_grid
+
+__all__ = [
+    "FAULT_KINDS", "FaultSpec", "FaultSchedule",
+    "outage", "brownout", "disconnect", "burst",
+    "SampledFaults", "ReplayTerm", "sample_futures", "validate_sampled",
+    "FaultGrid", "expand_grid",
+]

@@ -91,7 +91,8 @@ def ssm_scan(x, dt, A, B, C, D, state=None):
 
 
 def policy_scan(loads, params, onehot=None, dt_hours=1.0, *,
-                policy_index=None, differentiable=False, surrogate=False):
+                policy_index=None, differentiable=False, surrogate=False,
+                caps=None):
     """TwinPolicy scenario-grid scan: loads [N, T], params [N, PARAM_DIM]
     -> (carry_end [N, CARRY_DIM], five [N, T] series).
 
@@ -116,12 +117,24 @@ def policy_scan(loads, params, onehot=None, dt_hours=1.0, *,
     extras carry gradients — the policy-search inner loop
     (``repro.search``). Surrogate numbers are a gradient guide only;
     exact results always come from the non-surrogate forms.
+
+    ``caps`` [N, T] (optional) threads a fault schedule's capacity
+    multipliers through the scan (``repro.faults``): the step runs in
+    the fault-layer wrapper (backlog queue, reconnect flood — see
+    ``core.twin.fault_lane_policy_step``). The fault SERIES path always
+    takes the reference lane scan (plain autodiff when differentiated;
+    the checkpointed VJP and the Pallas series kernel cover the benign
+    fast paths — fault grids lean on the aggregate kernel instead).
     """
     if (onehot is None) == (policy_index is None):   # before dispatch, so
         # both backends reject the ambiguity identically (one_hot(None)
         # would otherwise make the Pallas path return silent zeros)
         raise ValueError("pass exactly one of onehot= (mixed grid) or "
                          "policy_index= (uniform lane block)")
+    if caps is not None:
+        return ref.policy_grid_scan(loads, params, onehot, dt_hours,
+                                    policy_index=policy_index,
+                                    surrogate=surrogate, caps=caps)
     if pallas_enabled() and not differentiable and not surrogate:
         from repro.kernels import policy_scan as policy_kernel
         if onehot is None:
@@ -153,7 +166,8 @@ def policy_scan(loads, params, onehot=None, dt_hours=1.0, *,
 
 
 def policy_scan_agg(loads, params, onehot, dt_hours=1.0, *,
-                    slo_limit=float("inf"), slo_mode=0):
+                    slo_limit=float("inf"), slo_mode=0, caps=None,
+                    fmask=None):
     """Streaming-aggregate TwinPolicy grid scan: loads [N, T], params
     [N, PARAM_DIM], onehot [N, P] -> (carry_end [N, CARRY_DIM],
     agg [N, AGG_DIM]) — Table II statistics folded into the scan carry,
@@ -166,13 +180,22 @@ def policy_scan_agg(loads, params, onehot, dt_hours=1.0, *,
     static trace constants (``core.twin.AGG_SLO_*``; ``inf`` = no SLO).
     Not differentiable on either path — calibration differentiates the
     series scan, which keeps the full trace a loss needs anyway.
+
+    ``caps`` / ``fmask`` [N, T] (together) thread a fault schedule
+    through the scan on BOTH backends: the Pallas aggregate kernel has a
+    native fault variant (two extra scenario-minor input streams, the
+    backlog queue as one more VMEM scratch column), the reference path
+    scans ``core.twin.fault_lane_policy_step``.
     """
+    if (caps is None) != (fmask is None):
+        raise ValueError("pass caps= and fmask= together (or neither)")
     if pallas_enabled():
         from repro.kernels import policy_scan as policy_kernel
         return policy_kernel.policy_grid_agg(
             loads, params, onehot, dt_hours, slo_limit=float(slo_limit),
-            slo_mode=int(slo_mode),
+            slo_mode=int(slo_mode), caps=caps, fmask=fmask,
             interpret=getattr(_state, "interpret", True))
     return ref.policy_grid_agg(loads, params, onehot, dt_hours,
                                slo_limit=float(slo_limit),
-                               slo_mode=int(slo_mode))
+                               slo_mode=int(slo_mode), caps=caps,
+                               fmask=fmask)

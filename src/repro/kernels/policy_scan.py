@@ -191,6 +191,103 @@ def _policy_agg_kernel(loads_ref, params_ref, onehot_ref,
         agg_out_ref[...] = packed
 
 
+def _policy_agg_fault_kernel(loads_ref, caps_ref, fmask_ref, params_ref,
+                             onehot_ref, carry_end_ref, agg_out_ref,
+                             carry_ref, agg_ref, *, step, update, pack,
+                             unpack, dt: float, slo_limit: float,
+                             slo_mode: int, chunk: int, num_chunks: int,
+                             carry_dim: int, agg_dim: int):
+    """Fault-schedule variant of ``_policy_agg_kernel``: two extra
+    scenario-minor input streams (capacity multipliers + in-fault masks,
+    same [chunk, LANES] blocks as the loads) and the fault-layer backlog
+    queue riding as one extra column of the VMEM carry scratch. Padded
+    lanes stream zero capacity AND zero load, so the fault gate holds
+    their backlog at exactly zero. The final carry row folds the backlog
+    into the queue slot (records conservation: offered = processed +
+    dropped + carry_end[:, 0])."""
+    c = pl.program_id(1)
+    lanes = loads_ref.shape[1]
+
+    @pl.when(c == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros((lanes, carry_dim + 1), jnp.float32)
+        agg_ref[...] = jnp.zeros((lanes, agg_dim), jnp.float32)
+
+    loads = loads_ref[...]            # [chunk, LANES]
+    caps = caps_ref[...]              # [chunk, LANES]
+    fmask = fmask_ref[...]            # [chunk, LANES]
+    params = params_ref[...]          # [LANES, PARAM_DIM]
+    onehot = onehot_ref[...]          # [LANES, P]
+    dt_f = jnp.float32(dt)
+
+    def bin_step(t, state):
+        carry, fq, agg = state
+        (carry, fq), outs = step((carry, fq), loads[t], caps[t], params,
+                                 onehot, dt_f)
+        agg = update(agg, loads[t], outs, slo_limit, slo_mode, fmask[t])
+        return carry, fq, agg
+
+    cf = carry_ref[...]
+    carry, fq, agg = jax.lax.fori_loop(
+        0, chunk, bin_step,
+        (cf[:, :carry_dim], cf[:, carry_dim], unpack(agg_ref[...])))
+    packed = pack(agg)
+    carry_ref[...] = jnp.concatenate([carry, fq[:, None]], axis=1)
+    agg_ref[...] = packed
+
+    @pl.when(c == num_chunks - 1)
+    def _fin():
+        carry_end_ref[...] = jnp.concatenate(
+            [(carry[:, 0] + fq)[:, None], carry[:, 1:]], axis=1)
+        agg_out_ref[...] = packed
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("dt_hours", "slo_limit", "slo_mode",
+                                    "version", "lanes", "chunk",
+                                    "interpret"))
+def _policy_agg_fault(loads_t: jnp.ndarray, caps_t: jnp.ndarray,
+                      fmask_t: jnp.ndarray, params: jnp.ndarray,
+                      onehot: jnp.ndarray, *, dt_hours: float,
+                      slo_limit: float, slo_mode: int, version: int,
+                      lanes: int, chunk: int, interpret: bool):
+    """Fault twin of ``_policy_agg``: identical grid and output layout,
+    plus the two [T, Npad] fault operand streams."""
+    from repro.core.twin import (AGG_DIM, CARRY_DIM,
+                                 fault_lane_policy_step,
+                                 lane_update_aggregate, pack_aggregate,
+                                 unpack_aggregate)
+    del version
+    t_bins, npad = loads_t.shape
+    nb, nc = npad // lanes, t_bins // chunk
+
+    kernel = functools.partial(
+        _policy_agg_fault_kernel, step=fault_lane_policy_step,
+        update=lane_update_aggregate, pack=pack_aggregate,
+        unpack=unpack_aggregate, dt=float(dt_hours),
+        slo_limit=float(slo_limit), slo_mode=int(slo_mode), chunk=chunk,
+        num_chunks=nc, carry_dim=CARRY_DIM, agg_dim=AGG_DIM)
+    stream = pl.BlockSpec((chunk, lanes), lambda i, c: (c, i))
+    return pl.pallas_call(
+        kernel,
+        grid=(nb, nc),
+        in_specs=[
+            stream, stream, stream,
+            pl.BlockSpec((lanes, params.shape[1]), lambda i, c: (i, 0)),
+            pl.BlockSpec((lanes, onehot.shape[1]), lambda i, c: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((lanes, CARRY_DIM), lambda i, c: (i, 0)),
+            pl.BlockSpec((lanes, AGG_DIM), lambda i, c: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((npad, CARRY_DIM), jnp.float32),
+                   jax.ShapeDtypeStruct((npad, AGG_DIM), jnp.float32)],
+        scratch_shapes=[_vmem((lanes, CARRY_DIM + 1), jnp.float32),
+                        _vmem((lanes, AGG_DIM), jnp.float32)],
+        interpret=interpret,
+    )(loads_t, caps_t, fmask_t, params, onehot)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("dt_hours", "slo_limit", "slo_mode",
                                     "version", "lanes", "chunk",
@@ -263,11 +360,30 @@ def _stage_operands(loads, loads_t, lanes, chunk):
     return n, t_bins, npad, lanes, chunk, staged
 
 
+def _stage_aux(aux, aux_t, t_bins: int, n: int, npad: int, what: str):
+    """Stage one optional per-bin fault stream into the kernel's [T, Npad]
+    scenario-minor layout (zero-padded: a zero capacity multiplier on a
+    zero-load padded lane keeps its fault backlog at exactly zero)."""
+    if aux is None and aux_t is None:
+        return None
+    if (aux is None) == (aux_t is None):
+        raise ValueError(f"pass exactly one of {what}= ([N, T]) or "
+                         f"{what}_t= ([T, N] scenario-minor)")
+    if aux_t is None:
+        staged = jnp.zeros((t_bins, npad), jnp.float32)
+        return staged.at[:, :n].set(jnp.asarray(aux, jnp.float32).T)
+    staged = jnp.asarray(aux_t, jnp.float32)
+    if npad != n:
+        staged = jnp.pad(staged, ((0, 0), (0, npad - n)))
+    return staged
+
+
 def policy_grid_agg(loads: jnp.ndarray | None, params: jnp.ndarray,
                     onehot: jnp.ndarray, dt_hours: float = 1.0, *,
                     slo_limit: float = float("inf"), slo_mode: int = 0,
                     lanes: int = DEFAULT_LANES, chunk: int = DEFAULT_CHUNK,
-                    interpret: bool = True, loads_t=None):
+                    interpret: bool = True, loads_t=None, caps=None,
+                    fmask=None, caps_t=None, fmask_t=None):
     """Fused streaming-aggregate grid scan; semantics of
     ``ref.policy_grid_agg``. Same padding/transposition contract as
     ``policy_grid_scan``, but the only outputs are O(N): per-scenario
@@ -275,7 +391,10 @@ def policy_grid_agg(loads: jnp.ndarray | None, params: jnp.ndarray,
     series are never allocated, on HBM or anywhere else. ``slo_limit`` /
     ``slo_mode`` are static (see ``core.twin.AGG_SLO_*``). Pass
     ``loads_t=`` ([T, N], ``loads=None``) to hand over operands already
-    in the kernel's scenario-minor layout. Returns
+    in the kernel's scenario-minor layout. A fault schedule's capacity /
+    in-fault streams ride along as ``caps``/``fmask`` (or the
+    scenario-minor ``caps_t``/``fmask_t``) and select the fault kernel
+    variant (``_policy_agg_fault_kernel``). Returns
     (carry_end [N, CARRY_DIM], agg [N, AGG_DIM]).
     """
     from repro.core.twin import registry_version
@@ -283,6 +402,17 @@ def policy_grid_agg(loads: jnp.ndarray | None, params: jnp.ndarray,
         loads, loads_t, lanes, chunk)
     pad = lambda a: jnp.zeros((npad, a.shape[1]), jnp.float32).at[:n].set(  # noqa: E731
         jnp.asarray(a, jnp.float32))
+    caps_t = _stage_aux(caps, caps_t, t_bins, n, npad, "caps")
+    fmask_t = _stage_aux(fmask, fmask_t, t_bins, n, npad, "fmask")
+    if (caps_t is None) != (fmask_t is None):
+        raise ValueError("pass caps and fmask together (or neither)")
+    if caps_t is not None:
+        carry_end, agg = _policy_agg_fault(
+            loads_t, caps_t, fmask_t, pad(params), pad(onehot),
+            dt_hours=float(dt_hours), slo_limit=float(slo_limit),
+            slo_mode=int(slo_mode), version=registry_version(),
+            lanes=lanes, chunk=chunk, interpret=interpret)
+        return carry_end[:n], agg[:n]
     carry_end, agg = _policy_agg(
         loads_t, pad(params), pad(onehot), dt_hours=float(dt_hours),
         slo_limit=float(slo_limit), slo_mode=int(slo_mode),

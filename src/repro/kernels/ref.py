@@ -96,9 +96,32 @@ def sdpa_blocked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return out.reshape(b, sq, h, dv).astype(q.dtype)
 
 
+def _fault_switch_step(policy_index, branches, params, dt):
+    """Fault-layer wrapper for the uniform-policy ``lax.switch`` step —
+    same arithmetic (in the same order) as
+    ``core.twin.fault_lane_policy_step``, with the single-branch switch
+    in place of the masked blend."""
+    def fbin_step(state, arrive, capmul):
+        carry, fq = state
+        gate = (capmul > 0).astype(jnp.float32)
+        avail = fq + arrive
+        a_eff = gate * avail
+        new_fq = avail - a_eff
+        p_eff = jnp.concatenate([(params[:, 0] * capmul)[:, None],
+                                 params[:, 1:]], axis=1)
+        carry, outs = jax.lax.switch(policy_index, branches, carry, a_eff,
+                                     p_eff, dt)
+        wait = new_fq / jnp.maximum(params[:, 0], jnp.float32(1e-9))
+        outs = (outs[0], outs[1] + new_fq, outs[2] + wait, outs[3],
+                outs[4])
+        return (carry, new_fq), outs
+    return fbin_step
+
+
 def policy_grid_scan(loads: jnp.ndarray, params: jnp.ndarray,
                      onehot: jnp.ndarray = None, dt_hours=1.0,
-                     policy_index=None, surrogate: bool = False):
+                     policy_index=None, surrogate: bool = False,
+                     caps: jnp.ndarray = None):
     """TwinPolicy scenario-grid scan, lane form — the semantics of the
     Pallas kernel (``kernels/policy_scan.py``).
 
@@ -121,10 +144,19 @@ def policy_grid_scan(loads: jnp.ndarray, params: jnp.ndarray,
     (``core.twin.surrogate_lane_branches``) so hard-gated policy extras
     (quickscale/autoscale ceil, batch_window's flush comparison) carry
     gradients — the form ``repro.search`` differentiates.
+
+    ``caps`` [N, T] (optional) is a per-bin capacity-multiplier series
+    from a fault schedule (``repro.faults``): the scan steps through
+    ``core.twin.fault_lane_policy_step`` instead, carrying a fault-layer
+    backlog queue whose residue folds into ``carry_end[:, 0]``. Still
+    differentiable w.r.t. ``params`` — the chance-constrained search
+    grad path runs exactly this scan.
+
     Returns (carry_end [N, CARRY_DIM], (processed, queue, latency, cost,
     dropped)) with each series [N, T].
     """
-    from repro.core.twin import (CARRY_DIM, lane_branches,  # late: avoid a
+    from repro.core.twin import (CARRY_DIM, fault_lane_policy_step,
+                                 lane_branches,  # late: avoid a
                                  lane_policy_step,  # kernels<->core cycle
                                  surrogate_lane_branches)
     if (onehot is None) == (policy_index is None):
@@ -133,6 +165,26 @@ def policy_grid_scan(loads: jnp.ndarray, params: jnp.ndarray,
     n = loads.shape[0]
     dt = jnp.asarray(dt_hours, jnp.float32)
     branches = surrogate_lane_branches() if surrogate else lane_branches()
+
+    if caps is not None:
+        if onehot is not None:
+            def fbin_step(state, xs):
+                arrive, capmul = xs
+                return fault_lane_policy_step(state, arrive, capmul,
+                                              params, onehot, dt,
+                                              branches=branches)
+        else:
+            fstep = _fault_switch_step(policy_index, branches, params, dt)
+
+            def fbin_step(state, xs):
+                return fstep(state, xs[0], xs[1])
+
+        (carry_end, fq_end), outs = jax.lax.scan(
+            fbin_step, (jnp.zeros((n, CARRY_DIM), jnp.float32),
+                        jnp.zeros((n,), jnp.float32)),
+            (loads.T, caps.T))
+        carry_end = carry_end.at[:, 0].add(fq_end)
+        return carry_end, tuple(o.T for o in outs)
 
     if onehot is not None:
         def bin_step(carry, arrive):
@@ -151,7 +203,8 @@ def policy_grid_scan(loads: jnp.ndarray, params: jnp.ndarray,
 def policy_grid_agg(loads: jnp.ndarray, params: jnp.ndarray,
                     onehot: jnp.ndarray = None, dt_hours=1.0, *,
                     policy_index=None, slo_limit: float = float("inf"),
-                    slo_mode: int = 0):
+                    slo_mode: int = 0, caps: jnp.ndarray = None,
+                    fmask: jnp.ndarray = None):
     """Streaming-aggregate scenario-grid scan, lane form — the semantics
     of the Pallas aggregate kernel (``kernels/policy_scan.py``).
 
@@ -163,16 +216,53 @@ def policy_grid_agg(loads: jnp.ndarray, params: jnp.ndarray,
     selecting which value stream feeds the SLO-ok counters
     (``core.twin.AGG_SLO_*``; ``inf`` when no SLO applies).
 
+    ``caps`` / ``fmask`` [N, T] (optional, together) are the per-bin
+    capacity-multiplier and in-fault-indicator series of a fault
+    schedule: the policy steps through the fault layer
+    (``core.twin.fault_lane_policy_step``), the SLO counters stay
+    weighted by the OFFERED load (fault-layer backlog shows up as queue
+    and latency, not as vanished records), ``fmask`` drives the
+    A_FLTH/A_FOKH attribution counters, and the fault backlog residue
+    folds into ``carry_end[:, 0]``.
+
     Returns (carry_end [N, CARRY_DIM], agg [N, AGG_DIM]).
     """
-    from repro.core.twin import (CARRY_DIM, init_aggregate,  # late: avoid
+    from repro.core.twin import (CARRY_DIM, fault_lane_policy_step,
+                                 init_aggregate,  # late: avoid
                                  lane_branches, lane_policy_step,  # cycle
                                  lane_update_aggregate, pack_aggregate)
     if (onehot is None) == (policy_index is None):
         raise ValueError("pass exactly one of onehot= (mixed grid) or "
                          "policy_index= (uniform lane block)")
+    if (caps is None) != (fmask is None):
+        raise ValueError("pass caps= and fmask= together (or neither)")
     n = loads.shape[0]
     dt = jnp.asarray(dt_hours, jnp.float32)
+
+    if caps is not None:
+        if policy_index is not None:
+            fstep = _fault_switch_step(policy_index, lane_branches(),
+                                       params, dt)
+
+        def fbin_step(state, xs):
+            arrive, capmul, fm = xs
+            (carry, fq), agg = state
+            if onehot is not None:
+                (carry, fq), outs = fault_lane_policy_step(
+                    (carry, fq), arrive, capmul, params, onehot, dt)
+            else:
+                (carry, fq), outs = fstep((carry, fq), arrive, capmul)
+            agg = lane_update_aggregate(agg, arrive, outs, slo_limit,
+                                        slo_mode, fm)
+            return ((carry, fq), agg), None
+
+        (((carry_end, fq_end), agg), _) = jax.lax.scan(
+            fbin_step, ((jnp.zeros((n, CARRY_DIM), jnp.float32),
+                         jnp.zeros((n,), jnp.float32)),
+                        init_aggregate((n,))),
+            (loads.T, caps.T, fmask.T))
+        carry_end = carry_end.at[:, 0].add(fq_end)
+        return carry_end, pack_aggregate(agg)
 
     def bin_step(state, arrive):
         carry, agg = state

@@ -22,6 +22,13 @@ Layers:
 * ``frontier``  — cost-vs-SLO Pareto sweep (all targets as lanes of the
                   same single dispatch; monotone by construction).
 
+``search(faults=schedule, quantile=q)`` makes the whole thing
+**chance-constrained** (``repro.faults``): lanes fan out over F sampled
+fault futures per scenario, the objective becomes expected cost plus a
+smooth differentiable quantile hinge, and the winner is the cheapest
+configuration whose bit-exact re-check meets the SLO in at least ``q``
+of the futures on every scenario (``SearchResult.achieved_quantile``).
+
 Entry points: ``search`` / ``search_policies`` / ``pareto_frontier``
 here, or ``repro.core.whatif.optimize_scenario`` for the
 measure -> calibrate -> optimize loop the paper's business questions
@@ -31,14 +38,14 @@ examples/whatif_analysis.py, What-if #6).
 from repro.search.frontier import Frontier, FrontierPoint, pareto_frontier
 from repro.search.objective import lane_objective, smooth_met_fraction
 from repro.search.optimize import (SearchInfeasibleWarning, SearchResult,
-                                   TournamentResult, evaluate_exact,
-                                   search, search_policies)
+                                   TournamentResult, achieved_quantile,
+                                   evaluate_exact, search, search_policies)
 from repro.search.space import (SearchSpace, default_space, search_space)
 
 __all__ = [
     "Frontier", "FrontierPoint", "pareto_frontier",
     "lane_objective", "smooth_met_fraction",
     "SearchInfeasibleWarning", "SearchResult", "TournamentResult",
-    "evaluate_exact", "search", "search_policies",
+    "achieved_quantile", "evaluate_exact", "search", "search_policies",
     "SearchSpace", "default_space", "search_space",
 ]

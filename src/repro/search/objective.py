@@ -57,6 +57,14 @@ DEFAULT_TAU = 0.02
 #: normalization follows even a tiny consistent gradient, so small is
 #: enough to escape the infeasible region.
 EXCESS_WEIGHT = 0.002
+#: width of the per-future met/miss sigmoid in met-fraction units for the
+#: chance constraint (``repro.search.search(faults=..., quantile=...)``):
+#: each fault future contributes sigmoid((frac - met)/CHANCE_W) to the
+#: smoothed probability of meeting the SLO, wide enough that a future
+#: hovering at the boundary passes usable gradient to the quantile hinge,
+#: narrow enough that clearly-met/clearly-missed futures count ~0/1 like
+#: the exact re-check's indicator
+CHANCE_W = 0.01
 
 
 def annual_scale(t_bins: int, bin_hours: float) -> float:
@@ -81,7 +89,8 @@ def smooth_met_fraction(values, loads, slo_limit_lane, width):
 def lane_objective(params_block, loads_block, dt_hours, policy_index,
                    slo_limit_lane, slo_mode: int, met_fraction,
                    penalty_weight, penalty_scale, horizon_scale,
-                   tau=DEFAULT_TAU, surrogate: bool = True):
+                   tau=DEFAULT_TAU, surrogate: bool = True,
+                   caps_block=None):
     """[L] smooth objective values for a lane block (see module docstring).
 
     params_block [L, PARAM_DIM]; loads_block [L, T]; ``policy_index``,
@@ -91,14 +100,17 @@ def lane_objective(params_block, loads_block, dt_hours, policy_index,
     ``slo_mode``, ``dt_hours`` and ``surrogate`` are static; pass
     ``surrogate=False`` (``SearchSpace.needs_surrogate``) when no
     searched parameter is hard-gated, so the optimizer descends the TRUE
-    landscape instead of the smoothed one.
+    landscape instead of the smoothed one. ``caps_block`` [L, T]
+    (optional) threads a fault schedule's capacity multipliers through
+    the scan (chance-constrained resilience search — each lane is then
+    one (candidate, scenario, fault future) triple).
     Returns (objective [L], (annual_cost [L], met_frac [L])).
     """
     from repro.kernels import ops     # late: keep repro.search importable
     carry_end, (_proc, _q, lat, cost, drop) = ops.policy_scan(
         loads_block, params_block, dt_hours=dt_hours,
         policy_index=policy_index, differentiable=True,
-        surrogate=surrogate)
+        surrogate=surrogate, caps=caps_block)
     total = cost.sum(axis=1)
     backlog_cost = (carry_end[:, 0]
                     / jnp.maximum(params_block[:, 0], 1e-9) / 3600.0

@@ -52,7 +52,8 @@ from repro.core.twin import (AGG_SLO_DROP_RATE, AGG_SLO_LATENCY, PARAM_DIM,
                              Twin, registry_version)
 from repro.calibrate.objective import params_from_z
 from repro.optim.adamw import adamw_update, init_opt_state
-from repro.search.objective import annual_scale, lane_objective
+from repro.search.objective import (CHANCE_W, HINGE_S, annual_scale,
+                                    lane_objective)
 from repro.search.space import (Z_CLIP, SearchSpace, apply_ties,
                                 default_space, search_space)
 
@@ -78,29 +79,45 @@ class SearchInfeasibleWarning(UserWarning):
     """No candidate configuration met the SLO (details in the message)."""
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5, 6))
-def _search_kernel(steps: int, n_scen: int, dt_hours: float, slo_mode: int,
-                   surrogate: bool, version: int, ocfg: OptimizerConfig,
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5, 6, 7))
+def _search_kernel(steps: int, n_scen: int, n_fut: int, dt_hours: float,
+                   slo_mode: int, surrogate: bool, version: int,
+                   ocfg: OptimizerConfig,
                    z0, loads, scen_w, lo, hi, log_mask, free_mask, fixed,
                    tie_src, tie_coeff, policy_index, slo_limit_k,
                    met_fraction, penalty_weight, penalty_scale,
-                   horizon_scale):
-    """K restarts x S scenarios, one dispatch (see module docstring).
+                   horizon_scale, caps=None, quantile=1.0):
+    """K restarts x S scenarios (x F fault futures), one dispatch.
 
-    z0 [K, PARAM_DIM]; loads [S, T]; scen_w [S] (normalized);
-    slo_limit_k [K] per-restart SLO limits (a plain search broadcasts one
-    limit; the Pareto frontier packs its whole target vector here).
-    ``steps``/``n_scen``/``dt_hours``/``slo_mode``/``ocfg`` are static;
-    ``version`` is the policy-registry version so late registrations
-    retrace (same contract as the grid and fit kernels). Everything else
-    — including ``policy_index`` and the box/tie arrays — is traced, so
-    one compile serves a whole tournament at equal shapes.
+    z0 [K, PARAM_DIM]; loads [S*F, T] scenario-major / future-minor;
+    scen_w [S] (normalized); slo_limit_k [K] per-restart SLO limits (a
+    plain search broadcasts one limit; the Pareto frontier packs its
+    whole target vector here). ``steps``/``n_scen``/``n_fut``/
+    ``dt_hours``/``slo_mode``/``ocfg`` are static; ``version`` is the
+    policy-registry version so late registrations retrace (same contract
+    as the grid and fit kernels). Everything else — including
+    ``policy_index`` and the box/tie arrays — is traced, so one compile
+    serves a whole tournament at equal shapes.
+
+    ``n_fut == 1`` (no faults) keeps the pre-chaos objective exactly:
+    per-restart scenario-weighted sum of the per-lane cost+hinge. With
+    ``n_fut > 1`` (``caps`` [S*F, T] riding along) the objective turns
+    chance-constrained: expected cost over futures plus a penalty on the
+    smoothed probability of meeting the SLO falling below ``quantile`` —
+    each future votes sigmoid((frac - met)/CHANCE_W), the per-scenario
+    mean of the votes is the smooth chance, its shortfall below the
+    target quantile is hinged exactly like the plain path's met-fraction
+    shortfall (plus the same small gated violation-depth term so deeply
+    infeasible futures still pull).
+
     Returns (z_fin [K, D], params_fin [K, D], objective [K],
-    cost_ann [K, S], met_frac [K, S], history [steps, K]).
+    cost_ann [K, S*F], met_frac [K, S*F], history [steps, K]).
     """
     k = z0.shape[0]
+    n_lanes = n_scen * n_fut
     loads_block = jnp.tile(loads, (k, 1))
-    slo_lane = jnp.repeat(slo_limit_k, n_scen)
+    caps_block = None if caps is None else jnp.tile(caps, (k, 1))
+    slo_lane = jnp.repeat(slo_limit_k, n_lanes)
 
     def params_of(z):
         p = jax.vmap(lambda zz: params_from_z(zz, lo, hi, log_mask,
@@ -109,15 +126,45 @@ def _search_kernel(steps: int, n_scen: int, dt_hours: float, slo_mode: int,
 
     def objective(z):
         p = params_of(z)
-        pb = jnp.repeat(p, n_scen, axis=0)
+        pb = jnp.repeat(p, n_lanes, axis=0)
         per_lane, (cost_ann, frac) = lane_objective(
             pb, loads_block, dt_hours, policy_index, slo_lane, slo_mode,
             met_fraction, penalty_weight, penalty_scale, horizon_scale,
-            surrogate=surrogate)
-        per_restart = (per_lane.reshape(k, n_scen) * scen_w).sum(axis=1)
+            surrogate=surrogate, caps_block=caps_block)
+        if n_fut == 1:
+            per_restart = (per_lane.reshape(k, n_scen) * scen_w) \
+                .sum(axis=1)
+        else:
+            cost_sf = cost_ann.reshape(k, n_scen, n_fut)
+            frac_sf = frac.reshape(k, n_scen, n_fut)
+            exp_cost = (cost_sf.mean(axis=2) * scen_w).sum(axis=1)
+            chance = jax.nn.sigmoid((frac_sf - met_fraction)
+                                    / CHANCE_W).mean(axis=2)
+            # a future sitting exactly ON the met boundary votes 0.5, so
+            # the reachable smooth chance tops out half a vote short of
+            # the exact count — aim the hinge at that grid (a quantile
+            # of 1.0 over F futures means "the worst future at the
+            # boundary", i.e. chance ~ 1 - 0.5/F, not 1.0)
+            q_eff = quantile - 0.5 / n_fut
+            short = jax.nn.softplus((q_eff - chance) / HINGE_S) * HINGE_S
+            # chance carries NO usable gradient once futures are deeply
+            # infeasible (every per-bin compliance sigmoid saturates, so
+            # autodiff sees only the cost slope and dives for the
+            # cheapest corner) — the rescue slope is the per-lane
+            # penalty lane_objective already computed, whose violation-
+            # magnitude softplus stays LINEAR in the violation depth.
+            # Gate its future-mean by the chance shortfall: full
+            # restoring force while the quantile is missed, released
+            # the moment it is met so the allowed (1 - quantile) worst
+            # futures stop pulling capacity up at the boundary.
+            pen_lane = (per_lane - cost_ann).reshape(k, n_scen, n_fut)
+            gate = jax.nn.sigmoid((q_eff - chance) / HINGE_S)
+            pen = (penalty_weight * penalty_scale * short
+                   + gate * pen_lane.mean(axis=2))
+            per_restart = exp_cost + (pen * scen_w).sum(axis=1)
         return per_restart.sum(), (per_restart,
-                                   cost_ann.reshape(k, n_scen),
-                                   frac.reshape(k, n_scen))
+                                   cost_ann.reshape(k, n_lanes),
+                                   frac.reshape(k, n_lanes))
 
     vgrad = jax.value_and_grad(objective, has_aux=True)
     opt0 = jax.vmap(lambda z: init_opt_state({"z": z}, ocfg))(z0)
@@ -159,6 +206,13 @@ class SearchResult:
     restart_pct: np.ndarray        # [K] worst-scenario exact SLO pct
     history: np.ndarray            # [steps, K] smooth objective
     slo: Optional[SLO] = None
+    # chance-constrained runs (search(faults=..., quantile=q)) only:
+    # the target quantile and the winner's exact empirical quantile —
+    # worst-scenario fraction of fault futures meeting the SLO on the
+    # bit-exact aggregate re-check. Benign searches report 1.0 / 1.0.
+    quantile: float = 1.0
+    achieved_quantile: float = 1.0
+    n_futures: int = 1
 
     @property
     def saving_vs_base(self) -> float:
@@ -221,14 +275,19 @@ def _run_kernel(space: SearchSpace, g_loads: np.ndarray, g_bin: float,
                 scen_w: np.ndarray, z0: np.ndarray, slo_limit_k: np.ndarray,
                 slo_mode: int, met: float, penalty_weight: float,
                 penalty_scale: float, g_horizon: float, steps: int,
-                ocfg: OptimizerConfig):
+                ocfg: OptimizerConfig, *, caps: Optional[np.ndarray] = None,
+                n_fut: int = 1, quantile: float = 1.0):
     """Marshal one ``_search_kernel`` dispatch for a space and return
     ([K, PARAM_DIM] finite candidate vectors, [steps, K] history) —
     diverged restarts fall back to the base configuration's vector.
     Shared by ``search`` (one SLO limit broadcast over K) and
-    ``pareto_frontier`` (M*K lane-packed limits)."""
+    ``pareto_frontier`` (M*K lane-packed limits). The keyword-only fault
+    operands (``caps`` [S*F, T] + ``n_fut``/``quantile``) switch the
+    kernel to its chance-constrained objective; ``g_loads`` then has
+    S*F rows, scenario-major / future-minor."""
     (_, p_fin, _, _, _, history) = _search_kernel(
-        int(steps), g_loads.shape[0], float(g_bin), int(slo_mode),
+        int(steps), g_loads.shape[0] // int(n_fut), int(n_fut),
+        float(g_bin), int(slo_mode),
         bool(space.needs_surrogate), registry_version(), ocfg,
         jnp.asarray(z0), jnp.asarray(g_loads), jnp.asarray(scen_w),
         jnp.asarray(space.lo), jnp.asarray(space.hi),
@@ -237,7 +296,9 @@ def _run_kernel(space: SearchSpace, g_loads: np.ndarray, g_bin: float,
         jnp.asarray(space.tie_coeff), jnp.int32(space.policy_index),
         jnp.asarray(slo_limit_k, jnp.float32), jnp.float32(met),
         jnp.float32(penalty_weight), jnp.float32(penalty_scale),
-        jnp.float32(g_horizon))
+        jnp.float32(g_horizon),
+        None if caps is None else jnp.asarray(caps, jnp.float32),
+        jnp.float32(quantile))
     p_fin = np.asarray(p_fin, np.float64)
     bad = ~np.isfinite(p_fin).all(axis=1)
     if bad.any():
@@ -264,9 +325,21 @@ def _as_loads(traffics, loads, bin_hours):
         [f"scenario{i}" for i in range(len(loads_np))]
 
 
+def achieved_quantile(rows: Sequence[GridSummary], n_scen: int,
+                      n_fut: int) -> float:
+    """Worst-scenario fraction of fault futures whose exact re-check met
+    the SLO — the empirical quantile a chance-constrained candidate
+    actually achieves. ``rows`` is one candidate's [S*F] GridSummary
+    list, scenario-major / future-minor."""
+    met = np.array([bool(r.slo_met) for r in rows], bool) \
+        .reshape(n_scen, n_fut)
+    return float(met.mean(axis=1).min())
+
+
 def evaluate_exact(twins: Sequence[Twin], loads_np: np.ndarray,
                    bin_hours: float, slo: Optional[SLO],
-                   scen_w: np.ndarray, horizon_scale: float
+                   scen_w: np.ndarray, horizon_scale: float, *,
+                   faults=None, quantile: float = 1.0
                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                               List[List[GridSummary]]]:
     """Bit-exact candidate scoring through the streaming-aggregate grid.
@@ -277,6 +350,14 @@ def evaluate_exact(twins: Sequence[Twin], loads_np: np.ndarray,
     with the histogram p95/p99 columns riding along as the p-latency
     evidence ``SearchResult`` reports). Returns (annual_cost [C],
     feasible [C], worst_pct [C], rows [C][S]).
+
+    ``faults=`` (keyword-only: a ``repro.faults.SampledFaults`` or
+    ``FaultSchedule``) re-checks every candidate across the F fault
+    futures instead: rows come back per (candidate, scenario, future) —
+    [C][S*F], scenario-major / future-minor — cost becomes the
+    scenario-weighted EXPECTED cost over futures, and feasibility
+    becomes ``achieved_quantile(rows) >= quantile`` (the SLO must hold
+    in at least that fraction of futures on every scenario).
     """
     c, s = len(twins), loads_np.shape[0]
     grid_twins = [tw for tw in twins for _ in range(s)]
@@ -284,14 +365,23 @@ def evaluate_exact(twins: Sequence[Twin], loads_np: np.ndarray,
     names = [f"{tw.name}@s{j}" for tw in twins for j in range(s)]
     rows = simulate_grid(grid_twins, names=names, slo=slo,
                          bin_hours=bin_hours, return_series=False,
-                         load_matrix=loads_np, load_index=load_index)
-    rows_by_cand = [rows[i * s:(i + 1) * s] for i in range(c)]
+                         load_matrix=loads_np, load_index=load_index,
+                         faults=faults)
+    f = len(rows) // (c * s) if c and s else 1
+    per = s * f
+    rows_by_cand = [rows[i * per:(i + 1) * per] for i in range(c)]
+    w_sf = np.repeat(np.asarray(scen_w, np.float64), f) / f
     cost = np.array([sum(w * r.total_cost_usd
-                         for w, r in zip(scen_w, rr)) * horizon_scale
+                         for w, r in zip(w_sf, rr)) * horizon_scale
                      for rr in rows_by_cand])
     if slo is None:
         feas = np.ones(c, bool)
         pct = np.full(c, 100.0)
+    elif faults is not None and f > 1:
+        aq = np.array([achieved_quantile(rr, s, f) for rr in rows_by_cand])
+        feas = aq >= float(quantile) - 1e-9
+        pct = np.array([min(r.pct_latency_met for r in rr)
+                        for rr in rows_by_cand])
     else:
         feas = np.array([all(r.slo_met for r in rr)
                          for rr in rows_by_cand])
@@ -310,6 +400,18 @@ def _coarsen(loads_np: np.ndarray, bin_hours: float, factor: int):
     coarse = loads_np[:, :t].reshape(loads_np.shape[0], -1, factor) \
         .sum(axis=2)
     return np.ascontiguousarray(coarse, np.float32), bin_hours * factor
+
+
+def _coarsen_caps(caps: np.ndarray, factor: int) -> np.ndarray:
+    """Mean-coarsen a capacity-multiplier series (loads SUM per coarse
+    bin, multipliers AVERAGE — an outage covering half a coarse bin is a
+    50% brownout at that scale). Gradient-guide approximation only; the
+    exact re-check replays the original bins."""
+    if factor <= 1:
+        return caps
+    t = caps.shape[1] // factor * factor
+    coarse = caps[:, :t].reshape(caps.shape[0], -1, factor).mean(axis=2)
+    return np.ascontiguousarray(coarse, np.float32)
 
 
 def _bounds_diagnosis(space: SearchSpace, params: np.ndarray) -> List[str]:
@@ -394,7 +496,8 @@ def search(space_or_base: Union[SearchSpace, Twin],
            met_margin: float = 0.002,
            coarsen: int = 1,
            polish_rounds: int = 3,
-           search_params: Optional[Sequence[str]] = None) -> SearchResult:
+           search_params: Optional[Sequence[str]] = None,
+           faults=None, quantile: float = 1.0) -> SearchResult:
     """Find the cheapest configuration of one policy that meets ``slo``.
 
     ``space_or_base`` is a ``SearchSpace`` (full control) or a base
@@ -410,6 +513,19 @@ def search(space_or_base: Union[SearchSpace, Twin],
     winner (each one exact aggregate dispatch, span quartering per
     round) then walk it onto that exact boundary — the last fraction of
     a percent no smooth penalty can locate.
+
+    ``faults=`` (a ``repro.faults.FaultSchedule`` or ``SampledFaults``)
+    makes the search **chance-constrained**: every (restart x scenario)
+    lane fans out over the schedule's F fault futures, the objective
+    becomes expected annual cost over futures plus a smooth-quantile
+    hinge (see ``_search_kernel``), and a candidate is feasible when the
+    bit-exact aggregate re-check meets the SLO in at least ``quantile``
+    of the futures on every scenario. ``quantile=1.0`` (the default) is
+    the worst-case search — the SLO must hold in EVERY sampled future;
+    ``quantile=0.95`` buys the 95%-of-futures configuration, strictly
+    cheaper whenever the worst futures are expensive to insure against.
+    The result's ``achieved_quantile`` reports the winner's exact
+    empirical quantile.
     """
     if isinstance(space_or_base, SearchSpace):
         space = space_or_base
@@ -422,10 +538,27 @@ def search(space_or_base: Union[SearchSpace, Twin],
     scen_w = _norm_weights(scenario_weights, s)
     horizon = annual_scale(loads_np.shape[1], bin_hours)
 
+    sampled = None
+    n_fut = 1
+    if faults is not None:
+        from repro.faults import (FaultSchedule, SampledFaults,
+                                  sample_futures)
+        if isinstance(faults, FaultSchedule):
+            sampled = sample_futures(faults, loads_np.shape[1], bin_hours)
+        elif isinstance(faults, SampledFaults):
+            sampled = faults
+        else:
+            raise TypeError(f"faults= must be a repro.faults.FaultSchedule "
+                            f"or SampledFaults, got {type(faults).__name__}")
+        n_fut = sampled.n_futures
+        if not 0.0 < quantile <= 1.0:
+            raise ValueError(f"quantile must be in (0, 1], got {quantile}")
+
     # the base configuration's exact cost anchors the penalty scale and
     # the "what did the search buy us" delta
     base_cost, base_feas, _, _ = evaluate_exact(
-        [space.base], loads_np, bin_hours, slo, scen_w, horizon)
+        [space.base], loads_np, bin_hours, slo, scen_w, horizon,
+        faults=sampled, quantile=quantile)
 
     if slo is None:
         slo_mode, slo_limit, met = AGG_SLO_LATENCY, _NO_SLO_LIMIT, 0.0
@@ -435,17 +568,32 @@ def search(space_or_base: Union[SearchSpace, Twin],
         slo_limit = float(slo.limit_s)
         met = min(float(slo.met_fraction) + met_margin, 1.0)
 
-    g_loads, g_bin = _coarsen(loads_np, bin_hours, int(coarsen))
+    if sampled is not None:
+        # fan the gradient loop's lanes out over the futures: loads get
+        # each scenario's F perturbed rows (reconnect floods baked in),
+        # caps ride along as the matching capacity series
+        grad_loads = np.stack([sampled.apply_loads(r) for r in loads_np]) \
+            .reshape(s * n_fut, -1).astype(np.float32)
+        grad_caps = np.tile(np.asarray(sampled.cap, np.float32), (s, 1))
+    else:
+        grad_loads, grad_caps = loads_np, None
+
+    g_loads, g_bin = _coarsen(grad_loads, bin_hours, int(coarsen))
+    g_caps = (None if grad_caps is None
+              else _coarsen_caps(grad_caps, int(coarsen)))
     g_horizon = annual_scale(g_loads.shape[1], g_bin)
     ocfg = dataclasses.replace(opt or DEFAULT_SEARCH_OPT, total_steps=steps)
     p_fin, history = _run_kernel(
         space, g_loads, g_bin, scen_w, space.z0(restarts, seed),
         np.full((restarts,), slo_limit), slo_mode, met, penalty_weight,
-        max(base_cost[0], 1.0), g_horizon, steps, ocfg)
+        max(base_cost[0], 1.0), g_horizon, steps, ocfg,
+        caps=g_caps, n_fut=n_fut, quantile=quantile)
     cand_twins = [space.twin(p_fin[i], f"{space.policy}-cand{i}")
                   for i in range(restarts)]
     cost, feas, pct, rows = evaluate_exact(cand_twins, loads_np, bin_hours,
-                                           slo, scen_w, horizon)
+                                           slo, scen_w, horizon,
+                                           faults=sampled,
+                                           quantile=quantile)
     cost = np.where(np.isfinite(cost), cost, np.inf)
     pct = np.nan_to_num(pct, nan=0.0)
 
@@ -468,7 +616,8 @@ def search(space_or_base: Union[SearchSpace, Twin],
             twins_c = [space.twin(p_c[i], f"{space.policy}-pol{i}")
                        for i in range(len(p_c))]
             c_c, f_c, _, r_c = evaluate_exact(
-                twins_c, loads_np, bin_hours, slo, scen_w, horizon)
+                twins_c, loads_np, bin_hours, slo, scen_w, horizon,
+                faults=sampled, quantile=quantile)
             c_c = np.where(f_c & np.isfinite(c_c), c_c, np.inf)
             i_c = int(c_c.argmin())
             if c_c[i_c] < best_cost:
@@ -489,6 +638,9 @@ def search(space_or_base: Union[SearchSpace, Twin],
         desc = (f"{slo.metric} <= {slo.limit_s:g} in "
                 f"{slo.met_fraction:.0%} of records" if slo is not None
                 else "unconstrained")
+        if sampled is not None:
+            desc += (f", in >= {quantile:.0%} of {n_fut} fault futures "
+                     f"per scenario")
         pins = _bounds_diagnosis(space, p_fin[best])
         warnings.warn(
             f"{space.policy} search found NO feasible configuration for "
@@ -503,6 +655,9 @@ def search(space_or_base: Union[SearchSpace, Twin],
                "configuration in the space"),
             SearchInfeasibleWarning, stacklevel=2)
 
+    aq = 1.0
+    if sampled is not None and slo is not None:
+        aq = achieved_quantile(rows[best], s, n_fut)
     return SearchResult(
         policy=space.policy, space=space,
         twin=dataclasses.replace(cand_twins[best],
@@ -512,7 +667,9 @@ def search(space_or_base: Union[SearchSpace, Twin],
         base_cost_usd=float(base_cost[0]), base_feasible=bool(base_feas[0]),
         best_restart=best, restart_params=p_fin,
         restart_costs=cost, restart_feasible=feas, restart_pct=pct,
-        history=np.asarray(history, np.float64), slo=slo)
+        history=np.asarray(history, np.float64), slo=slo,
+        quantile=float(quantile) if sampled is not None else 1.0,
+        achieved_quantile=float(aq), n_futures=n_fut)
 
 
 @dataclass

@@ -1,0 +1,402 @@
+"""Chaos suite: the fault & outage scenario library end to end.
+
+Acceptance contract of the fault subsystem (ISSUE 7):
+
+* an EMPTY fault schedule is bit-identical to the pre-fault grid engine
+  — aggregate mode, both backends (XLA and Pallas interpret), and under
+  a ``devices=4`` scenario mesh;
+* ``sample_futures`` is deterministic in (seed, spec names, horizon)
+  and in nothing else — pinned across PYTHONHASHSEED values by running
+  the sampler in subprocesses with different hash seeds;
+* disconnect windows conserve records exactly: the reconnect flood
+  replays precisely the mass the window removed, and the simulated
+  grid's ``arrived == processed + dropped + queue_end`` ledger holds
+  through outage + flood futures;
+* chance-constrained search (``search(faults=..., quantile=q)``) on a
+  closed-form toy schedule is feasible at ``achieved_quantile >= q``
+  and STRICTLY cheaper than the worst-case (``quantile=1.0``) solution;
+* fault-attribution columns (``fault_hours``, SLO-met split inside vs
+  outside fault windows) come off the in-carry counters, and
+  ``table2_rows`` only grows them on chaos grids;
+* bad sampled series (negative / NaN multipliers) raise ``ValueError``
+  naming the fault spec and bin index before any device work.
+"""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro import faults  # noqa: E402
+from repro.core.simulate import simulate_grid  # noqa: E402
+from repro.core.slo import SLO  # noqa: E402
+from repro.core.traffic import TrafficModel  # noqa: E402
+from repro.core.twin import SimpleTwin, make_twin  # noqa: E402
+from repro.core.whatif import run_grid, table2_rows  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+from repro.search import achieved_quantile, search, search_space  # noqa: E402
+
+needs4 = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=4 "
+           "before the first jax import")
+
+T_WEEK = 168
+SLO_4H = SLO(limit_s=4 * 3600, met_fraction=0.9)
+
+TWINS = [
+    SimpleTwin("fifo", 1.9512, 0.0082, 0.15),
+    make_twin("auto", "autoscale", max_rps=0.5, usd_per_hour=0.002,
+              base_latency_s=0.1, max_instances=32, scale_up_hours=3),
+    make_twin("shed", "shed", max_rps=1.0, usd_per_hour=0.0082,
+              base_latency_s=0.15, queue_cap_hours=2),
+]
+TRAFFICS = [TrafficModel.honda_default("nom"),
+            TrafficModel.honda_default("high", G=1.4)]
+
+
+def _grid_inputs(t_bins=T_WEEK):
+    matrix = np.stack([tr.hourly_loads()[:t_bins] for tr in TRAFFICS]) \
+        .astype(np.float32)
+    index = np.repeat(np.arange(len(TRAFFICS), dtype=np.int32), len(TWINS))
+    twins = [tw for _ in TRAFFICS for tw in TWINS]
+    return twins, matrix, index
+
+
+def _agg(twins, matrix, index, **kw):
+    return simulate_grid(twins, slo=SLO_4H, return_series=False,
+                         load_matrix=matrix, load_index=index,
+                         bin_hours=1.0, **kw)
+
+
+FIELDS = ("total_cost_usd", "queue_end", "pct_hours_met", "pct_latency_met",
+          "dropped_records", "processed_records", "arrived_records",
+          "median_latency_s", "p95_latency_s", "max_throughput_rph",
+          "backlog_s")
+
+
+def _assert_rows_equal(got, want, fields=FIELDS):
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        for f in fields:
+            assert getattr(g, f) == getattr(w, f), \
+                f"{f} mismatch on {g.name}: {getattr(g, f)!r} " \
+                f"!= {getattr(w, f)!r}"
+
+
+# ---------------------------------------------------------------------------
+# empty schedule == pre-fault engine, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_empty_schedule_bit_parity_xla():
+    twins, matrix, index = _grid_inputs()
+    plain = _agg(twins, matrix, index)
+    empty = faults.FaultSchedule(specs=(), n_futures=3, seed=0)
+    chaos = _agg(twins, matrix, index, faults=empty)
+    assert len(chaos) == 3 * len(plain)
+    for i, p in enumerate(plain):
+        for f in range(3):
+            row = chaos[i * 3 + f]
+            assert row.name == f"{p.name}/f{f}"
+            assert row.fault_hours == 0.0
+            assert row.pct_hours_met_in_fault == 100.0
+            _assert_rows_equal([row], [p])
+
+
+def test_empty_schedule_bit_parity_pallas():
+    twins, matrix, index = _grid_inputs()
+    empty = faults.FaultSchedule(specs=(), n_futures=2, seed=0)
+    plain = _agg(twins, matrix, index)
+    with ops.pallas_mode():
+        chaos = _agg(twins, matrix, index, faults=empty)
+    for i, p in enumerate(plain):
+        for f in range(2):
+            _assert_rows_equal([chaos[i * 2 + f]], [p])
+
+
+def test_chaos_grid_pallas_matches_xla_and_blocked():
+    twins, matrix, index = _grid_inputs()
+    sched = faults.FaultSchedule(
+        specs=(faults.outage(rate_per_year=200, duration_hours=(2, 6)),
+               faults.disconnect(rate_per_year=150),
+               faults.brownout(rate_per_year=150)),
+        n_futures=3, seed=7)
+    anchor = _agg(twins, matrix, index, faults=sched)
+    blocked = _agg(twins, matrix, index, faults=sched, scenario_block=4)
+    _assert_rows_equal(blocked, anchor)
+    with ops.pallas_mode():
+        pallas = _agg(twins, matrix, index, faults=sched, scenario_block=4)
+    _assert_rows_equal(pallas, anchor)
+
+
+@needs4
+def test_empty_schedule_bit_parity_devices4():
+    twins, matrix, index = _grid_inputs()
+    plain = _agg(twins, matrix, index, scenario_block=4, devices=4)
+    empty = faults.FaultSchedule(specs=(), n_futures=2, seed=0)
+    chaos = _agg(twins, matrix, index, faults=empty, scenario_block=4,
+                 devices=4)
+    for i, p in enumerate(plain):
+        for f in range(2):
+            _assert_rows_equal([chaos[i * 2 + f]], [p])
+
+
+@needs4
+def test_chaos_grid_devices4_matches_single():
+    twins, matrix, index = _grid_inputs()
+    sched = faults.FaultSchedule(
+        specs=(faults.outage(rate_per_year=200, duration_hours=(2, 6)),
+               faults.disconnect(rate_per_year=150)),
+        n_futures=3, seed=11)
+    single = _agg(twins, matrix, index, faults=sched)
+    sharded = _agg(twins, matrix, index, faults=sched, scenario_block=4,
+                   devices=4)
+    _assert_rows_equal(sharded, single)
+
+
+def test_series_mode_cross_checks_aggregate():
+    twins, matrix, index = _grid_inputs()
+    sched = faults.FaultSchedule(
+        specs=(faults.outage(rate_per_year=120, duration_hours=(3, 8)),),
+        n_futures=2, seed=3)
+    agg = _agg(twins, matrix, index, faults=sched)
+    series = simulate_grid(twins, slo=SLO_4H, return_series=True,
+                           load_matrix=matrix, load_index=index,
+                           bin_hours=1.0, faults=sched)
+    assert len(series) == len(agg)
+    for s, a in zip(series, agg):
+        assert s.name == a.name
+        assert s.total_cost_usd == pytest.approx(a.total_cost_usd,
+                                                 rel=1e-5)
+        assert float(s.queue[-1]) == pytest.approx(a.queue_end, rel=1e-4,
+                                                   abs=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# seeded sampler: deterministic, PYTHONHASHSEED-independent
+# ---------------------------------------------------------------------------
+
+_SAMPLER_SNIPPET = """
+import sys, zlib
+import numpy as np
+sys.path.insert(0, {src!r})
+from repro import faults
+s = faults.sample_futures(faults.FaultSchedule(
+    specs=(faults.outage(rate_per_year=30),
+           faults.disconnect(rate_per_year=40),
+           faults.brownout(rate_per_year=30),
+           faults.burst(rate_per_year=30)),
+    n_futures=4, seed=123), 720, 1.0)
+digest = zlib.crc32(s.cap.tobytes()
+                    + s.mask.tobytes()
+                    + s.load_mult.tobytes()
+                    + repr(s.events).encode())
+print(digest)
+"""
+
+
+def test_sampler_deterministic_across_hashseed():
+    import os
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    outs = []
+    for hashseed in ("0", "4242"):
+        env = dict(os.environ, PYTHONHASHSEED=hashseed)
+        r = subprocess.run(
+            [sys.executable, "-c", _SAMPLER_SNIPPET.format(src=src)],
+            capture_output=True, text=True, env=env)
+        assert r.returncode == 0, r.stderr
+        outs.append(r.stdout.strip())
+    assert outs[0] == outs[1]
+
+
+def test_sampler_in_process_repeatable_and_seed_sensitive():
+    sched = faults.FaultSchedule(
+        specs=(faults.outage(rate_per_year=30),), n_futures=4, seed=5)
+    a = faults.sample_futures(sched, 720, 1.0)
+    b = faults.sample_futures(sched, 720, 1.0)
+    np.testing.assert_array_equal(a.cap, b.cap)
+    np.testing.assert_array_equal(a.load_mult, b.load_mult)
+    assert a.events == b.events
+    c = faults.sample_futures(
+        faults.FaultSchedule(specs=sched.specs, n_futures=4, seed=6),
+        720, 1.0)
+    assert not (np.array_equal(a.cap, c.cap) and a.events == c.events)
+
+
+def test_sampler_per_spec_streams_independent():
+    """Adding a second spec must not move the first spec's events."""
+    one = faults.sample_futures(faults.FaultSchedule(
+        specs=(faults.outage(rate_per_year=30),), n_futures=3, seed=9),
+        720, 1.0)
+    two = faults.sample_futures(faults.FaultSchedule(
+        specs=(faults.burst(rate_per_year=50),
+               faults.outage(rate_per_year=30)), n_futures=3, seed=9),
+        720, 1.0)
+    for f in range(3):
+        a = [e for e in one.events[f] if e["spec"] == "outage"]
+        b = [e for e in two.events[f] if e["spec"] == "outage"]
+        assert a == b
+
+
+# ---------------------------------------------------------------------------
+# reconnect floods conserve records
+# ---------------------------------------------------------------------------
+
+def test_disconnect_replay_conserves_mass():
+    sched = faults.FaultSchedule(
+        specs=(faults.disconnect(rate_per_year=400, flood_hours=2.0),),
+        n_futures=6, seed=1)
+    s = faults.sample_futures(sched, T_WEEK, 1.0)
+    assert s.has_load_faults.any(), "toy schedule sampled no disconnects"
+    row = TRAFFICS[0].hourly_loads()[:T_WEEK]
+    pert = s.apply_loads(row)
+    for f in range(s.n_futures):
+        assert pert[f].sum() == pytest.approx(row.sum(), rel=1e-12)
+        if s.replay[f]:   # flood future: mass moved, not lost
+            assert np.any(pert[f] != row)
+
+
+def test_chaos_grid_record_ledger_balances():
+    twins, matrix, index = _grid_inputs()
+    sched = faults.FaultSchedule(
+        specs=(faults.outage(rate_per_year=150, duration_hours=(2, 8)),
+               faults.disconnect(rate_per_year=200)),
+        n_futures=4, seed=2)
+    for row in _agg(twins, matrix, index, faults=sched):
+        ledger = (row.processed_records + row.dropped_records
+                  + row.queue_end)
+        assert ledger == pytest.approx(row.arrived_records, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# chance-constrained search: closed-form toy, chance beats worst case
+# ---------------------------------------------------------------------------
+
+def _toy_faults(t_bins=336):
+    """5 handcrafted futures over a flat load: benign, 3x short outage,
+    1x long outage. With a latency SLO allowing 15% violating hours,
+    the short-outage futures recover cheaply but the long-outage future
+    needs ~4x the capacity — so quantile=0.8 (4 of 5 futures) is
+    strictly cheaper than the worst-case quantile=1.0 solution."""
+    F = 5
+    cap = np.ones((F, t_bins), np.float32)
+    mask = np.zeros((F, t_bins), np.float32)
+    for f, (start, dur) in enumerate([(60, 10), (140, 10), (230, 10)],
+                                     start=1):
+        cap[f, start:start + dur] = 0.0
+        mask[f, start:start + dur] = 1.0
+    cap[4, 100:140] = 0.0
+    mask[4, 100:140] = 1.0
+    windows = [(), ((60, 70),), ((140, 150),), ((230, 240),),
+               ((100, 140),)]
+    events = tuple(
+        tuple({"spec": "toy-outage", "kind": "outage", "start": a,
+               "end": b} for a, b in wins)
+        for wins in windows)
+    return faults.SampledFaults(
+        cap=cap, mask=mask, load_mult=np.ones((F, t_bins), np.float64),
+        replay=((),) * F, events=events, n_futures=F, t_bins=t_bins,
+        bin_hours=1.0, seed=0)
+
+
+def test_chance_constrained_beats_worst_case():
+    t_bins = 336
+    loads = np.full((1, t_bins), 300.0, np.float32)
+    slo = SLO(limit_s=5.0, met_fraction=0.85)
+    base = make_twin("base", "fifo", max_rps=1.0, usd_per_hour=4.0,
+                     base_latency_s=0.05)
+    space = search_space(base, ("max_rps",),
+                         bounds={"max_rps": (0.05, 1.5)},
+                         tie={"usd_per_hour": ("max_rps", 4.0)})
+    toy = _toy_faults(t_bins)
+    worst = search(space, loads=loads, bin_hours=1.0, slo=slo,
+                   faults=toy, quantile=1.0, restarts=6, steps=80, seed=0)
+    chance = search(space, loads=loads, bin_hours=1.0, slo=slo,
+                    faults=toy, quantile=0.8, restarts=6, steps=80, seed=0)
+    assert worst.feasible and chance.feasible
+    assert worst.achieved_quantile == pytest.approx(1.0)
+    assert chance.achieved_quantile >= 0.8 - 1e-9
+    assert chance.cost_usd < worst.cost_usd, \
+        (chance.cost_usd, worst.cost_usd)
+    assert chance.quantile == 0.8 and chance.n_futures == 5
+    # the 80% config really does sacrifice the long-outage future: its
+    # exact quantile sits below 1 (else worst-case would cost the same)
+    assert chance.achieved_quantile < 1.0
+
+
+def test_achieved_quantile_shape():
+    rows = [type("R", (), {"slo_met": m})()
+            for m in (True, True, False, True,   # scen 0: 3/4
+                      True, True, True, True)]   # scen 1: 4/4
+    assert achieved_quantile(rows, 2, 4) == pytest.approx(0.75)
+
+
+# ---------------------------------------------------------------------------
+# fault attribution columns
+# ---------------------------------------------------------------------------
+
+def test_fault_attribution_counters_and_table2():
+    sched = faults.FaultSchedule(
+        specs=(faults.outage(rate_per_year=300, duration_hours=(4, 12)),),
+        n_futures=3, seed=4)
+    sims = run_grid(TWINS[:1], TRAFFICS[:1], slo=SLO_4H, faults=sched)
+    s = faults.sample_futures(
+        sched, TRAFFICS[0].hourly_loads().shape[0], 1.0)
+    assert any(r.fault_hours > 0 for r in sims)
+    for f, row in enumerate(sims):
+        assert row.fault_hours == pytest.approx(float(s.mask[f].sum()))
+    rows = table2_rows(sims)
+    for r in rows:
+        assert {"fault_hours", "pct_hours_met_in_fault",
+                "pct_hours_met_outside_fault"} <= set(r)
+    # benign tables keep the seed's exact column set
+    benign = table2_rows(run_grid(TWINS[:1], TRAFFICS[:1], slo=SLO_4H))
+    assert "fault_hours" not in benign[0]
+
+
+# ---------------------------------------------------------------------------
+# input validation: bad series raise with spec name + bin index
+# ---------------------------------------------------------------------------
+
+def _hand_sampled(cap=None, load_mult=None, t_bins=24):
+    F = 1
+    c = np.ones((F, t_bins), np.float32) if cap is None else cap
+    lm = (np.ones((F, t_bins), np.float64) if load_mult is None
+          else load_mult)
+    events = (({"spec": "bad-spec", "kind": "outage", "start": 0,
+                "end": t_bins},),)
+    return faults.SampledFaults(
+        cap=c, mask=np.zeros((F, t_bins), np.float32), load_mult=lm,
+        replay=((),), events=events, n_futures=F, t_bins=t_bins,
+        bin_hours=1.0, seed=0)
+
+
+def test_negative_capacity_raises_named():
+    cap = np.ones((1, 24), np.float32)
+    cap[0, 7] = -0.25
+    with pytest.raises(ValueError, match=r"bin 7.*bad-spec"):
+        simulate_grid([TWINS[0]], slo=SLO_4H, return_series=False,
+                      load_matrix=np.full((1, 24), 100.0, np.float32),
+                      load_index=np.zeros(1, np.int32), bin_hours=1.0,
+                      faults=_hand_sampled(cap=cap))
+
+
+def test_nan_load_multiplier_raises_named():
+    lm = np.ones((1, 24), np.float64)
+    lm[0, 3] = np.nan
+    with pytest.raises(ValueError, match=r"non-finite at bin 3.*bad-spec"):
+        faults.validate_sampled(_hand_sampled(load_mult=lm))
+
+
+def test_tbins_mismatch_and_bad_type_raise():
+    twins, matrix, index = _grid_inputs()
+    with pytest.raises(ValueError, match="covers 12 bins"):
+        _agg(twins, matrix, index, faults=_hand_sampled(t_bins=12))
+    with pytest.raises(TypeError, match="FaultSchedule"):
+        _agg(twins, matrix, index, faults={"not": "a schedule"})
+    with pytest.raises(TypeError):
+        search(TWINS[0], loads=matrix[:1], bin_hours=1.0, slo=SLO_4H,
+               faults=object())
