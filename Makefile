@@ -12,6 +12,10 @@
 #   make grid-bench-shard  sharded block engine at 65536/262144/1048576
 #                          full-year scenarios over a 1/2/4-device
 #                          scenario mesh (writes BENCH_grid_shard.json)
+#   make grid-bench-device device-resident histogram engine at 1024/65536
+#                          full-year scenarios, single-device + 1/2/4
+#                          mesh, vs the PR 6 host-binned baseline
+#                          (writes BENCH_grid_device.json)
 #   make calibrate-bench   multi-start twin-fit wall-clock vs K
 #                          (writes BENCH_calibrate.json)
 #   make search-bench      one-dispatch K-restart policy search vs serial
@@ -25,8 +29,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-deps bench bench-grid grid-bench-pallas \
-        grid-bench-stream grid-bench-shard calibrate-bench search-bench \
-        faults-bench
+        grid-bench-stream grid-bench-shard grid-bench-device \
+        calibrate-bench search-bench faults-bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -48,6 +52,9 @@ grid-bench-stream:
 
 grid-bench-shard:
 	$(PYTHON) -m benchmarks.run grid-shard
+
+grid-bench-device:
+	$(PYTHON) -m benchmarks.run grid-device
 
 calibrate-bench:
 	$(PYTHON) -m benchmarks.run calibrate

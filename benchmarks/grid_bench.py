@@ -33,15 +33,28 @@ devices share the core, so the mesh rows document the sharded
 single-device row is the wall-clock number, measured against the prior
 serial ``lax.map`` engine recorded in ``BENCH_grid_stream.json``.
 
+``bench_device_hist`` times the fully device-resident aggregate engine
+(the in-graph f64 ``segment_sum`` latency histogram replacing the host
+``np.bincount`` drain, no [B, T] latency panel staged or copied off
+device, bitwise-duplicate scenario rows deduped at dispatch) — at N in
+{1024, 65536, 1048576} full-year scenarios, single-device and over a
+1/2/4-device scenario mesh, plus a jittered all-distinct control row
+where dedup cannot fire — and writes ``BENCH_grid_device.json``, with
+the speedup measured against the PR 6 host-binned devices=1 rows
+recorded in ``BENCH_grid_shard.json``.
+
   PYTHONPATH=src python benchmarks/grid_bench.py           # looped/vmapped
   PYTHONPATH=src python benchmarks/grid_bench.py pallas    # backend sweep
   PYTHONPATH=src python benchmarks/grid_bench.py stream    # series vs agg
   PYTHONPATH=src python benchmarks/grid_bench.py shard     # sharded engine
+  PYTHONPATH=src python benchmarks/grid_bench.py device    # device-res hist
   PYTHONPATH=src python -m benchmarks.run grid             # looped/vmapped
   PYTHONPATH=src python -m benchmarks.run grid-pallas      # backend sweep
   PYTHONPATH=src python -m benchmarks.run grid-stream      # series vs agg
   PYTHONPATH=src python -m benchmarks.run grid-shard       # sharded engine
-  make grid-bench-pallas / make grid-bench-stream / make grid-bench-shard
+  PYTHONPATH=src python -m benchmarks.run grid-device      # device-res hist
+  make grid-bench-pallas / grid-bench-stream / grid-bench-shard /
+       grid-bench-device
 """
 from __future__ import annotations
 
@@ -52,10 +65,10 @@ import sys
 import time
 from typing import Dict, List
 
-# the shard sweep needs multiple host devices, and XLA only reads this
-# before its first backend init — so it must be set before jax imports
-# anywhere in the process (harmless for every other sweep)
-if {"shard", "grid-shard"} & set(sys.argv[1:]):
+# the shard/device sweeps need multiple host devices, and XLA only reads
+# this before its first backend init — so it must be set before jax
+# imports anywhere in the process (harmless for every other sweep)
+if {"shard", "grid-shard", "device", "grid-device"} & set(sys.argv[1:]):
     os.environ.setdefault("XLA_FLAGS",
                           "--xla_force_host_platform_device_count=4")
 
@@ -77,6 +90,7 @@ PALLAS_SIZES = (64, 256, 1024)
 STREAM_SIZES = (1024, 8192, 65536)
 SHARD_SIZES = (65536, 262144, 1048576)
 SHARD_MESHES = (1, 2, 4)
+DEVICE_SIZES = (1024, 65536, 1048576)
 SERIES_MAX_N = 1024        # five [N, 8736] f32+f64 series stay <1 GB here
 STREAM_BLOCK = 4096        # aggregate-mode lax.map scenario block
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
@@ -85,6 +99,8 @@ STREAM_JSON = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_grid_stream.json"
 SHARD_JSON = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_grid_shard.json"
+DEVICE_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_grid_device.json"
 
 
 def _grid(n_twins: int = N_TWINS, n_traffics: int = N_TRAFFICS):
@@ -364,6 +380,111 @@ def bench_shard(sizes=SHARD_SIZES, meshes=SHARD_MESHES) -> Dict:
     return out
 
 
+def bench_device_hist(sizes=DEVICE_SIZES, meshes=SHARD_MESHES) -> Dict:
+    """Fully device-resident aggregate engine: N x mesh sweep vs PR 6.
+
+    Same dispatch shape as ``bench_shard`` (policy-uniform blocks,
+    donated accumulators, ``shard_map`` rounds for devices>1), but the
+    engine under it no longer stages a [B, T] latency panel or drains it
+    to the host for ``np.bincount`` binning — the load-weighted
+    quarter-octave histogram accumulates in-graph as an exact f64
+    ``segment_sum`` per time chunk, and blocks are sized by the
+    panel-free footprint. The dispatch also dedups bitwise-identical
+    scenario rows before simulating — this sweep's grid tiles 8 twins
+    over 8 traffic ramps, so every N collapses to the same 128 distinct
+    scenarios; ``unique_scenarios`` records that per row, and the
+    ``distinct`` row jitters every param vector so dedup CANNOT fire
+    and the raw no-dedup engine time is on record next to the tiled
+    ones. The speedup rows compare end to end against the host-binned
+    devices=1 times recorded in ``BENCH_grid_shard.json`` (same
+    container, same tiled scenario mix — the PR 6 engine had no dedup
+    and simulated every row). Bit-parity across mesh sizes is asserted
+    at the smallest N before any timing is recorded.
+    """
+    from repro.core.simulate import (_dedup_rows, _grid_agg_dispatch,
+                                     agg_auto_block)
+    avail = jax.device_count()
+    usable = [d for d in meshes if d <= avail]
+    skipped = [d for d in meshes if d > avail]
+    slo_limit = 4.0 * 3600.0
+    block = agg_auto_block(8736)
+
+    def dispatch(matrix, index, params, idx, d):
+        return _grid_agg_dispatch(matrix, index, params, idx, 1.0,
+                                  slo_limit, 0, None,
+                                  devices=None if d == 1 else d)
+
+    # warm every mesh's jit cache on a 2x-block grid (same [block] shapes
+    # the big sweeps compile to), so the timed runs measure execution
+    warm = _shard_grid(2 * block)
+    for d in usable:
+        dispatch(*warm, d)
+
+    baseline = {}
+    if SHARD_JSON.exists():   # PR 6 host-binned engine, same scenario mix
+        for r in json.loads(SHARD_JSON.read_text())["sizes"]:
+            if r.get("mesh", {}).get("1"):
+                baseline[r["scenarios"]] = r["mesh"]["1"]
+
+    rows = []
+    for n in sizes:
+        matrix, index, params, idx = _shard_grid(n)
+        dd = _dedup_rows(index, params, idx)
+        row = {"scenarios": n, "hours": int(matrix.shape[1]),
+               "scenario_block": block,
+               "unique_scenarios": n if dd is None else int(len(dd[0])),
+               "mesh": {}}
+        del dd
+        base = None
+        for d in usable:
+            t0 = time.perf_counter()
+            carry, agg = dispatch(matrix, index, params, idx, d)
+            ms = (time.perf_counter() - t0) * 1e3
+            row["mesh"][str(d)] = round(ms, 1)
+            if n == sizes[0]:
+                if base is None:
+                    base = (carry, agg)
+                else:
+                    np.testing.assert_array_equal(carry, base[0])
+                    np.testing.assert_array_equal(agg, base[1])
+        del carry, agg, base
+        if n in baseline:
+            row["host_binned_d1_ms"] = baseline[n]
+            row["speedup_vs_host_binned"] = round(
+                baseline[n] / row["mesh"]["1"], 2)
+        rows.append(row)
+
+    # the no-dedup control: jitter every param vector so each of the
+    # 1024 rows is bitwise distinct and the engine simulates all of them
+    n = 1024
+    matrix, index, params, idx = _shard_grid(n)
+    params = (params
+              * (1.0 + np.arange(n, dtype=np.float32)[:, None] * 1e-5))
+    assert _dedup_rows(index, params, idx) is None
+    dispatch(matrix, index, params, idx, 1)      # warm this shape
+    t0 = time.perf_counter()
+    dispatch(matrix, index, params, idx, 1)
+    rows.append({"scenarios": n, "hours": int(matrix.shape[1]),
+                 "scenario_block": block, "distinct": True,
+                 "unique_scenarios": n,
+                 "mesh": {"1": round((time.perf_counter() - t0) * 1e3, 1)}})
+
+    out = {"device": jax.devices()[0].platform, "device_count": avail,
+           "meshes": usable, "meshes_skipped_no_devices": skipped,
+           "scenario_block": block,
+           "parity": "mesh results bit-identical at the smallest N",
+           "note": "device-resident f64 segment_sum histogram, no [B,T] "
+                   "panel, no host binning; the dispatch dedups bitwise-"
+                   "duplicate scenario rows, and this tiled sweep "
+                   "collapses to unique_scenarios distinct years per row "
+                   "(the distinct row disables that by construction); "
+                   "speedup vs the PR 6 host-binned no-dedup devices=1 "
+                   "rows in BENCH_grid_shard.json",
+           "sizes": rows}
+    DEVICE_JSON.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    return out
+
+
 def main() -> List[str]:
     r = bench()
     return [f"grid/looped_{r['scenarios']}x,{r['looped_ms'] * 1e3:.0f},"
@@ -418,8 +539,29 @@ def main_shard() -> List[str]:
     return lines
 
 
+def main_device() -> List[str]:
+    r = bench_device_hist()
+    lines = []
+    for row in r["sizes"]:
+        n = row["scenarios"]
+        tag = "_distinct" if row.get("distinct") else ""
+        for d, ms in sorted(row["mesh"].items(), key=lambda kv: int(kv[0])):
+            lines.append(f"grid/device_{n}x{tag}_d{d},{ms * 1e3:.0f},"
+                         f"block={row['scenario_block']};"
+                         f"unique={row['unique_scenarios']}")
+        if row.get("host_binned_d1_ms"):
+            lines.append(f"grid/device_baseline_{n}x,"
+                         f"{row['host_binned_d1_ms'] * 1e3:.0f},"
+                         f"host-binned;speedup="
+                         f"{row['speedup_vs_host_binned']}x")
+    lines.append(f"grid/device_json,0,wrote={DEVICE_JSON.name}")
+    return lines
+
+
 if __name__ == "__main__":
-    if "shard" in sys.argv[1:]:
+    if "device" in sys.argv[1:]:
+        print(json.dumps(bench_device_hist(), indent=2, sort_keys=True))
+    elif "shard" in sys.argv[1:]:
         print(json.dumps(bench_shard(), indent=2, sort_keys=True))
     elif "pallas" in sys.argv[1:]:
         print(json.dumps(bench_pallas(), indent=2, sort_keys=True))

@@ -18,8 +18,15 @@ engine at 65536/262144/1048576 full-year scenarios over a 1/2/4-device
 scenario mesh (writes BENCH_grid_shard.json; run with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` or pass
 ``grid-shard`` on the command line, which sets it before jax loads) —
-and the policy-search benchmark ``search`` — one-dispatch K-restart
-search vs a serial loop, and search vs the exhaustive 4096-point grid
+the device-resident histogram sweep ``grid-device`` — the fully
+in-graph aggregate engine (f64 ``segment_sum`` histogram, no host
+binning, duplicate scenario rows deduped at dispatch) at
+1024/65536/1048576 full-year scenarios, single-device + 1/2/4 mesh,
+plus an all-distinct control row, vs the PR 6 host-binned baseline
+(writes BENCH_grid_device.json; same XLA_FLAGS note as
+``grid-shard``) — and the policy-search
+benchmark ``search`` — one-dispatch K-restart search vs a serial loop,
+and search vs the exhaustive 4096-point grid
 (writes BENCH_search.json).
 """
 from __future__ import annotations
@@ -66,6 +73,8 @@ TABLES = {
                                       fromlist=["main_stream"]).main_stream(),
     "grid-shard": lambda: __import__("benchmarks.grid_bench",
                                      fromlist=["main_shard"]).main_shard(),
+    "grid-device": lambda: __import__("benchmarks.grid_bench",
+                                      fromlist=["main_device"]).main_device(),
     "calibrate": lambda: __import__("benchmarks.calibrate_bench",
                                     fromlist=["main"]).main(),
     "faults": lambda: __import__("benchmarks.faults_bench",

@@ -63,6 +63,7 @@ data builds up day by day and ages out after the retention window.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
@@ -74,14 +75,17 @@ import numpy as np
 from repro.core.cost import CostModel
 from repro.core.slo import SLO
 from repro.core.traffic import DAYS_PER_YEAR, HOURS_PER_YEAR, MONTH_DAYS
+from jax.experimental import enable_x64
+
 from repro.core.twin import (A_COST, A_DROP, A_FLTH, A_FOKH, A_LATW, A_LOAD,
-                             A_MAXP, A_OKH, A_OKW, A_PROC, AGG_HIST_BINS,
-                             AGG_SCALARS, AGG_SLO_DROP_RATE,
-                             AGG_SLO_LATENCY, CARRY_DIM, Twin,
-                             aggregate_hist_centers, init_agg_scalars,
-                             np_latency_histogram, pack_agg_scalars,
-                             policy_branches, registry_version,
-                             update_agg_scalars)
+                             A_MAXP, A_OKH, A_OKW, A_PROC, AGG_DIM,
+                             AGG_HIST_BINS, AGG_KDIM, AGG_SCALARS,
+                             AGG_SLO_DROP_RATE, AGG_SLO_LATENCY, CARRY_DIM,
+                             Twin, aggregate_hist_centers,
+                             device_latency_histogram,
+                             finalize_aggregate_x64, init_agg_scalars,
+                             pack_agg_scalars, policy_branches,
+                             registry_version, update_agg_scalars)
 
 
 @dataclass
@@ -241,45 +245,96 @@ def _grid_scan(loads: jnp.ndarray, params: jnp.ndarray,
     return _grid_scan_xla(loads, params, policy_idx, version, dt_hours)
 
 
+def _agg_time_chunk(t_bins: int, cap: int = 1024) -> int:
+    """Time-chunk width the device-resident histogram accumulates over:
+    the largest divisor of ``t_bins`` at most ``cap`` (the 8736-hour
+    year -> 728, 12 chunks). The chunking can never change results —
+    the scan carry threads through every chunk unchanged and the f64
+    per-chunk histogram adds are exact, hence order-independent — so the
+    cap is purely a working-set bound on the [B, chunk] latency/load
+    transients each chunk step stages."""
+    t_bins = max(int(t_bins), 1)
+    return next(d for d in range(min(cap, t_bins), 0, -1)
+                if t_bins % d == 0)
+
+
+def _branches_f32():
+    """``policy_branches()`` with every step output pinned to f32.
+
+    The aggregate XLA jits trace under ``enable_x64()`` (the histogram's
+    exactness contract), where a registered policy step that builds
+    dtype-less literals (e.g. ``jnp.zeros(())``) silently emits f64 —
+    breaking ``lax.switch`` branch-type agreement and flipping scan-carry
+    dtypes mid-trace. Registry steps are f32-in/f32-out by contract;
+    this enforces the contract at the trace boundary instead of trusting
+    every (possibly user-registered) step. The cast is a no-op for
+    conforming branches and exact for dtype-less zeros, so numbers never
+    change."""
+    def pin(step):
+        def wrapped(carry, arrive, p, dt):
+            carry, outs = step(carry, arrive, p, dt)
+            f32 = lambda x: jnp.asarray(x, jnp.float32)  # noqa: E731
+            return f32(carry), tuple(f32(o) for o in outs)
+        return wrapped
+    return [pin(s) for s in policy_branches()]
+
+
 def _agg_scan_vmap(loads: jnp.ndarray, params: jnp.ndarray,
                    policy_idx: jnp.ndarray, dt_hours: float,
                    slo_limit: float, slo_mode: int):
-    """Unjitted core of the XLA streaming-aggregate backend: vmap over
-    per-scenario ``lax.switch`` scans whose carry is (policy carry,
-    scalar aggregate state). The policy-step op sequence is IDENTICAL to
-    ``scan_trace``, so per-scenario carries (and thus the end-of-scan
-    queue) match the series path bit for bit.
+    """Unjitted core of the XLA streaming-aggregate backend: an outer
+    ``lax.scan`` over time chunks of vmapped per-scenario ``lax.switch``
+    scans whose carry is (policy carry, scalar aggregate state). The
+    policy-step op sequence is IDENTICAL to ``scan_trace`` (chaining the
+    chunk scans replays the same per-bin sequence), so per-scenario
+    carries (and thus the end-of-scan queue) match the series path bit
+    for bit.
 
     The latency histogram is the one statistic not folded into the
-    carry on THIS backend: a per-step [BINS]-wide carry burns ~0.5 s per
-    1k scenarios in scan double-buffering on CPU, so the scan instead
-    stages the block's latencies as its only output panel and
-    ``np.bincount`` bins them load-weighted on the host
-    (``core.twin.np_latency_histogram``) — directly in ``_grid_scan_agg``
-    for a single-dispatch grid, behind ``jax.pure_callback`` inside the
-    ``lax.map`` block loop for chunked grids. The panel is a transient
-    bounded by the scenario block; the aggregate pytree the backends
-    hand back stays O(N), as the aggregate-mode contract requires.
-    Returns (carry_end [N, CARRY_DIM], scalars [N, AGG_SCALARS],
-    latency panel [N, T])."""
-    branches = policy_branches()
+    per-step carry on THIS backend: a per-step [BINS]-wide carry burns
+    ~0.5 s per 1k scenarios in scan double-buffering on CPU. Instead
+    each chunk step emits its [N, chunk] latencies and folds them
+    through ``core.twin.device_latency_histogram`` — an exact f64
+    ``segment_sum`` accumulated OUTSIDE the scan carry, entirely on
+    device, bit-identical to host ``np.bincount``. No [N, T] panel is
+    ever staged and nothing round-trips to the host. MUST be traced
+    under ``jax.experimental.enable_x64()`` (``_grid_scan_agg`` wraps
+    its call sites). Returns (carry_end [N, CARRY_DIM],
+    agg [N, AGG_DIM] f32)."""
+    branches = _branches_f32()
     dt = jnp.asarray(dt_hours, jnp.float32)
+    n, t_bins = loads.shape
+    chunk = _agg_time_chunk(t_bins)
+    nc = t_bins // chunk
 
-    def one(load, p, idx):
+    def one(carry_i, agg_i, load_i, p, idx):
         def bin_step(state, arrive):
             carry, agg = state
             carry, outs = jax.lax.switch(idx, branches, carry, arrive, p,
                                          dt)
             agg = update_agg_scalars(agg, arrive, outs, slo_limit,
                                      slo_mode)
-            return (carry, agg), outs[2]          # stage latency only
+            return (carry, agg), outs[2]          # chunk-local latency
 
-        (carry, agg), latency = jax.lax.scan(
-            bin_step, (jnp.zeros((CARRY_DIM,), jnp.float32),
-                       init_agg_scalars()), load)
-        return carry, pack_agg_scalars(agg), latency
+        (carry, agg), latency = jax.lax.scan(bin_step, (carry_i, agg_i),
+                                             load_i)
+        return carry, agg, latency
 
-    return jax.vmap(one)(loads, params, policy_idx)
+    def chunk_step(state, loads_c):
+        carry, agg, hist = state
+        carry, agg, lat = jax.vmap(one)(carry, agg, loads_c, params,
+                                        policy_idx)
+        hist = hist + device_latency_histogram(lat, loads_c)
+        return (carry, agg, hist), None
+
+    state0 = (jnp.zeros((n, CARRY_DIM), jnp.float32),
+              init_agg_scalars((n,)),
+              jnp.zeros((n, AGG_HIST_BINS), jnp.float64))
+    (carry, agg, hist), _ = jax.lax.scan(
+        chunk_step, state0,
+        loads.reshape(n, nc, chunk).transpose(1, 0, 2))
+    return carry, jnp.concatenate(
+        [pack_agg_scalars(agg), hist.astype(jnp.float32)], axis=-1)
 
 
 @functools.partial(jax.jit, static_argnums=(3, 4, 5, 6))
@@ -288,8 +343,9 @@ def _grid_scan_agg_xla(loads: jnp.ndarray, params: jnp.ndarray,
                        dt_hours: float, slo_limit: float, slo_mode: int):
     """The XLA aggregate backend (jitted). ``slo_limit`` / ``slo_mode``
     are static like ``dt_hours`` — a grid sweep reuses one SLO, so the
-    retrace per distinct objective is paid once. Returns (carry_end
-    [N, CARRY_DIM], scalars [N, AGG_SCALARS], latency panel [N, T])."""
+    retrace per distinct objective is paid once. Call under
+    ``enable_x64()`` (see ``_agg_scan_vmap``). Returns (carry_end
+    [N, CARRY_DIM], agg [N, AGG_DIM])."""
     return _agg_scan_vmap(loads, params, policy_idx, dt_hours, slo_limit,
                           slo_mode)
 
@@ -352,45 +408,65 @@ def _grid_scan_agg_fault_xla(loads: jnp.ndarray, caps: jnp.ndarray,
     steps through the fault layer (``caps``/``fmask`` [N, T] per-bin
     series), the in-carry counters gain the A_FLTH/A_FOKH attribution
     slots, and the fault backlog residue folds into ``carry_end[:, 0]``.
-    Same staged-latency-panel histogram contract as the benign path."""
-    branches = policy_branches()
+    Same chunked device-resident histogram contract as the benign path
+    (call under ``enable_x64()``); returns (carry_end [N, CARRY_DIM],
+    agg [N, AGG_DIM])."""
+    branches = _branches_f32()
     dt = jnp.asarray(dt_hours, jnp.float32)
     fstep = _fault_scalar_step(branches, dt)
+    n, t_bins = loads.shape
+    chunk = _agg_time_chunk(t_bins)
+    nc = t_bins // chunk
+    cs = lambda a: a.reshape(n, nc, chunk).transpose(1, 0, 2)  # noqa: E731
 
-    def one(load, cap, fm, p, idx):
+    def one(carry_i, fq_i, agg_i, load_i, cap_i, fm_i, p, idx):
         def bin_step(state, xs):
             arrive, capmul, fmk = xs
             (carry, fq), agg = state
             (carry, fq), outs = fstep((carry, fq), arrive, capmul, p, idx)
             agg = update_agg_scalars(agg, arrive, outs, slo_limit,
                                      slo_mode, fmk)
-            return ((carry, fq), agg), outs[2]    # stage latency only
+            return ((carry, fq), agg), outs[2]    # chunk-local latency
 
         ((carry, fq), agg), latency = jax.lax.scan(
-            bin_step, ((jnp.zeros((CARRY_DIM,), jnp.float32),
-                        jnp.float32(0.0)), init_agg_scalars()),
-            (load, cap, fm))
-        carry = carry.at[0].add(fq)
-        return carry, pack_agg_scalars(agg), latency
+            bin_step, ((carry_i, fq_i), agg_i), (load_i, cap_i, fm_i))
+        return carry, fq, agg, latency
 
-    return jax.vmap(one)(loads, caps, fmask, params, policy_idx)
+    def chunk_step(state, xs):
+        carry, fq, agg, hist = state
+        loads_c, caps_c, fmask_c = xs
+        carry, fq, agg, lat = jax.vmap(one)(carry, fq, agg, loads_c,
+                                            caps_c, fmask_c, params,
+                                            policy_idx)
+        hist = hist + device_latency_histogram(lat, loads_c)
+        return (carry, fq, agg, hist), None
+
+    state0 = (jnp.zeros((n, CARRY_DIM), jnp.float32),
+              jnp.zeros((n,), jnp.float32),
+              init_agg_scalars((n,)),
+              jnp.zeros((n, AGG_HIST_BINS), jnp.float64))
+    (carry, fq, agg, hist), _ = jax.lax.scan(
+        chunk_step, state0, (cs(loads), cs(caps), cs(fmask)))
+    carry = carry.at[:, 0].add(fq)
+    return carry, jnp.concatenate(
+        [pack_agg_scalars(agg), hist.astype(jnp.float32)], axis=-1)
 
 
 def _grid_scan_agg(loads: jnp.ndarray, params: jnp.ndarray,
                    policy_idx: jnp.ndarray, version: int, dt_hours: float,
                    slo_limit: float, slo_mode: int,
-                   weights_np: Optional[np.ndarray] = None,
                    caps=None, fmask=None):
     """Backend-selecting entry point of the streaming-aggregate scan —
     the O(N)-memory sibling of ``_grid_scan``. Same selection rule:
     XLA vmapped switch-scan by default, the fused Pallas aggregate kernel
     under ``kernels.ops.pallas_mode()`` (aggregates fully resident in
-    VMEM scratch), decided OUTSIDE jit. Either way the result is O(N):
-    (carry_end [N, CARRY_DIM], agg [N, AGG_DIM]). On the XLA path the
-    histogram is binned host-side from the staged latency panel
-    (``weights_np`` — the block's loads — skips a device round-trip when
-    the caller already holds them in host memory). ``caps``/``fmask``
-    [N, T] (together) thread a fault schedule through either backend."""
+    VMEM scratch), decided OUTSIDE jit. Either way the result is O(N)
+    and fully device-resident — histogram included, no host binning
+    round-trip on any backend: (carry_end [N, CARRY_DIM],
+    agg [N, AGG_DIM]). The XLA jits are always entered under
+    ``enable_x64()`` so their exact-f64 histogram accumulation never
+    silently re-traces truncated. ``caps``/``fmask`` [N, T] (together)
+    thread a fault schedule through either backend."""
     from repro.kernels import ops
     if ops.pallas_enabled():
         from repro.core.twin import policy_onehot
@@ -398,23 +474,19 @@ def _grid_scan_agg(loads: jnp.ndarray, params: jnp.ndarray,
         return ops.policy_scan_agg(loads, params, onehot, dt_hours,
                                    slo_limit=slo_limit, slo_mode=slo_mode,
                                    caps=caps, fmask=fmask)
-    if caps is not None:
-        carry_end, scalars, lat_panel = _grid_scan_agg_fault_xla(
-            loads, caps, fmask, params, policy_idx, version, dt_hours,
-            slo_limit, slo_mode)
-    else:
-        carry_end, scalars, lat_panel = _grid_scan_agg_xla(
+    with enable_x64():
+        if caps is not None:
+            return _grid_scan_agg_fault_xla(
+                loads, caps, fmask, params, policy_idx, version, dt_hours,
+                slo_limit, slo_mode)
+        return _grid_scan_agg_xla(
             loads, params, policy_idx, version, dt_hours, slo_limit,
             slo_mode)
-    hist = np_latency_histogram(
-        np.asarray(lat_panel),
-        weights_np if weights_np is not None else np.asarray(loads))
-    return carry_end, np.concatenate([np.asarray(scalars), hist], axis=-1)
 
 
-def _agg_scan_uniform(loads: jnp.ndarray, params: jnp.ndarray,
-                      policy_index: jnp.ndarray, dt_hours: float,
-                      slo_limit: float, slo_mode: int):
+def _agg_scan_uniform(load_matrix: jnp.ndarray, lidx: jnp.ndarray,
+                      params: jnp.ndarray, policy_index: jnp.ndarray,
+                      dt_hours: float, slo_limit: float, slo_mode: int):
     """Single-policy sibling of ``_agg_scan_vmap``: ``policy_index`` is a
     SCALAR (possibly traced), so the ``lax.switch`` hoists OUTSIDE the
     vmapped scan and the block executes exactly one policy branch — on a
@@ -423,74 +495,133 @@ def _agg_scan_uniform(loads: jnp.ndarray, params: jnp.ndarray,
     The per-scenario op sequence inside the selected branch is IDENTICAL
     to ``_agg_scan_vmap``'s, so results stay bit-for-bit equal; the block
     planner (``_agg_block_plan``) guarantees every chunked block is
-    single-policy. Same returns: (carry_end [N, CARRY_DIM], scalars
-    [N, AGG_SCALARS], latency panel [N, T])."""
-    branches = policy_branches()
+    single-policy.
+
+    Takes the [K, T] distinct-row matrix + the block's [B] row index and
+    gathers ONE [B, chunk] slice per time chunk in-graph — the block's
+    full [B, T] loads never exist, on device or host, and the histogram
+    accumulates on device (``device_latency_histogram``; call under
+    ``enable_x64()``). Returns (carry_end [B, CARRY_DIM],
+    agg [B, AGG_DIM])."""
+    branches = _branches_f32()
     dt = jnp.asarray(dt_hours, jnp.float32)
+    b = lidx.shape[0]
+    k, t_bins = load_matrix.shape
+    chunk = _agg_time_chunk(t_bins)
+    nc = t_bins // chunk
+    mx = load_matrix.reshape(k, nc, chunk).transpose(1, 0, 2)
 
     def uniform(j):
-        def one(load, p):
-            def bin_step(state, arrive):
-                carry, agg = state
-                carry, outs = branches[j](carry, arrive, p, dt)
-                agg = update_agg_scalars(agg, arrive, outs, slo_limit,
-                                         slo_mode)
-                return (carry, agg), outs[2]      # stage latency only
+        def run(mx, lidx, params):
+            def one(carry_i, agg_i, load_i, p):
+                def bin_step(state, arrive):
+                    carry, agg = state
+                    carry, outs = branches[j](carry, arrive, p, dt)
+                    agg = update_agg_scalars(agg, arrive, outs, slo_limit,
+                                             slo_mode)
+                    return (carry, agg), outs[2]
 
-            (carry, agg), latency = jax.lax.scan(
-                bin_step, (jnp.zeros((CARRY_DIM,), jnp.float32),
-                           init_agg_scalars()), load)
-            return carry, pack_agg_scalars(agg), latency
+                (carry, agg), latency = jax.lax.scan(
+                    bin_step, (carry_i, agg_i), load_i)
+                return carry, agg, latency
 
-        return jax.vmap(one)
+            def chunk_step(state, m_c):
+                carry, agg, hist = state
+                loads_c = jnp.take(m_c, lidx, axis=0)
+                carry, agg, lat = jax.vmap(one)(carry, agg, loads_c,
+                                                params)
+                hist = hist + device_latency_histogram(lat, loads_c)
+                return (carry, agg, hist), None
+
+            state0 = (jnp.zeros((b, CARRY_DIM), jnp.float32),
+                      init_agg_scalars((b,)),
+                      jnp.zeros((b, AGG_HIST_BINS), jnp.float64))
+            (carry, agg, hist), _ = jax.lax.scan(chunk_step, state0, mx)
+            return carry, jnp.concatenate(
+                [pack_agg_scalars(agg), hist.astype(jnp.float32)],
+                axis=-1)
+
+        return run
 
     return jax.lax.switch(policy_index,
                           [uniform(j) for j in range(len(branches))],
-                          loads, params)
+                          mx, lidx, params)
 
 
-def _agg_scan_uniform_fault(loads: jnp.ndarray, caps: jnp.ndarray,
-                            fmask: jnp.ndarray, params: jnp.ndarray,
+def _agg_scan_uniform_fault(load_matrix: jnp.ndarray, lidx: jnp.ndarray,
+                            cap_matrix: jnp.ndarray,
+                            fmask_matrix: jnp.ndarray, fidx: jnp.ndarray,
+                            params: jnp.ndarray,
                             policy_index: jnp.ndarray, dt_hours: float,
                             slo_limit: float, slo_mode: int):
     """Fault sibling of ``_agg_scan_uniform``: the single hoisted
     ``lax.switch`` picks the policy branch, every scenario of the block
     steps through the scalar fault layer, and the A_FLTH/A_FOKH counters
-    ride the scalar aggregate state. Same returns plus the backlog folded
-    into the carry's queue slot."""
-    branches = policy_branches()
+    ride the scalar aggregate state. The [F, T] capacity/mask matrices
+    gather through ``fidx`` one [B, chunk] slice per time chunk, exactly
+    like the loads through ``lidx`` — no [B, T] fault panels are staged
+    either. Same returns plus the backlog folded into the carry's queue
+    slot."""
+    branches = _branches_f32()
     dt = jnp.asarray(dt_hours, jnp.float32)
+    b = lidx.shape[0]
+    k, t_bins = load_matrix.shape
+    chunk = _agg_time_chunk(t_bins)
+    nc = t_bins // chunk
+    cs = lambda a: a.reshape(a.shape[0], nc, chunk).transpose(1, 0, 2)  # noqa: E731
 
     def uniform(j):
-        def one(load, cap, fm, p):
-            def bin_step(state, xs):
-                arrive, capmul, fmk = xs
-                (carry, fq), agg = state
-                gate = (capmul > 0).astype(jnp.float32)
-                avail = fq + arrive
-                a_eff = gate * avail
-                new_fq = avail - a_eff
-                p_eff = p.at[0].set(p[0] * capmul)
-                carry, outs = branches[j](carry, a_eff, p_eff, dt)
-                wait = new_fq / jnp.maximum(p[0], jnp.float32(1e-9))
-                outs = (outs[0], outs[1] + new_fq, outs[2] + wait,
-                        outs[3], outs[4])
-                agg = update_agg_scalars(agg, arrive, outs, slo_limit,
-                                         slo_mode, fmk)
-                return ((carry, new_fq), agg), outs[2]  # stage latency
+        def run(mx, cx, fx, lidx, fidx, params):
+            def one(carry_i, fq_i, agg_i, load_i, cap_i, fm_i, p):
+                def bin_step(state, xs):
+                    arrive, capmul, fmk = xs
+                    (carry, fq), agg = state
+                    gate = (capmul > 0).astype(jnp.float32)
+                    avail = fq + arrive
+                    a_eff = gate * avail
+                    new_fq = avail - a_eff
+                    p_eff = p.at[0].set(p[0] * capmul)
+                    carry, outs = branches[j](carry, a_eff, p_eff, dt)
+                    wait = new_fq / jnp.maximum(p[0], jnp.float32(1e-9))
+                    outs = (outs[0], outs[1] + new_fq, outs[2] + wait,
+                            outs[3], outs[4])
+                    agg = update_agg_scalars(agg, arrive, outs, slo_limit,
+                                             slo_mode, fmk)
+                    return ((carry, new_fq), agg), outs[2]
 
-            ((carry, fq), agg), latency = jax.lax.scan(
-                bin_step, ((jnp.zeros((CARRY_DIM,), jnp.float32),
-                            jnp.float32(0.0)), init_agg_scalars()),
-                (load, cap, fm))
-            carry = carry.at[0].add(fq)
-            return carry, pack_agg_scalars(agg), latency
+                ((carry, fq), agg), latency = jax.lax.scan(
+                    bin_step, ((carry_i, fq_i), agg_i),
+                    (load_i, cap_i, fm_i))
+                return carry, fq, agg, latency
 
-        return jax.vmap(one)
+            def chunk_step(state, xs):
+                carry, fq, agg, hist = state
+                m_c, c_c, f_c = xs
+                loads_c = jnp.take(m_c, lidx, axis=0)
+                caps_c = jnp.take(c_c, fidx, axis=0)
+                fmask_c = jnp.take(f_c, fidx, axis=0)
+                carry, fq, agg, lat = jax.vmap(one)(
+                    carry, fq, agg, loads_c, caps_c, fmask_c, params)
+                hist = hist + device_latency_histogram(lat, loads_c)
+                return (carry, fq, agg, hist), None
+
+            state0 = (jnp.zeros((b, CARRY_DIM), jnp.float32),
+                      jnp.zeros((b,), jnp.float32),
+                      init_agg_scalars((b,)),
+                      jnp.zeros((b, AGG_HIST_BINS), jnp.float64))
+            (carry, fq, agg, hist), _ = jax.lax.scan(
+                chunk_step, state0, (mx, cx, fx))
+            carry = carry.at[:, 0].add(fq)
+            return carry, jnp.concatenate(
+                [pack_agg_scalars(agg), hist.astype(jnp.float32)],
+                axis=-1)
+
+        return run
 
     return jax.lax.switch(policy_index,
                           [uniform(j) for j in range(len(branches))],
-                          loads, caps, fmask, params)
+                          cs(load_matrix), cs(cap_matrix),
+                          cs(fmask_matrix), lidx, fidx, params)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2, 3),
@@ -499,34 +630,33 @@ def _agg_block_step_xla(version: int, dt_hours: float, slo_limit: float,
                         slo_mode: int, load_matrix: jnp.ndarray,
                         lidx: jnp.ndarray, params: jnp.ndarray,
                         policy_index: jnp.ndarray, carry_acc: jnp.ndarray,
-                        scal_acc: jnp.ndarray, offset,
+                        agg_acc: jnp.ndarray, offset,
                         cap_matrix=None, fmask_matrix=None, fidx=None):
-    """One donated block step of the async XLA engine: gather the block's
-    [B, T] loads from the replicated matrix, run the uniform-branch
-    aggregate scan, and write the O(B) results into the donated [Npad, *]
-    accumulators at ``offset``. ``donate_argnums`` hands the accumulator
-    buffers back to XLA, so device memory stays at ONE block's loads +
-    panel + the O(N) aggregates no matter how many blocks stream through.
-    The [B, T] latency panel is returned raw: the host loop bins it
-    (``np_latency_histogram``) while the device runs the NEXT block —
-    that overlap is the async dispatch. Fault grids add the replicated
-    [F, T] capacity/mask matrices + the block's [B] ``fidx`` gather map
-    (appended AFTER ``offset`` so the donated accumulator positions
-    never move)."""
+    """One donated block step of the device-resident XLA engine: run the
+    uniform-branch aggregate scan — which gathers the block's loads one
+    [B, chunk] time chunk at a time from the replicated [K, T] matrix and
+    accumulates the histogram on device — and write the O(B·AGG_DIM)
+    result into the donated [Npad, *] accumulators at ``offset``.
+    ``donate_argnums`` hands the accumulator buffers back to XLA, so
+    device memory stays at ONE chunk's gathered loads + the O(N)
+    aggregates no matter how many blocks stream through; no [B, T] panel
+    ever exists and nothing returns to the host until the last block.
+    Traces f64 (the histogram segment_sum) — call under ``enable_x64()``.
+    Fault grids add the replicated [F, T] capacity/mask matrices + the
+    block's [B] ``fidx`` gather map (appended AFTER ``offset`` so the
+    donated accumulator positions never move)."""
     del version
-    loads = jnp.take(load_matrix, lidx, axis=0)
     if cap_matrix is None:
-        carry, scalars, panel = _agg_scan_uniform(
-            loads, params, policy_index, dt_hours, slo_limit, slo_mode)
-    else:
-        caps = jnp.take(cap_matrix, fidx, axis=0)
-        fmask = jnp.take(fmask_matrix, fidx, axis=0)
-        carry, scalars, panel = _agg_scan_uniform_fault(
-            loads, caps, fmask, params, policy_index, dt_hours,
+        carry, agg = _agg_scan_uniform(
+            load_matrix, lidx, params, policy_index, dt_hours,
             slo_limit, slo_mode)
+    else:
+        carry, agg = _agg_scan_uniform_fault(
+            load_matrix, lidx, cap_matrix, fmask_matrix, fidx, params,
+            policy_index, dt_hours, slo_limit, slo_mode)
     carry_acc = jax.lax.dynamic_update_slice(carry_acc, carry, (offset, 0))
-    scal_acc = jax.lax.dynamic_update_slice(scal_acc, scalars, (offset, 0))
-    return carry_acc, scal_acc, panel
+    agg_acc = jax.lax.dynamic_update_slice(agg_acc, agg, (offset, 0))
+    return carry_acc, agg_acc
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4),
@@ -541,8 +671,11 @@ def _agg_block_step_pallas(version: int, dt_hours: float, slo_limit: float,
     in the kernel's scenario-minor layout (``matrix_t`` [T, K] staged once,
     columns gathered per block — the PR 3/4 layout follow-on: no [B, T]
     intermediate or per-block transpose copy exists anymore) and runs the
-    fused aggregate kernel, histogram and all on-device. Accumulators are
-    donated exactly as on the XLA path. Fault grids gather the [T, F]
+    fused aggregate kernel, histogram and all on-device. The kernel's RAW
+    [B, AGG_KDIM] rows (compensated histogram triples unrecombined) are
+    accumulated — the driver recombines once at the very end
+    (``finalize_aggregate_x64``), keeping this jit pure f32. Accumulators
+    are donated exactly as on the XLA path. Fault grids gather the [T, F]
     ``cap_mt``/``fmask_mt`` columns through ``fidx`` the same way and run
     the kernel's fault variant."""
     del version
@@ -559,27 +692,47 @@ def _agg_block_step_pallas(version: int, dt_hours: float, slo_limit: float,
     carry, agg = policy_grid_agg(
         None, params, onehot, dt_hours, slo_limit=slo_limit,
         slo_mode=slo_mode, interpret=interpret, loads_t=loads_t,
-        caps_t=caps_t, fmask_t=fmask_t)
+        caps_t=caps_t, fmask_t=fmask_t, finalize=False)
     carry_acc = jax.lax.dynamic_update_slice(carry_acc, carry, (offset, 0))
     agg_acc = jax.lax.dynamic_update_slice(agg_acc, agg, (offset, 0))
     return carry_acc, agg_acc
 
 
-#: host-memory budget a streamed block may spend on its [B, T] staging
-#: arrays (the gathered loads / latency panel) — the block size every
-#: horizon auto-chunks to derives from this, see ``agg_auto_block``
+#: device-memory budget a streamed block may spend on its per-block
+#: working set — the block size every horizon auto-chunks to derives
+#: from this, see ``agg_auto_block``
 AGG_BLOCK_BUDGET_BYTES = 150 * 2**20
 
 
-def agg_auto_block(t_bins: int, dtype_bytes: int = 4) -> int:
+def agg_auto_block(t_bins: int, dtype_bytes: int = 4,
+                   panels: int = 0) -> int:
     """Auto-chunk block size for a ``t_bins``-bin horizon: the largest
-    lane-aligned scenario count whose [B, T] staging array fits the
-    ~150 MB ``AGG_BLOCK_BUDGET_BYTES``. A fixed scenario count would
-    over-chunk short calibration horizons (thousands of tiny dispatches)
-    and under-chunk long sub-hour ones (panels far past the budget);
-    deriving from the horizon keeps every grid at the same working set.
-    Clamped to [128, 65536] and rounded down to a 128-lane multiple."""
-    block = AGG_BLOCK_BUDGET_BYTES // (max(int(t_bins), 1) * dtype_bytes)
+    lane-aligned scenario count whose per-block working set fits the
+    ~150 MB ``AGG_BLOCK_BUDGET_BYTES``.
+
+    ``panels`` counts the [B, T] (or [T, B]) full-horizon arrays the
+    block actually stages — the historical under-budgeting bug was
+    declaring a budget for ONE panel while fault dispatch gathered
+    ``caps_t``/``fmask_t`` alongside ``loads_t`` (~3x the declared
+    budget). The Pallas path still gathers per-block column panels, so
+    it passes ``panels=1`` (benign) or ``panels=3`` (fault grids); the
+    device-resident XLA path stages NO full-horizon panel at all
+    (``panels=0``) — its footprint is the [B, chunk] time-chunk gathers
+    (up to 6 buffered by the scan pipeline) plus the O(B·AGG_DIM)
+    aggregate rows, so year grids get ~7k-scenario blocks instead of
+    ~4k and short horizons no longer over-chunk.
+
+    A fixed scenario count would over-chunk short calibration horizons
+    (thousands of tiny dispatches) and under-chunk long sub-hour ones
+    (working sets far past the budget); deriving from the horizon keeps
+    every grid at the same working set. Clamped to [128, 65536] and
+    rounded down to a 128-lane multiple."""
+    t_bins = max(int(t_bins), 1)
+    if panels:
+        per_row = t_bins * dtype_bytes * panels
+    else:
+        per_row = (6 * _agg_time_chunk(t_bins) + 4 * AGG_DIM) * dtype_bytes
+    block = AGG_BLOCK_BUDGET_BYTES // per_row
     return int(min(max(block // 128 * 128, 128), 65536))
 
 
@@ -626,16 +779,19 @@ def _sharded_agg_fn(devices: int, version: int, dt_hours: float,
     single-policy block — lidx [D, B] / params [D, B, PARAM_DIM] /
     block_policy [D] sharded on the leading axis, so every shard runs
     the same uniform-branch aggregate scan the one-device engine runs
-    and results are bit-identical to unsharded by construction. The XLA
-    branch returns the raw [D, B, T] latency panels (sharded) instead
-    of binning in-graph: host callbacks inside ``shard_map`` serialize
-    (and can wedge) multi-device dispatch, so the host loop
-    (``_run_blocks_sharded``) bins round r-1's panels with
-    ``np_latency_histogram`` while the devices run round r — the same
-    async overlap as the single-device engine, one block per device.
-    ``faulted`` builds the fault-grid variant: the [F, T] capacity/mask
-    matrices replicate like the load matrix and a sharded [D, B] fault
-    index gathers each block's per-bin fault series."""
+    and results are bit-identical to unsharded by construction. Both
+    backends keep the histogram INSIDE the ``shard_map`` body — the XLA
+    branch accumulates it on device with ``device_latency_histogram``
+    (scenarios are disjoint across shards, so a plain sharded gather
+    returns the per-row histograms; no psum needed) and returns finished
+    [D, B, AGG_DIM] rows; the Pallas branch returns the kernel's raw
+    [D, B, AGG_KDIM] rows for one end-of-grid recombination. The old
+    per-round host drain — and the pure_callback-deadlock constraint it
+    was built around — is gone: the XLA round traces f64, so CALL IT
+    UNDER ``enable_x64()``. ``faulted`` builds the fault-grid variant:
+    the [F, T] capacity/mask matrices replicate like the load matrix and
+    a sharded [D, B] fault index gathers each block's per-bin fault
+    series."""
     del version
     from jax.sharding import Mesh, PartitionSpec as P
 
@@ -662,23 +818,19 @@ def _sharded_agg_fn(devices: int, version: int, dt_hours: float,
             carry, agg = policy_grid_agg(
                 None, p_b, onehot, dt_hours, slo_limit=slo_limit,
                 slo_mode=slo_mode, interpret=interpret, loads_t=loads_t,
-                caps_t=caps_t, fmask_t=fmask_t)
+                caps_t=caps_t, fmask_t=fmask_t, finalize=False)
             return carry[None], agg[None]
-        loads = jnp.take(load_matrix, lidx_b, axis=0)
         if faulted:
-            caps = jnp.take(cap_matrix, fidx[0], axis=0)
-            fmask = jnp.take(fmask_matrix, fidx[0], axis=0)
-            carry, scalars, panel = _agg_scan_uniform_fault(
-                loads, caps, fmask, p_b, pidx_b, dt_hours, slo_limit,
-                slo_mode)
+            carry, agg = _agg_scan_uniform_fault(
+                load_matrix, lidx_b, cap_matrix, fmask_matrix, fidx[0],
+                p_b, pidx_b, dt_hours, slo_limit, slo_mode)
         else:
-            carry, scalars, panel = _agg_scan_uniform(
-                loads, p_b, pidx_b, dt_hours, slo_limit, slo_mode)
-        return carry[None], scalars[None], panel[None]
+            carry, agg = _agg_scan_uniform(
+                load_matrix, lidx_b, p_b, pidx_b, dt_hours, slo_limit,
+                slo_mode)
+        return carry[None], agg[None]
 
-    out_specs = ((P("scenario"), P("scenario"))
-                 if backend == "pallas"
-                 else (P("scenario"), P("scenario"), P("scenario")))
+    out_specs = (P("scenario"), P("scenario"))
     in_specs = (P(), P("scenario"), P("scenario"), P("scenario"))
     if faulted:
         in_specs = in_specs + (P(), P(), P("scenario"))
@@ -696,12 +848,14 @@ def _run_blocks_sharded(load_matrix: np.ndarray, lidx: np.ndarray,
                         slo_limit: float, slo_mode: int, backend: str,
                         interpret: bool, fault=None):
     """Drive the sharded round step over all blocks: rounds of one block
-    per device, host binning of the previous round's latency panels
-    overlapped with the current round's device scans. ``lidx`` arrives
-    padded to a ``devices`` multiple of blocks (dummy all-pad blocks).
-    ``fault`` = (cap [F, T], fmask [F, T], fidx [NB, B]) threads a fault
-    grid through every round. Returns host (carry [NB*B, CARRY_DIM],
-    agg [NB*B, AGG_DIM])."""
+    per device, every round fully device-resident — the old overlap
+    machinery (host binning of round r-1's panels while round r runs)
+    is gone because there is no host binning left to overlap. ``lidx``
+    arrives padded to a ``devices`` multiple of blocks (dummy all-pad
+    blocks). ``fault`` = (cap [F, T], fmask [F, T], fidx [NB, B])
+    threads a fault grid through every round. Returns host (carry
+    [NB*B, CARRY_DIM], agg [NB*B, AGG_DIM]) — Pallas rounds return raw
+    AGG_KDIM rows, recombined ONCE here at the end of the grid."""
     nb, block = lidx.shape
     d = devices
     rounds = nb // d
@@ -710,8 +864,9 @@ def _run_blocks_sharded(load_matrix: np.ndarray, lidx: np.ndarray,
                          backend, interpret, block,
                          faulted=fault is not None)
     matrix_dev = jnp.asarray(load_matrix)
+    agg_width = AGG_KDIM if backend == "pallas" else AGG_DIM
     carry_out = np.empty((npad, CARRY_DIM), np.float32)
-    agg_out = np.empty((npad, AGG_SCALARS + AGG_HIST_BINS), np.float32)
+    agg_out = np.empty((npad, agg_width), np.float32)
 
     def rnd(a, r):
         return jnp.asarray(a[r * d:(r + 1) * d])
@@ -724,38 +879,20 @@ def _run_blocks_sharded(load_matrix: np.ndarray, lidx: np.ndarray,
     else:
         fargs = lambda r: ()  # noqa: E731
 
-    if backend == "pallas":
+    # the XLA round jit traces f64 (in-graph histogram segment_sum) —
+    # every call must sit inside enable_x64 or jit re-traces a truncated
+    # f32 variant; the Pallas round jit is pure f32 and stays outside
+    ctx = (contextlib.nullcontext() if backend == "pallas"
+           else enable_x64())
+    with ctx:
         for r in range(rounds):
             carry, agg = fn(matrix_dev, rnd(lidx, r), rnd(params, r),
                             rnd(block_policy, r), *fargs(r))
             sl = slice(r * d * block, (r + 1) * d * block)
             carry_out[sl] = np.asarray(carry).reshape(-1, CARRY_DIM)
             agg_out[sl] = np.asarray(agg).reshape(-1, agg.shape[-1])
-        return carry_out, agg_out
-
-    def drain(carry, scalars, panels, r):
-        # host side of round r: copy out the O(B) results and bin the
-        # [B, T] panels — called AFTER round r+1 is enqueued, so this
-        # work overlaps the devices' next scans
-        sl = slice(r * d * block, (r + 1) * d * block)
-        carry_out[sl] = np.asarray(carry).reshape(-1, CARRY_DIM)
-        agg_out[sl, :AGG_SCALARS] = np.asarray(scalars).reshape(
-            -1, AGG_SCALARS)
-        for i in range(d):
-            b = r * d + i
-            bsl = slice(b * block, (b + 1) * block)
-            agg_out[bsl, AGG_SCALARS:] = np_latency_histogram(
-                np.asarray(panels[i]), load_matrix, weight_rows=lidx[b])
-
-    pending = None
-    for r in range(rounds):
-        out = fn(matrix_dev, rnd(lidx, r), rnd(params, r),
-                 rnd(block_policy, r), *fargs(r))
-        if pending is not None:
-            drain(*pending)
-        pending = (*out, r)
-    if pending is not None:
-        drain(*pending)
+    if backend == "pallas":
+        agg_out = np.asarray(finalize_aggregate_x64(agg_out))
     return carry_out, agg_out
 
 
@@ -764,16 +901,19 @@ def _run_blocks_single(load_matrix: np.ndarray, lidx: np.ndarray,
                        version: int, dt_hours: float, slo_limit: float,
                        slo_mode: int, backend: str, interpret: bool,
                        fault=None):
-    """The one-device async engine: dispatch block b, then — while the
-    device runs it — bin block b-1's latency panel on the host. JAX's
-    async dispatch returns control at enqueue time, so host bincount and
-    device scan overlap; accumulators are donated across steps (see
-    ``_agg_block_step_*``). ``fault`` = (cap [F, T], fmask [F, T],
+    """The one-device streaming engine: every block runs fully
+    device-resident — no latency panel ever crosses to the host and the
+    old dispatch/bin overlap machinery is gone because there is no host
+    binning left to overlap. Accumulators are donated across steps (see
+    ``_agg_block_step_*``), so device memory stays at one block's
+    working set + the O(N) aggregate rows; nothing copies back until
+    the final ``np.asarray``. ``fault`` = (cap [F, T], fmask [F, T],
     fidx [NB, B]) threads a fault grid through every block. Returns host
-    (carry [NB*B, CARRY_DIM], agg [NB*B, AGG_DIM])."""
+    (carry [NB*B, CARRY_DIM], agg [NB*B, AGG_DIM]) — Pallas blocks
+    accumulate raw AGG_KDIM rows, recombined ONCE at the end of the
+    grid."""
     nb, block = lidx.shape
     npad = nb * block
-    matrix_dev = jnp.asarray(load_matrix)
     carry_acc = jnp.zeros((npad, CARRY_DIM), jnp.float32)
     if backend == "pallas":
         matrix_t = jnp.asarray(load_matrix.T)
@@ -785,15 +925,16 @@ def _run_blocks_single(load_matrix: np.ndarray, lidx: np.ndarray,
                                jnp.asarray(fidx_blocks[b]))
         else:
             fargs = lambda b: ()  # noqa: E731
-        agg_acc = jnp.zeros((npad, AGG_SCALARS + AGG_HIST_BINS),
-                            jnp.float32)
+        agg_acc = jnp.zeros((npad, AGG_KDIM), jnp.float32)
         for b in range(nb):
             carry_acc, agg_acc = _agg_block_step_pallas(
                 version, dt_hours, slo_limit, slo_mode, interpret,
                 matrix_t, jnp.asarray(lidx[b]), jnp.asarray(params[b]),
                 jnp.asarray(block_policy[b]), carry_acc, agg_acc,
                 b * block, *fargs(b))
-        return np.asarray(carry_acc), np.asarray(agg_acc)
+        return (np.asarray(carry_acc),
+                np.asarray(finalize_aggregate_x64(agg_acc)))
+    matrix_dev = jnp.asarray(load_matrix)
     if fault is not None:
         cap_dev = jnp.asarray(fault[0])
         fmask_dev = jnp.asarray(fault[1])
@@ -802,29 +943,58 @@ def _run_blocks_single(load_matrix: np.ndarray, lidx: np.ndarray,
                            jnp.asarray(fidx_blocks[b]))
     else:
         fargs = lambda b: ()  # noqa: E731
-    scal_acc = jnp.zeros((npad, AGG_SCALARS), jnp.float32)
-    hist = np.empty((npad, AGG_HIST_BINS), np.float32)
-    pending = None
-    for b in range(nb):
-        carry_acc, scal_acc, panel = _agg_block_step_xla(
-            version, dt_hours, slo_limit, slo_mode, matrix_dev,
-            jnp.asarray(lidx[b]), jnp.asarray(params[b]),
-            jnp.asarray(block_policy[b]), carry_acc, scal_acc, b * block,
-            *fargs(b))
-        if pending is not None:
-            prev_panel, prev_b = pending
-            hist[prev_b * block:(prev_b + 1) * block] = \
-                np_latency_histogram(np.asarray(prev_panel), load_matrix,
-                                     weight_rows=lidx[prev_b])
-        pending = (panel, b)
-    if pending is not None:
-        prev_panel, prev_b = pending
-        hist[prev_b * block:(prev_b + 1) * block] = \
-            np_latency_histogram(np.asarray(prev_panel), load_matrix,
-                                 weight_rows=lidx[prev_b])
-    scalars = np.asarray(scal_acc)
-    return (np.asarray(carry_acc),
-            np.concatenate([scalars, hist], axis=-1))
+    agg_acc = jnp.zeros((npad, AGG_DIM), jnp.float32)
+    with enable_x64():      # the block step traces f64 — see its docstring
+        for b in range(nb):
+            carry_acc, agg_acc = _agg_block_step_xla(
+                version, dt_hours, slo_limit, slo_mode, matrix_dev,
+                jnp.asarray(lidx[b]), jnp.asarray(params[b]),
+                jnp.asarray(block_policy[b]), carry_acc, agg_acc,
+                b * block, *fargs(b))
+        return np.asarray(carry_acc), np.asarray(agg_acc)
+
+
+def _dedup_rows(load_index: np.ndarray, params: np.ndarray,
+                policy_idx: np.ndarray, fault=None):
+    """Exact duplicate-scenario detection for the aggregate dispatch.
+
+    Two scenario rows are duplicates when their (load row, param vector,
+    policy index, fault row) are BITWISE identical — they play the same
+    deterministic year, so one simulation serves all of them. Fault rows
+    are canonicalized first (bitwise-equal [F, T] cap+fmask rows map to
+    one id), which is what collapses benign futures: ``expand_grid``
+    aliases their load rows to the originals and every benign future's
+    cap/fmask row is the same all-ones/all-zeros pair, so the N*F chaos
+    grid keeps one benign row per base scenario. Tiled grids (policy
+    tournaments re-running a baseline, twin x traffic sweeps cycling a
+    twin list) collapse the same way. Returns (keep [U], inv [N],
+    fidx_canon [N]) with ``keep`` the first-occurrence row of each
+    distinct scenario and ``inv`` the expansion map back to grid order —
+    or None when every row is already distinct. f32 bit-equality is
+    conservative: NaN != NaN and -0.0 != 0.0 never merge rows that could
+    differ."""
+    lidx = np.ascontiguousarray(load_index, np.int32)
+    n = lidx.shape[0]
+    pp = np.ascontiguousarray(params, np.float32)
+    key = [lidx[:, None].view(np.uint32),
+           np.ascontiguousarray(policy_idx, np.int32)[:, None]
+           .view(np.uint32), pp.view(np.uint32)]
+    fidx_canon = None
+    if fault is not None:
+        frows = np.concatenate(
+            [np.ascontiguousarray(fault[0], np.float32).view(np.uint32),
+             np.ascontiguousarray(fault[1], np.float32).view(np.uint32)],
+            axis=1)
+        _, ffirst, finv = np.unique(frows, axis=0, return_index=True,
+                                    return_inverse=True)
+        fidx_canon = ffirst[finv.reshape(-1)][np.asarray(fault[2])] \
+            .astype(np.int32)
+        key.append(fidx_canon[:, None].view(np.uint32))
+    keep, inv = np.unique(np.concatenate(key, axis=1), axis=0,
+                          return_index=True, return_inverse=True)[1:]
+    if keep.shape[0] == n:
+        return None
+    return keep, inv.reshape(-1), fidx_canon
 
 
 def _grid_agg_dispatch(load_matrix: np.ndarray, load_index: np.ndarray,
@@ -842,10 +1012,33 @@ def _grid_agg_dispatch(load_matrix: np.ndarray, load_index: np.ndarray,
     fmask [F, T], fault_index [N]) threads a fault grid through every
     path — fault rows gather through ``fault_index`` exactly like load
     rows through ``load_index``, so a 65k chaos grid ships F fault rows,
-    not 65k. All paths return the same host numpy (carry_end
-    [N, CARRY_DIM], agg [N, AGG_DIM]), bit-identical to one another."""
+    not 65k. Bitwise-duplicate scenario rows (``_dedup_rows``) are
+    simulated once and their summary rows replicated on the way out —
+    exact, because scenarios are independent and deterministic. All
+    paths return the same host numpy (carry_end [N, CARRY_DIM], agg
+    [N, AGG_DIM]), bit-identical to one another."""
+    from repro.kernels import ops
     n = len(load_index)
-    auto_block = agg_auto_block(load_matrix.shape[1])
+    dd = _dedup_rows(load_index, params, policy_idx, fault)
+    if dd is not None:
+        keep, inv, fidx_canon = dd
+        fault_k = None
+        if fault is not None:
+            fault_k = (fault[0], fault[1], fidx_canon[keep])
+        carry_u, agg_u = _grid_agg_dispatch(
+            load_matrix, np.asarray(load_index)[keep],
+            np.asarray(params)[keep], np.asarray(policy_idx)[keep],
+            dt_hours, slo_limit, slo_mode, scenario_block, devices,
+            fault_k)
+        return carry_u[inv], agg_u[inv]
+    backend = "pallas" if ops.pallas_enabled() else "xla"
+    interpret = ops.interpret_enabled()
+    # the Pallas path still stages per-block [T, B] column panels (one
+    # for loads, +2 for a fault grid's caps/fmask); the device-resident
+    # XLA path stages none — derive the auto-block from what the chosen
+    # backend actually allocates
+    panels = (3 if fault is not None else 1) if backend == "pallas" else 0
+    auto_block = agg_auto_block(load_matrix.shape[1], panels=panels)
     if scenario_block is None and (n > auto_block
                                    or (devices or 1) > 1):
         scenario_block = auto_block
@@ -866,15 +1059,11 @@ def _grid_agg_dispatch(load_matrix: np.ndarray, load_index: np.ndarray,
                                         jnp.asarray(params),
                                         jnp.asarray(policy_idx), version,
                                         dt_hours, slo_limit, slo_mode,
-                                        weights_np=loads_np,
                                         caps=caps, fmask=fmask)
         return (np.asarray(carry_end, np.float64),
                 np.asarray(agg, np.float64))
 
-    from repro.kernels import ops
     block = int(min(scenario_block, max(n, 1)))
-    backend = "pallas" if ops.pallas_enabled() else "xla"
-    interpret = ops.interpret_enabled()
     positions, block_policy = _agg_block_plan(policy_idx, block)
 
     # stage the per-block host operands through the position map: pad
@@ -1005,14 +1194,24 @@ def simulate_grid(twins: Sequence[Twin], loads: Optional[np.ndarray] = None,
     cost model + record_mb on a non-year grid is an error, not a silent
     zero.
 
-    **Scaling the grid** (aggregate mode). Three independent levers:
+    **Scaling the grid** (aggregate mode). The whole engine is
+    device-resident: the quarter-octave latency histogram accumulates
+    on device next to the scan (an exact f64 ``segment_sum`` per time
+    chunk on the XLA path, compensated in-kernel triples on Pallas), so
+    no ``[B, T]`` latency panel is ever staged, copied to the host, or
+    binned there — only O(N·AGG_DIM) aggregate rows leave the device,
+    once, at the end of the grid. Three independent levers:
 
     * ``scenario_block`` — scenarios per streamed device block. The
-      default (``agg_auto_block(t_bins)``) sizes blocks so one block's
-      [B, T] staging arrays fit a ~150 MB budget; grids past that stream
-      automatically. Shrink it if a block plus the O(N) aggregates
-      exceeds device memory; growing it buys little — per-block overhead
-      is one dispatch plus one host bincount.
+      default (``agg_auto_block(t_bins, panels=...)``) sizes blocks so
+      one block's working set fits a ~150 MB budget, derived from what
+      the chosen backend actually allocates: the XLA path stages only
+      [B, chunk] time-chunk gathers plus the aggregate rows (so year
+      grids get ~7.6k-scenario blocks), while the Pallas path still
+      gathers one [T, B] column panel per block (three on chaos grids —
+      counted, not under-budgeted). Shrink it if a block plus the O(N)
+      aggregates exceeds device memory; growing it buys little —
+      per-block overhead is one dispatch.
     * Chunked blocks are regrouped to be *policy-uniform* (stable order,
       results scattered back), so each block runs exactly one policy
       branch instead of an evaluate-all-branches select — on a mixed
@@ -1020,8 +1219,10 @@ def simulate_grid(twins: Sequence[Twin], loads: Optional[np.ndarray] = None,
       identical bits.
     * ``devices=D`` — shard the blocked grid over a 1-D ``D``-device
       scenario mesh (load matrix replicated, scenario blocks sharded).
-      Results are bit-identical to ``devices=None``. On a multi-core CPU
-      host, export ``XLA_FLAGS=--xla_force_host_platform_device_count=D``
+      The histogram stays inside the ``shard_map`` body, so rounds no
+      longer serialize on a host drain. Results are bit-identical to
+      ``devices=None``. On a multi-core CPU host, export
+      ``XLA_FLAGS=--xla_force_host_platform_device_count=D``
       *before the first jax import* to expose D host devices; on real
       accelerators each device is one shard. Million-scenario full-year
       sweeps complete either way — memory stays at one block per device
@@ -1120,8 +1321,9 @@ def simulate_grid(twins: Sequence[Twin], loads: Optional[np.ndarray] = None,
 
     fault = None
     if faults is not None:
-        from repro.faults import (FaultSchedule, SampledFaults, expand_grid,
-                                  sample_futures, validate_sampled)
+        from repro.faults import (FaultSchedule, SampledFaults,
+                                  expand_grid, sample_futures,
+                                  validate_sampled)
         if isinstance(faults, FaultSchedule):
             sampled = sample_futures(faults, t_bins, float(bin_hours))
         elif isinstance(faults, SampledFaults):
@@ -1157,6 +1359,8 @@ def simulate_grid(twins: Sequence[Twin], loads: Optional[np.ndarray] = None,
         slo_limit = float(slo.limit_s) if slo is not None else float("inf")
         if load_matrix is None:        # chunk/gather via an identity map
             load_matrix, load_index = loads, np.arange(n, dtype=np.int32)
+        # duplicate-scenario dedup (benign futures, tiled tournaments)
+        # happens inside the dispatch — see _dedup_rows
         carry_end, agg = _grid_agg_dispatch(
             load_matrix, load_index, params, idx, float(bin_hours),
             slo_limit, slo_mode, scenario_block, devices=devices,

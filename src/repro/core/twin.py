@@ -451,21 +451,25 @@ def registry_version() -> int:
 # form is what persists in VMEM scratch — ``unpack_aggregate`` restores
 # the pytree at chunk entry).
 #
-# The histogram has two backend-appropriate realizations that perform
-# the same per-bin additions:
+# The histogram has two backend-appropriate DEVICE-RESIDENT
+# realizations, both bit-identical to the host reference
+# (``np_latency_histogram``, kept as the parity oracle):
 #
 # * ``lane_update_aggregate`` — the branchless lane form the Pallas
 #   kernel (and the jnp lane oracle) runs: a masked compare-add over the
-#   bucket axis, resident in VMEM scratch, O(N) end to end;
+#   bucket axis, resident in VMEM scratch, O(N) end to end. Each bucket
+#   column is a twice-compensated (sum, comp, comp2) triple — the same
+#   scheme the scalar sums use — recombined in f64 once per scan
+#   (``finalize_aggregate``), which reproduces numpy's per-row f64
+#   ``np.bincount`` bit for bit;
 # * the XLA switch-scan backend keeps only the scalar statistics in the
-#   scan carry, stages the per-bin latencies of one scenario block as
-#   scan outputs, and bins them load-weighted with ``np_latency_
-#   histogram`` (one ``np.bincount`` per block behind ``jax.pure_
-#   callback``) — on the CPU backend a per-step [N, BINS] carry costs
-#   ~0.5 s per 1k scenarios in scan double-buffering alone, while the
-#   staged panel + bincount is ~15x cheaper and keeps the dispatch's
-#   RETURNED pytree O(N) (the panel is a block-bounded transient, the
-#   same working-set class as the Pallas kernel's HBM->VMEM streaming).
+#   scan carry and folds each staged time-chunk of latencies through
+#   ``device_latency_histogram`` — a flat f64 ``segment_sum`` over
+#   (scenario, bucket) ids *outside* the scan carry (a per-step
+#   [N, BINS] carry costs ~0.5 s per 1k scenarios in scan
+#   double-buffering alone). The f64 adds are exact at year-grid
+#   magnitudes, so the chunked accumulation is order-independent and
+#   matches ``np.bincount`` bitwise with no host round-trip.
 
 AGG_HIST_BINS = 152            # quarter-octave latency buckets
 #: smallest resolvable latency: 2^-10 s ~ 0.98 ms (bucket 0 clips below)
@@ -489,6 +493,9 @@ A_FLTH = 20                    # count of bins inside a fault window
 A_FOKH = 21                    # count of SLO-ok bins inside fault windows
 AGG_SCALARS = 22
 AGG_DIM = AGG_SCALARS + AGG_HIST_BINS
+#: kernel-internal packed width: each histogram bucket is a
+#: twice-compensated (sum, comp, comp2) triple until ``finalize_aggregate``
+AGG_KDIM = AGG_SCALARS + 3 * AGG_HIST_BINS
 
 #: SLO metric selector for the aggregate scan (a static trace argument)
 AGG_SLO_LATENCY, AGG_SLO_DROP_RATE = 0, 1
@@ -578,6 +585,27 @@ def np_latency_histogram(latency: np.ndarray, weights: np.ndarray,
     return out
 
 
+def device_latency_histogram(latency, weights):
+    """[N, C] latencies + [N, C] weights -> [N, AGG_HIST_BINS] f64
+    load-weighted histogram, entirely on device: bucket ids from the f32
+    bit pattern (``_hist_bucket``), then ONE flat ``segment_sum`` over
+    (scenario * AGG_HIST_BINS + bucket) ids in f64.
+
+    MUST be traced under ``jax.experimental.enable_x64()`` — outside it
+    the f64 cast silently truncates to f32 and bit-parity with
+    ``np_latency_histogram`` is lost. The f64 adds are exact at the
+    magnitudes year grids produce (bucket sums need ~35-51 bits < 53),
+    so the result is order-independent: accumulating per time chunk and
+    adding the chunk histograms reproduces numpy's per-row f64
+    ``np.bincount`` of the full series bit for bit."""
+    n = latency.shape[0]
+    seg = (jax.lax.broadcasted_iota(jnp.int32, latency.shape, 0)
+           * AGG_HIST_BINS + _hist_bucket(latency))
+    return jax.ops.segment_sum(
+        weights.astype(jnp.float64).reshape(-1), seg.reshape(-1),
+        num_segments=n * AGG_HIST_BINS).reshape(n, AGG_HIST_BINS)
+
+
 def init_agg_scalars(shape=()):
     """Zeroed scalar-statistic state: (sums tuple[18], okh, maxp, flth,
     fokh), every leaf ``shape``-shaped (scalar under the vmapped switch
@@ -625,46 +653,84 @@ def pack_agg_scalars(state) -> jnp.ndarray:
 
 def init_aggregate(shape=()):
     """Zeroed FULL aggregate state (scalars + histogram) for the lane
-    backends: (scalar state, hist [*shape, AGG_HIST_BINS])."""
-    return (init_agg_scalars(shape),
-            jnp.zeros(tuple(shape) + (AGG_HIST_BINS,), jnp.float32))
+    backends: (scalar state, hist triple of [*shape, AGG_HIST_BINS] —
+    per-bucket (sum, comp, comp2) compensated columns)."""
+    z = jnp.zeros(tuple(shape) + (AGG_HIST_BINS,), jnp.float32)
+    return (init_agg_scalars(shape), (z, z, z))
 
 
 def lane_update_aggregate(state, arrive, outs, slo_limit, slo_mode,
                           fmask=None):
     """Fold one bin into the full aggregate state — branchless lane form.
 
-    ``state`` = (scalar state with [L] leaves, hist [L, AGG_HIST_BINS]);
-    arrive [L]; outs five [L] vectors. Scalars via the shared
-    ``update_agg_scalars``; the histogram is a masked compare-add over
-    the bucket axis (no scatter), so the Pallas kernel runs it as
-    straight-line VPU vector math with everything resident in VMEM.
-    ``fmask`` [L] (optional) feeds the fault-attribution counters."""
-    scal, hist = state
+    ``state`` = (scalar state with [L] leaves, hist triple of
+    [L, AGG_HIST_BINS]); arrive [L]; outs five [L] vectors. Scalars via
+    the shared ``update_agg_scalars``; the histogram is a masked
+    compare-add over the bucket axis (no scatter) folded through the
+    same twice-compensated ``_neumaier2`` step the scalar sums use, so
+    the Pallas kernel runs it as straight-line VPU vector math with
+    everything resident in VMEM and ``finalize_aggregate`` recovers the
+    exact f64 bucket sums. ``fmask`` [L] (optional) feeds the
+    fault-attribution counters."""
+    scal, (hs, hc, hcc) = state
     scal = update_agg_scalars(scal, arrive, outs, slo_limit, slo_mode,
                               fmask)
     bucket = _hist_bucket(outs[2])
     lanes = bucket.shape[0]
     buckets = jax.lax.broadcasted_iota(jnp.int32, (lanes, AGG_HIST_BINS), 1)
-    hist = hist + jnp.where(bucket[:, None] == buckets, arrive[:, None],
-                            jnp.float32(0.0))
-    return (scal, hist)
+    x = jnp.where(bucket[:, None] == buckets, arrive[:, None],
+                  jnp.float32(0.0))
+    return (scal, _neumaier2(hs, hc, hcc, x))
 
 
 def pack_aggregate(state) -> jnp.ndarray:
-    """Flatten a full aggregate state into the [..., AGG_DIM] slot layout
-    (done once per scan / per Pallas time chunk, never in the bin loop)."""
+    """Flatten a full aggregate state into the [..., AGG_KDIM] slot
+    layout (scalars, then the three histogram planes; done once per scan
+    / per Pallas time chunk, never in the bin loop)."""
     scal, hist = state
-    return jnp.concatenate([pack_agg_scalars(scal), hist], axis=-1)
+    return jnp.concatenate([pack_agg_scalars(scal)] + list(hist), axis=-1)
 
 
 def unpack_aggregate(packed: jnp.ndarray):
     """Inverse of ``pack_aggregate`` — restores the pytree a Pallas
-    kernel's VMEM-resident [L, AGG_DIM] block carries between chunks."""
+    kernel's VMEM-resident [L, AGG_KDIM] block carries between chunks."""
+    b = AGG_HIST_BINS
     return ((tuple(packed[..., i] for i in range(18)),
              packed[..., A_OKH], packed[..., A_MAXP],
              packed[..., A_FLTH], packed[..., A_FOKH]),
-            packed[..., AGG_SCALARS:])
+            (packed[..., AGG_SCALARS:AGG_SCALARS + b],
+             packed[..., AGG_SCALARS + b:AGG_SCALARS + 2 * b],
+             packed[..., AGG_SCALARS + 2 * b:]))
+
+
+def finalize_aggregate(packed: jnp.ndarray) -> jnp.ndarray:
+    """[..., AGG_KDIM] kernel rows -> [..., AGG_DIM] public rows: each
+    bucket's (sum, comp, comp2) triple recombined in f64 then cast f32.
+
+    MUST be traced under ``jax.experimental.enable_x64()`` (like
+    ``device_latency_histogram``): the f64 recombination of the
+    twice-compensated triple is exact, so the result equals numpy's f64
+    ``np.bincount`` rounded once — an f32-only recombination double-
+    rounds at tie boundaries and loses bit-parity."""
+    b = AGG_HIST_BINS
+    hs = packed[..., AGG_SCALARS:AGG_SCALARS + b].astype(jnp.float64)
+    hc = packed[..., AGG_SCALARS + b:AGG_SCALARS + 2 * b]
+    hcc = packed[..., AGG_SCALARS + 2 * b:]
+    hist = (hs + hc + hcc).astype(jnp.float32)
+    return jnp.concatenate([packed[..., :AGG_SCALARS], hist], axis=-1)
+
+
+_finalize_aggregate_jit = jax.jit(finalize_aggregate)
+
+
+def finalize_aggregate_x64(packed: jnp.ndarray) -> jnp.ndarray:
+    """Eager entry point for ``finalize_aggregate``: enters
+    ``enable_x64`` around a module-level jit, so the compiled cache only
+    ever holds the f64-correct variant (calling the same jit outside the
+    ctx would silently re-trace a truncated-f32 one)."""
+    from jax.experimental import enable_x64
+    with enable_x64():
+        return _finalize_aggregate_jit(packed)
 
 
 def policy_table_rows() -> List[Dict]:
@@ -799,7 +865,7 @@ def _fifo_step(carry, arrive, p, dt):
     avg_q = 0.5 * (queue + new_q)
     latency = base_lat + avg_q / jnp.maximum(max_rps, 1e-9)
     return (carry.at[0].set(new_q),
-            (processed, new_q, latency, usd_hr * dt, jnp.zeros(())))
+            (processed, new_q, latency, usd_hr * dt, jnp.zeros((), jnp.float32)))
 
 
 def _quickscale_lane(carry, arrive, p, dt):
@@ -845,7 +911,7 @@ def _quickscale_step(carry, arrive, p, dt):
     new_q = queue * 0.0
     cost = usd_hr * instances * dt
     return (carry.at[0].set(new_q),
-            (processed, new_q, base_lat, cost, jnp.zeros(())))
+            (processed, new_q, base_lat, cost, jnp.zeros((), jnp.float32)))
 
 
 def _autoscale_lane(carry, arrive, p, dt):
@@ -930,7 +996,7 @@ def _autoscale_step(carry, arrive, p, dt):
     latency = base_lat + avg_q / jnp.maximum(inst * max_rps, 1e-9)
     cost = usd_hr * inst * dt
     return (jnp.stack([new_q, inst]),
-            (processed, new_q, latency, cost, jnp.zeros(())))
+            (processed, new_q, latency, cost, jnp.zeros((), jnp.float32)))
 
 
 def _shed_lane(carry, arrive, p, dt):
@@ -1063,7 +1129,7 @@ def _batch_window_step(carry, arrive, p, dt):
             + usd_hr * processed / jnp.maximum(cap_hour, 1e-9))
     new_timer = jnp.where(flush, 0.0, timer)
     return (jnp.stack([new_acc, new_timer]),
-            (processed, new_acc, latency, cost, jnp.zeros(())))
+            (processed, new_acc, latency, cost, jnp.zeros((), jnp.float32)))
 
 
 # ---------------------------------------------------------------------------

@@ -44,7 +44,17 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
     (jax >= 0.6, with ``check_vma`` / ``axis_names``) when available, else
     ``jax.experimental.shard_map.shard_map`` with the kwargs translated
     (``check_vma`` -> ``check_rep``; ``axis_names`` -> the complement
-    ``auto`` set). Use this everywhere instead of either spelling."""
+    ``auto`` set). Use this everywhere instead of either spelling.
+
+    Body contract: keep everything in-graph. Host callbacks
+    (``io_callback`` / ``pure_callback``) inside a sharded body serialize
+    multi-device dispatch and can deadlock it outright — the aggregate
+    grid's round step (``core.simulate._sharded_agg_fn``) was once built
+    AROUND that constraint, draining per-round latency panels to the host
+    for binning; its histogram now accumulates in-body on device, so the
+    constraint costs nothing. Device-wide reductions (f64 ``segment_sum``
+    included) are fine in-body; only sharded-in/sharded-out data flow
+    crosses the boundary."""
     if hasattr(jax, "shard_map"):
         kw = {}
         if check_vma is not None:

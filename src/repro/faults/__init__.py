@@ -19,11 +19,11 @@ from .spec import (FAULT_KINDS, FaultSchedule, FaultSpec, brownout, burst,
                    disconnect, outage)
 from .sampler import (ReplayTerm, SampledFaults, sample_futures,
                       validate_sampled)
-from .grid import FaultGrid, expand_grid
+from .grid import FaultGrid, benign_futures, expand_grid
 
 __all__ = [
     "FAULT_KINDS", "FaultSpec", "FaultSchedule",
     "outage", "brownout", "disconnect", "burst",
     "SampledFaults", "ReplayTerm", "sample_futures", "validate_sampled",
-    "FaultGrid", "expand_grid",
+    "FaultGrid", "expand_grid", "benign_futures",
 ]

@@ -67,6 +67,19 @@ class FaultGrid:
         return self.load_index.shape[0]
 
 
+def benign_futures(sampled: SampledFaults) -> np.ndarray:
+    """[F] bool — futures that perturb NOTHING: no load fault, no
+    capacity fault, and no fault-window mask (a masked-but-harmless
+    window still changes the A_FLTH/A_FOKH attribution counters, so it
+    is not benign). Every benign future plays a base scenario through
+    the identical fault-free dynamics, so the grid dispatcher simulates
+    ONE benign representative per scenario and replicates its summary
+    row instead of re-scanning the same year F-benign times."""
+    return (~sampled.has_load_faults
+            & ~sampled.has_capacity_faults
+            & ~np.any(np.asarray(sampled.mask) != 0.0, axis=1))
+
+
 def expand_grid(sampled: SampledFaults, load_matrix: np.ndarray,
                 load_index: np.ndarray) -> FaultGrid:
     """Expand (load_matrix [K,T], load_index [N]) by F fault futures.

@@ -174,10 +174,16 @@ def policy_scan_agg(loads, params, onehot, dt_hours=1.0, *,
     NO [N, T] series materialized on either backend.
 
     Under ``use_pallas(True)`` this is the fused Pallas aggregate kernel
-    (``kernels/policy_scan.policy_grid_agg``: carry + aggregates resident
-    in VMEM scratch across time chunks); otherwise the pure-jnp lane
-    oracle ``ref.policy_grid_agg``. ``slo_limit`` / ``slo_mode`` are
-    static trace constants (``core.twin.AGG_SLO_*``; ``inf`` = no SLO).
+    (``kernels/policy_scan.policy_grid_agg``: carry + aggregates —
+    load-weighted latency histogram included, as compensated in-kernel
+    triples — resident in VMEM scratch across time chunks, tiled by
+    ``tile_plan``); otherwise the pure-jnp lane oracle
+    ``ref.policy_grid_agg``. Both return FINALIZED AGG_DIM rows
+    (histogram triples recombined in f64 by
+    ``core.twin.finalize_aggregate_x64``), bit-identical to the host
+    ``np_latency_histogram`` oracle — no host binning round-trip exists
+    on either path. ``slo_limit`` / ``slo_mode`` are static trace
+    constants (``core.twin.AGG_SLO_*``; ``inf`` = no SLO).
     Not differentiable on either path — calibration differentiates the
     series scan, which keeps the full trace a loss needs anyway.
 

@@ -20,19 +20,26 @@ path (``core.simulate._grid_scan``) runs it as vmap-of-scan with a
 
 On CPU this runs with ``interpret=True`` (tests, this container); the
 grid/BlockSpec structure is the TPU layout. ``chunk`` bounds VMEM: a
-(chunk x LANES) f32 block per operand/output — the default 546 splits the
-8736-hour year into 16 chunks (~280 KB per array at 128 lanes). Horizons
-the chunk doesn't divide fall back to a single chunk.
+(chunk x LANES) f32 block per operand/output. The (lanes, chunk) tile
+is derived from the device's VMEM budget by ``tile_plan`` (lanes pinned
+to the 128-wide VPU lane axis, chunk the largest divisor of the horizon
+whose double-buffered operand blocks plus the per-lane resident state
+fit the budget) rather than hard-coded year-shaped constants; the plan
+is pure integer arithmetic, so interpret mode on CPU asserts the exact
+tiles real silicon would get. Horizons an explicitly-passed chunk
+doesn't divide fall back to a single chunk.
 
 ``policy_grid_agg`` is the STREAMING-AGGREGATE variant of the same
 kernel (the O(N)-memory backend of ``simulate_grid(return_series=
 False)``): the Table II statistics — twice-compensated sums, per-bin
 max, SLO-ok counters and the quarter-octave load-weighted latency
 histogram (``core.twin.lane_update_aggregate``, masked compare-adds on
-the vector lanes) — ride in a second VMEM scratch block across time
-chunks, and the only HBM outputs are one [LANES, CARRY_DIM] carry row
-and one [LANES, AGG_DIM] aggregate row per scenario block. The five
-[N, T] series are never allocated.
+the vector lanes, each bucket a compensated (sum, comp, comp2) triple)
+— ride in a second VMEM scratch block across time chunks, and the only
+HBM outputs are one [LANES, CARRY_DIM] carry row and one
+[LANES, AGG_KDIM] kernel-row per scenario block (recombined to the
+public [N, AGG_DIM] layout by ``core.twin.finalize_aggregate``). The
+five [N, T] series are never allocated.
 
 Dispatch through ``kernels.ops.policy_scan`` / ``ops.policy_scan_agg``
 (the ``use_pallas`` / ``pallas_mode`` switch); the pure-jnp oracles are
@@ -48,8 +55,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-DEFAULT_LANES = 128   # scenario block on the vector lanes
-DEFAULT_CHUNK = 546   # 8736-hour year -> 16 time chunks
+#: VMEM budget the default tile plan targets: half of a 16 MB TPU core
+#: VMEM, leaving headroom for compiler spills and semaphores
+DEFAULT_VMEM_BYTES = 8 * 2**20
+#: hardware vector-lane width the scenario axis is tiled to
+LANE_WIDTH = 128
+#: operand streams a kernel instance may double-buffer (loads + the two
+#: fault streams, x2 for the pipelined next block)
+_MAX_STREAM_BUFFERS = 6
 
 
 def _vmem(shape, dtype):
@@ -59,6 +72,33 @@ def _vmem(shape, dtype):
 
 def _round_up(n: int, m: int) -> int:
     return -(-n // m) * m
+
+
+def tile_plan(t_bins: int, param_dim: int,
+              vmem_bytes: int = DEFAULT_VMEM_BYTES):
+    """(lanes, chunk) kernel tile for a ``t_bins``-hour horizon under a
+    VMEM budget — the device-spec-driven replacement for the old
+    year-shaped DEFAULT_LANES/DEFAULT_CHUNK constants.
+
+    Lanes are pinned to the 128-wide VPU lane axis (``_stage_operands``
+    still shrinks tiny grids below that); the time chunk is the largest
+    divisor of ``t_bins`` whose double-buffered [chunk, lanes] operand
+    blocks fit what the budget leaves after the per-lane resident state
+    (params + one-hot rows, the fault-extended carry scratch, and the
+    packed + unpacked aggregate kernel rows). Pure integer arithmetic —
+    no device queries — so interpret mode on CPU asserts the exact tiles
+    real silicon would get, and a chunk choice can never change results
+    (the scan carry and aggregate scratch persist across chunks, so any
+    divisor replays the identical per-bin op sequence)."""
+    from repro.core.twin import AGG_KDIM, CARRY_DIM, num_policies
+    t_bins = max(int(t_bins), 1)
+    lanes = LANE_WIDTH
+    slots = max(int(vmem_bytes), 0) // (4 * lanes)
+    resident = param_dim + num_policies() + (CARRY_DIM + 1) + 2 * AGG_KDIM
+    cap = max((slots - resident) // _MAX_STREAM_BUFFERS, 1)
+    chunk = next(d for d in range(min(cap, t_bins), 0, -1)
+                 if t_bins % d == 0)
+    return lanes, chunk
 
 
 def _policy_scan_kernel(loads_ref, params_ref, onehot_ref,
@@ -156,9 +196,9 @@ def _policy_agg_kernel(loads_ref, params_ref, onehot_ref,
     grid, but BOTH the policy carry and the Table II aggregate state live
     in VMEM scratch and persist across time chunks — no [chunk, LANES]
     output block exists at all, so HBM traffic is the loads in and one
-    [LANES, AGG_DIM] row out per scenario block. Inside the bin loop the
+    [LANES, AGG_KDIM] row out per scenario block. Inside the bin loop the
     aggregate state is the unpacked pytree (pure vector arithmetic); the
-    packed [LANES, AGG_DIM] form only exists at chunk boundaries, where
+    packed [LANES, AGG_KDIM] form only exists at chunk boundaries, where
     it round-trips through the scratch block."""
     c = pl.program_id(1)
     lanes = loads_ref.shape[1]
@@ -253,7 +293,7 @@ def _policy_agg_fault(loads_t: jnp.ndarray, caps_t: jnp.ndarray,
                       lanes: int, chunk: int, interpret: bool):
     """Fault twin of ``_policy_agg``: identical grid and output layout,
     plus the two [T, Npad] fault operand streams."""
-    from repro.core.twin import (AGG_DIM, CARRY_DIM,
+    from repro.core.twin import (AGG_KDIM, CARRY_DIM,
                                  fault_lane_policy_step,
                                  lane_update_aggregate, pack_aggregate,
                                  unpack_aggregate)
@@ -266,7 +306,7 @@ def _policy_agg_fault(loads_t: jnp.ndarray, caps_t: jnp.ndarray,
         update=lane_update_aggregate, pack=pack_aggregate,
         unpack=unpack_aggregate, dt=float(dt_hours),
         slo_limit=float(slo_limit), slo_mode=int(slo_mode), chunk=chunk,
-        num_chunks=nc, carry_dim=CARRY_DIM, agg_dim=AGG_DIM)
+        num_chunks=nc, carry_dim=CARRY_DIM, agg_dim=AGG_KDIM)
     stream = pl.BlockSpec((chunk, lanes), lambda i, c: (c, i))
     return pl.pallas_call(
         kernel,
@@ -278,12 +318,12 @@ def _policy_agg_fault(loads_t: jnp.ndarray, caps_t: jnp.ndarray,
         ],
         out_specs=[
             pl.BlockSpec((lanes, CARRY_DIM), lambda i, c: (i, 0)),
-            pl.BlockSpec((lanes, AGG_DIM), lambda i, c: (i, 0)),
+            pl.BlockSpec((lanes, AGG_KDIM), lambda i, c: (i, 0)),
         ],
         out_shape=[jax.ShapeDtypeStruct((npad, CARRY_DIM), jnp.float32),
-                   jax.ShapeDtypeStruct((npad, AGG_DIM), jnp.float32)],
+                   jax.ShapeDtypeStruct((npad, AGG_KDIM), jnp.float32)],
         scratch_shapes=[_vmem((lanes, CARRY_DIM + 1), jnp.float32),
-                        _vmem((lanes, AGG_DIM), jnp.float32)],
+                        _vmem((lanes, AGG_KDIM), jnp.float32)],
         interpret=interpret,
     )(loads_t, caps_t, fmask_t, params, onehot)
 
@@ -297,8 +337,8 @@ def _policy_agg(loads_t: jnp.ndarray, params: jnp.ndarray,
                 slo_mode: int, version: int, lanes: int, chunk: int,
                 interpret: bool):
     """Aggregate twin of ``_policy_scan``: same operand layout, O(N)
-    outputs (carry_end [Npad, CARRY_DIM], agg [Npad, AGG_DIM])."""
-    from repro.core.twin import (AGG_DIM, CARRY_DIM, lane_policy_step,
+    outputs (carry_end [Npad, CARRY_DIM], agg [Npad, AGG_KDIM])."""
+    from repro.core.twin import (AGG_KDIM, CARRY_DIM, lane_policy_step,
                                  lane_update_aggregate, pack_aggregate,
                                  unpack_aggregate)
     del version
@@ -310,7 +350,7 @@ def _policy_agg(loads_t: jnp.ndarray, params: jnp.ndarray,
         update=lane_update_aggregate, pack=pack_aggregate,
         unpack=unpack_aggregate, dt=float(dt_hours),
         slo_limit=float(slo_limit), slo_mode=int(slo_mode), chunk=chunk,
-        num_chunks=nc, carry_dim=CARRY_DIM, agg_dim=AGG_DIM)
+        num_chunks=nc, carry_dim=CARRY_DIM, agg_dim=AGG_KDIM)
     return pl.pallas_call(
         kernel,
         grid=(nb, nc),
@@ -321,24 +361,26 @@ def _policy_agg(loads_t: jnp.ndarray, params: jnp.ndarray,
         ],
         out_specs=[
             pl.BlockSpec((lanes, CARRY_DIM), lambda i, c: (i, 0)),
-            pl.BlockSpec((lanes, AGG_DIM), lambda i, c: (i, 0)),
+            pl.BlockSpec((lanes, AGG_KDIM), lambda i, c: (i, 0)),
         ],
         out_shape=[jax.ShapeDtypeStruct((npad, CARRY_DIM), jnp.float32),
-                   jax.ShapeDtypeStruct((npad, AGG_DIM), jnp.float32)],
+                   jax.ShapeDtypeStruct((npad, AGG_KDIM), jnp.float32)],
         scratch_shapes=[_vmem((lanes, CARRY_DIM), jnp.float32),
-                        _vmem((lanes, AGG_DIM), jnp.float32)],
+                        _vmem((lanes, AGG_KDIM), jnp.float32)],
         interpret=interpret,
     )(loads_t, params, onehot)
 
 
-def _stage_operands(loads, loads_t, lanes, chunk):
+def _stage_operands(loads, loads_t, lanes, chunk, param_dim):
     """Common operand staging for both wrappers: accepts EXACTLY one of
     ``loads`` [N, T] (scenario-major, the historical API — transposed and
     zero-padded into the kernel layout) or ``loads_t`` [T, N] (already
     scenario-minor: the grid engine's block gathers produce this layout
     directly, so handing it over skips the [N, T] transpose copy that
     used to dominate per-block staging — the PR 3/4 layout follow-on).
-    Returns (n, t_bins, npad, lanes, chunk, staged_loads_t)."""
+    ``lanes`` / ``chunk`` = None resolve through ``tile_plan`` for the
+    horizon at hand. Returns (n, t_bins, npad, lanes, chunk,
+    staged_loads_t)."""
     if (loads is None) == (loads_t is None):
         raise ValueError("pass exactly one of loads= ([N, T]) or "
                          "loads_t= ([T, N] scenario-minor)")
@@ -346,6 +388,10 @@ def _stage_operands(loads, loads_t, lanes, chunk):
         n, t_bins = loads.shape
     else:
         t_bins, n = loads_t.shape
+    if lanes is None or chunk is None:
+        plan = tile_plan(int(t_bins), int(param_dim))
+        lanes = plan[0] if lanes is None else lanes
+        chunk = plan[1] if chunk is None else chunk
     lanes = min(lanes, _round_up(max(n, 1), 8))
     npad = _round_up(max(n, 1), lanes)
     if t_bins % chunk:
@@ -381,9 +427,10 @@ def _stage_aux(aux, aux_t, t_bins: int, n: int, npad: int, what: str):
 def policy_grid_agg(loads: jnp.ndarray | None, params: jnp.ndarray,
                     onehot: jnp.ndarray, dt_hours: float = 1.0, *,
                     slo_limit: float = float("inf"), slo_mode: int = 0,
-                    lanes: int = DEFAULT_LANES, chunk: int = DEFAULT_CHUNK,
+                    lanes: int = None, chunk: int = None,
                     interpret: bool = True, loads_t=None, caps=None,
-                    fmask=None, caps_t=None, fmask_t=None):
+                    fmask=None, caps_t=None, fmask_t=None,
+                    finalize: bool = True):
     """Fused streaming-aggregate grid scan; semantics of
     ``ref.policy_grid_agg``. Same padding/transposition contract as
     ``policy_grid_scan``, but the only outputs are O(N): per-scenario
@@ -394,12 +441,15 @@ def policy_grid_agg(loads: jnp.ndarray | None, params: jnp.ndarray,
     in the kernel's scenario-minor layout. A fault schedule's capacity /
     in-fault streams ride along as ``caps``/``fmask`` (or the
     scenario-minor ``caps_t``/``fmask_t``) and select the fault kernel
-    variant (``_policy_agg_fault_kernel``). Returns
+    variant (``_policy_agg_fault_kernel``). ``finalize=False`` returns
+    the raw [N, AGG_KDIM] kernel rows (per-bucket compensated triples)
+    for drivers that recombine once at the end of a block loop
+    (``core.twin.finalize_aggregate_x64``). Returns
     (carry_end [N, CARRY_DIM], agg [N, AGG_DIM]).
     """
-    from repro.core.twin import registry_version
+    from repro.core.twin import finalize_aggregate_x64, registry_version
     n, t_bins, npad, lanes, chunk, loads_t = _stage_operands(
-        loads, loads_t, lanes, chunk)
+        loads, loads_t, lanes, chunk, params.shape[1])
     pad = lambda a: jnp.zeros((npad, a.shape[1]), jnp.float32).at[:n].set(  # noqa: E731
         jnp.asarray(a, jnp.float32))
     caps_t = _stage_aux(caps, caps_t, t_bins, n, npad, "caps")
@@ -412,18 +462,20 @@ def policy_grid_agg(loads: jnp.ndarray | None, params: jnp.ndarray,
             dt_hours=float(dt_hours), slo_limit=float(slo_limit),
             slo_mode=int(slo_mode), version=registry_version(),
             lanes=lanes, chunk=chunk, interpret=interpret)
-        return carry_end[:n], agg[:n]
-    carry_end, agg = _policy_agg(
-        loads_t, pad(params), pad(onehot), dt_hours=float(dt_hours),
-        slo_limit=float(slo_limit), slo_mode=int(slo_mode),
-        version=registry_version(), lanes=lanes, chunk=chunk,
-        interpret=interpret)
+    else:
+        carry_end, agg = _policy_agg(
+            loads_t, pad(params), pad(onehot), dt_hours=float(dt_hours),
+            slo_limit=float(slo_limit), slo_mode=int(slo_mode),
+            version=registry_version(), lanes=lanes, chunk=chunk,
+            interpret=interpret)
+    if finalize:
+        agg = finalize_aggregate_x64(agg)
     return carry_end[:n], agg[:n]
 
 
 def policy_grid_scan(loads: jnp.ndarray | None, params: jnp.ndarray,
                      onehot: jnp.ndarray, dt_hours: float = 1.0, *,
-                     lanes: int = DEFAULT_LANES, chunk: int = DEFAULT_CHUNK,
+                     lanes: int = None, chunk: int = None,
                      interpret: bool = True, loads_t=None):
     """Fused scenario-grid scan; same contract as ``ref.policy_grid_scan``.
 
@@ -438,7 +490,7 @@ def policy_grid_scan(loads: jnp.ndarray | None, params: jnp.ndarray,
     """
     from repro.core.twin import registry_version
     n, t_bins, npad, lanes, chunk, loads_t = _stage_operands(
-        loads, loads_t, lanes, chunk)
+        loads, loads_t, lanes, chunk, params.shape[1])
     pad = lambda a: jnp.zeros((npad, a.shape[1]), jnp.float32).at[:n].set(  # noqa: E731
         jnp.asarray(a, jnp.float32))
     proc, queue, lat, cost, drop, carry_end = _policy_scan(

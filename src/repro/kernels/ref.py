@@ -225,9 +225,13 @@ def policy_grid_agg(loads: jnp.ndarray, params: jnp.ndarray,
     A_FLTH/A_FOKH attribution counters, and the fault backlog residue
     folds into ``carry_end[:, 0]``.
 
-    Returns (carry_end [N, CARRY_DIM], agg [N, AGG_DIM]).
+    Returns (carry_end [N, CARRY_DIM], agg [N, AGG_DIM]) — the packed
+    kernel rows (compensated per-bucket histogram triples) are
+    recombined to the public AGG_DIM layout through
+    ``core.twin.finalize_aggregate_x64`` before returning.
     """
     from repro.core.twin import (CARRY_DIM, fault_lane_policy_step,
+                                 finalize_aggregate_x64,
                                  init_aggregate,  # late: avoid
                                  lane_branches, lane_policy_step,  # cycle
                                  lane_update_aggregate, pack_aggregate)
@@ -262,7 +266,7 @@ def policy_grid_agg(loads: jnp.ndarray, params: jnp.ndarray,
                         init_aggregate((n,))),
             (loads.T, caps.T, fmask.T))
         carry_end = carry_end.at[:, 0].add(fq_end)
-        return carry_end, pack_aggregate(agg)
+        return carry_end, finalize_aggregate_x64(pack_aggregate(agg))
 
     def bin_step(state, arrive):
         carry, agg = state
@@ -278,7 +282,7 @@ def policy_grid_agg(loads: jnp.ndarray, params: jnp.ndarray,
     (carry_end, agg), _ = jax.lax.scan(
         bin_step, (jnp.zeros((n, CARRY_DIM), jnp.float32),
                    init_aggregate((n,))), loads.T)
-    return carry_end, pack_aggregate(agg)
+    return carry_end, finalize_aggregate_x64(pack_aggregate(agg))
 
 
 def rwkv6_scan(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

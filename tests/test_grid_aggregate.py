@@ -179,8 +179,8 @@ def test_aggregate_pytree_has_no_series_axis():
             assert leaf.ndim <= 2 and leaf.size <= n * 8 * AGG_DIM
 
     # every aggregate backend's result contract is O(N): the XLA path
-    # (host-binned histogram), the jnp lane oracle, the Pallas kernel,
-    # and the chunked lax.map dispatch
+    # (device-resident histogram), the jnp lane oracle, the Pallas
+    # kernel, and the chunked lax.map dispatch
     assert_o_n(_grid_scan_agg(loads, jnp.asarray(params),
                               jnp.asarray(idx), registry_version(),
                               1.0, float("inf"), 0))

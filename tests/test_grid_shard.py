@@ -12,7 +12,9 @@ Acceptance contract of the scenario-axis sharding refactor:
 * ``_agg_block_plan`` produces policy-uniform blocks that cover each
   scenario exactly once, in stable per-policy order;
 * ``agg_auto_block`` derives the streamed block size from the horizon
-  length and dtype against the ~150 MB staging budget;
+  length, dtype, and staged-panel count against the ~150 MB budget —
+  the device-resident XLA path (``panels=0``) budgets its [B, chunk]
+  transients + aggregate rows, not a [B, T] panel it no longer stages;
 * replication fall-backs in ``distributed.sharding`` warn once, loudly.
 
 Multi-device cases need ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
@@ -81,20 +83,45 @@ def _grid_arrays(n, t_bins=T_MONTH):
 # ---------------------------------------------------------------------------
 
 def test_agg_auto_block_derives_from_horizon_and_budget():
+    from repro.core.simulate import _agg_time_chunk
+
+    # device-resident default (panels=0): the per-row working set is the
+    # scan pipeline's [B, chunk] transients (6 buffers) + the AGG_DIM
+    # aggregate row, NOT a [B, T] panel — year blocks grow past the old
+    # panel-bound 4480
     block = agg_auto_block(HOURS_PER_YEAR)
     assert block == AGG_AUTO_BLOCK
     assert block % 128 == 0
-    # the [B, T] staging panel fits the budget; one more lane group would
-    # overshoot it (i.e. the derivation is tight, not a fixed constant)
-    assert block * HOURS_PER_YEAR * 4 <= AGG_BLOCK_BUDGET_BYTES
-    assert (block + 128) * HOURS_PER_YEAR * 4 > AGG_BLOCK_BUDGET_BYTES
-    # wider dtypes halve the block; shorter horizons grow it
-    assert agg_auto_block(HOURS_PER_YEAR, dtype_bytes=8) <= block // 2 + 128
-    assert agg_auto_block(HOURS_PER_YEAR // 4) >= 4 * block - 512
+    per_row = (6 * _agg_time_chunk(HOURS_PER_YEAR) + 4 * AGG_DIM) * 4
+    assert block * per_row <= AGG_BLOCK_BUDGET_BYTES
+    assert (block + 128) * per_row > AGG_BLOCK_BUDGET_BYTES
+    assert block > agg_auto_block(HOURS_PER_YEAR, panels=1)
+
+    # panel-staging backends (Pallas) declare their panel count; one
+    # benign [B, T] panel fits the budget tight, and a chaos grid's
+    # three panels (loads_t + caps_t + fmask_t) shrink the block ~3x —
+    # the historical under-budgeting bug was counting only one
+    p1 = agg_auto_block(HOURS_PER_YEAR, panels=1)
+    assert p1 % 128 == 0
+    assert p1 * HOURS_PER_YEAR * 4 <= AGG_BLOCK_BUDGET_BYTES
+    assert (p1 + 128) * HOURS_PER_YEAR * 4 > AGG_BLOCK_BUDGET_BYTES
+    p3 = agg_auto_block(HOURS_PER_YEAR, panels=3)
+    assert p3 * HOURS_PER_YEAR * 4 * 3 <= AGG_BLOCK_BUDGET_BYTES
+    assert (p3 + 128) * HOURS_PER_YEAR * 4 * 3 > AGG_BLOCK_BUDGET_BYTES
+
+    # wider dtypes halve the panel block; shorter horizons grow it
+    assert agg_auto_block(HOURS_PER_YEAR, dtype_bytes=8,
+                          panels=1) <= p1 // 2 + 128
+    assert agg_auto_block(HOURS_PER_YEAR // 4, panels=1) >= 4 * p1 - 512
     # clamps: calibration-length horizons cap at 65536 lanes, pathological
     # horizons never chunk below one lane group
-    assert agg_auto_block(1) == 65536
-    assert agg_auto_block(10 ** 9) == 128
+    assert agg_auto_block(1, panels=1) == 65536
+    assert agg_auto_block(10 ** 9, panels=1) == 128
+    # panel-free blocks stop scaling with the horizon once the time
+    # chunking caps the transient width — a pathological horizon still
+    # streams thousands of scenarios per block instead of 128
+    assert agg_auto_block(10 ** 9) == agg_auto_block(10 ** 6)
+    assert 128 <= agg_auto_block(1) <= 65536
 
 
 # ---------------------------------------------------------------------------
@@ -132,6 +159,8 @@ def test_agg_block_plan_empty_grid():
 # ---------------------------------------------------------------------------
 
 def test_sharded_round_step_matches_uniform_scan_one_device():
+    from jax.experimental import enable_x64
+
     block = 8
     _, matrix, index, params, _ = _grid_arrays(block)
     lidx = index.astype(np.int32)
@@ -139,15 +168,18 @@ def test_sharded_round_step_matches_uniform_scan_one_device():
                       (block, 1)).astype(np.float32)
     fn = _sharded_agg_fn(1, registry_version(), 1.0, float("inf"), 0,
                          "xla", True, block)
-    carry, scalars, panel = fn(jnp.asarray(matrix), jnp.asarray(lidx[None]),
-                               jnp.asarray(p_block[None]),
-                               jnp.asarray([0], np.int32))
-    ref_c, ref_s, ref_p = _agg_scan_uniform(
-        jnp.asarray(matrix[lidx]), jnp.asarray(p_block), 0, 1.0,
-        float("inf"), 0)
+    # the round step keeps the histogram in-body and traces f64; every
+    # call site enters under enable_x64 (see _run_blocks_sharded)
+    with enable_x64():
+        carry, agg = fn(jnp.asarray(matrix), jnp.asarray(lidx[None]),
+                        jnp.asarray(p_block[None]),
+                        jnp.asarray([0], np.int32))
+        ref_c, ref_a = _agg_scan_uniform(
+            jnp.asarray(matrix), jnp.asarray(lidx), jnp.asarray(p_block),
+            0, 1.0, float("inf"), 0)
+    assert np.asarray(agg).shape == (1, block, AGG_DIM)  # no [B, T] output
     np.testing.assert_array_equal(np.asarray(carry[0]), np.asarray(ref_c))
-    np.testing.assert_array_equal(np.asarray(scalars[0]), np.asarray(ref_s))
-    np.testing.assert_array_equal(np.asarray(panel[0]), np.asarray(ref_p))
+    np.testing.assert_array_equal(np.asarray(agg[0]), np.asarray(ref_a))
 
 
 # ---------------------------------------------------------------------------
