@@ -21,6 +21,10 @@
 #   make search-bench      one-dispatch K-restart policy search vs serial
 #                          loop + vs exhaustive 4096-point grid
 #                          (writes BENCH_search.json)
+#   make search-bench-stream  streamed vs materialized chance-constrained
+#                          grad step at 1024 lanes x 8736 bins — wall
+#                          clock + peak temp bytes (merges a "stream"
+#                          key into BENCH_search.json)
 #   make faults-bench      chaos-suite overhead — fault-perturbed vs
 #                          benign aggregate grids at 1024/65536 full-year
 #                          rows, 4 futures/base (writes BENCH_faults.json)
@@ -30,7 +34,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-deps bench bench-grid grid-bench-pallas \
         grid-bench-stream grid-bench-shard grid-bench-device \
-        calibrate-bench search-bench faults-bench
+        calibrate-bench search-bench search-bench-stream faults-bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -61,6 +65,9 @@ calibrate-bench:
 
 search-bench:
 	$(PYTHON) -m benchmarks.run search
+
+search-bench-stream:
+	$(PYTHON) -m benchmarks.run search-stream
 
 faults-bench:
 	$(PYTHON) -m benchmarks.run faults

@@ -27,7 +27,11 @@ plus an all-distinct control row, vs the PR 6 host-binned baseline
 ``grid-shard``) — and the policy-search
 benchmark ``search`` — one-dispatch K-restart search vs a serial loop,
 and search vs the exhaustive 4096-point grid
-(writes BENCH_search.json).
+(writes BENCH_search.json) — plus ``search-stream`` — one
+chance-constrained ``value_and_grad`` step at frontier scale (1024
+lanes x 8736 bins), streamed in-carry objective vs
+materialize-then-reduce, wall clock and peak temp bytes (merges a
+"stream" key into BENCH_search.json).
 """
 from __future__ import annotations
 
@@ -81,6 +85,9 @@ TABLES = {
                                  fromlist=["main"]).main(),
     "search": lambda: __import__("benchmarks.search_bench",
                                  fromlist=["main"]).main(),
+    "search-stream": lambda: __import__(
+        "benchmarks.search_bench",
+        fromlist=["main_stream"]).main_stream(),
     "roofline": lambda: __import__("benchmarks.roofline_bench",
                                    fromlist=["main"]).main(),
 }

@@ -13,10 +13,18 @@ planning at +40% traffic under a 2h/95% latency SLO):
   4096-point factorial sweep, comparing wall-clock AND answer quality
   (annual cost of the best feasible configuration found by each).
 
+``main_stream`` adds the streaming-objective rows: ONE
+``value_and_grad`` step of the chance-constrained lane objective at
+frontier scale (K=8 restarts x S=4 traffics x F=32 fault futures =
+1024 lanes, T=8736 hourly bins), streamed in-carry fold vs
+materialize-then-reduce — wall clock and the compiled program's peak
+temp bytes (``memory_analysis``), same numbers both ways.
+
 Writes ``BENCH_search.json`` and emits the harness CSV rows.
 
   PYTHONPATH=src python benchmarks/search_bench.py
   PYTHONPATH=src python -m benchmarks.run search
+  PYTHONPATH=src python -m benchmarks.run search-stream
 """
 from __future__ import annotations
 
@@ -110,6 +118,109 @@ def bench() -> Dict:
             "search_beats_grid": bool(full.cost_usd <= grid_cost),
         },
     }
+
+
+STREAM_K, STREAM_S, STREAM_F, STREAM_T = 8, 4, 32, 8736
+
+
+def _peak_temp_bytes(jitted, *operands):
+    """Compiled-program peak temp allocation, or None where the backend
+    has no ``memory_analysis`` (e.g. older CPU plugins)."""
+    try:
+        mem = jitted.lower(*operands).compile().memory_analysis()
+        return int(mem.temp_size_in_bytes)
+    except Exception:       # noqa: BLE001 — a missing stat is not a fail
+        return None
+
+
+def bench_stream() -> Dict:
+    from repro import faults
+    from repro.core.twin import AGG_SLO_LATENCY
+    from repro.search.objective import lane_objective
+
+    space, traffic, slo = _problem()
+    k, s, f, t = STREAM_K, STREAM_S, STREAM_F, STREAM_T
+    lanes = k * s * f
+    rng = np.random.default_rng(0)
+
+    hl = traffic.hourly_loads()[:t].astype(np.float32)
+    loads = np.stack([hl * (0.8 + 0.2 * i) for i in range(s)])  # [S, T]
+    loads_block = np.tile(np.repeat(loads, f, axis=0), (k, 1))  # [L, T]
+    sched = faults.FaultSchedule(
+        specs=(faults.outage(rate_per_year=20),
+               faults.disconnect(disconnect_frac=(0.2, 0.5))),
+        n_futures=f, seed=7)
+    caps = np.asarray(faults.sample_futures(sched, t, 1.0).cap,
+                      np.float32)                               # [F, T]
+    caps_block = np.tile(caps, (k * s, 1))                      # [L, T]
+    base = space.base
+    params = np.tile(base.padded_params().astype(np.float32), (lanes, 1))
+    params = (params * rng.uniform(0.9, 1.1, params.shape)) \
+        .astype(np.float32)
+    slo_lane = np.full((lanes,), float(slo.limit_s), np.float32)
+    args = (1.0, np.int32(base.policy_index), slo_lane,
+            AGG_SLO_LATENCY, float(slo.met_fraction), 100.0, 50.0, 1.2)
+
+    params, loads_block, caps_block = map(
+        jax.numpy.asarray, (params, loads_block, caps_block))
+
+    def one_step(stream):
+        def loss(p):
+            return lane_objective(p, loads_block, *args,
+                                  caps_block=caps_block,
+                                  stream=stream)[0].sum()
+        return jax.jit(jax.value_and_grad(loss))
+
+    rows = []
+    for name, stream in (("streamed", True), ("materialized", False)):
+        fn = one_step(stream)
+        peak = _peak_temp_bytes(fn, params)
+        v, g = jax.block_until_ready(fn(params))                # compile
+        times = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            v, g = jax.block_until_ready(fn(params))
+            times.append(time.perf_counter() - t0)
+        rows.append({"path": name, "grad_step_s": round(min(times), 3),
+                     "peak_temp_mb": (round(peak / 2**20, 1)
+                                      if peak is not None else None),
+                     "objective_sum": float(v),
+                     "grad_l2": round(float(
+                         jax.numpy.linalg.norm(g)), 3)})
+    st, mt = rows
+    return {
+        "device": jax.devices()[0].platform,
+        "lanes": lanes, "t_bins": t,
+        "restarts": k, "traffics": s, "fault_futures": f,
+        "rows": rows,
+        "speedup": round(mt["grad_step_s"] / st["grad_step_s"], 2),
+        "peak_temp_ratio": (round(mt["peak_temp_mb"]
+                                  / max(st["peak_temp_mb"], 0.1), 1)
+                            if None not in (st["peak_temp_mb"],
+                                            mt["peak_temp_mb"])
+                            else None),
+    }
+
+
+def main_stream() -> List[str]:
+    r = bench_stream()
+    merged = {}
+    if os.path.exists(OUT_JSON):
+        with open(OUT_JSON) as f:
+            merged = json.load(f)
+    merged["stream"] = r
+    with open(OUT_JSON, "w") as f:
+        json.dump(merged, f, indent=2, sort_keys=True)
+    lines = []
+    for row in r["rows"]:
+        lines.append(f"search/stream_{row['path']},"
+                     f"{row['grad_step_s'] * 1e6:.0f},"
+                     f"peak_temp_mb={row['peak_temp_mb']};"
+                     f"lanes={r['lanes']};t={r['t_bins']}")
+    lines.append(f"search/stream_speedup,0,"
+                 f"x{r['speedup']}-wall;"
+                 f"peak_ratio={r['peak_temp_ratio']};json={OUT_JSON}")
+    return lines
 
 
 def main() -> List[str]:

@@ -8,14 +8,18 @@ takes the [K, PARAM_DIM] stack of unconstrained starts and runs
 
     lax.scan over steps of  grad(lane-block loss-of-scan)  +  vmap(AdamW)
 
-where the lane-block loss broadcasts the trace across K lanes and scans
-them all with the branchless lane-vectorized policy step through the
-shared backend selection (``kernels.ops.policy_scan``; the gradient pins
-its differentiable jnp path — the Pallas kernel has no VJP). A 32-restart
+where the lane-block loss STREAMS: the running flow sums and compensated
+residual accumulators ride the simulation scan's carry
+(``objective.lane_series_loss`` -> ``kernels.ops.policy_scan_fold``), so
+neither direction of the gradient ever materializes a [K, T] series —
+the backward is the checkpointed O(sqrt(T)) custom VJP. A 32-restart
 fit costs one compile and one device program, the same grid trick
 ``core.simulate`` plays for what-if scenarios. The optimizer is the
 existing ``repro.optim`` AdamW (warmup + cosine, global-norm clip),
 vmapped so each restart clips and schedules independently.
+``fit(devices=D)`` shards the restart axis over a D-device mesh,
+matching the single-device dispatch to a few ulps (see
+``_sharded_fit_fn``).
 
 The public surface:
 
@@ -48,6 +52,7 @@ from repro.calibrate.trace import ObservedTrace, SERIES_KEYS
 from repro.config import OptimizerConfig
 from repro.core.twin import (PARAM_DIM, Twin, fit_twin, policy_spec,
                              registry_version)
+from repro.distributed.sharding import resolve_mesh_axis
 from repro.optim.adamw import adamw_update, init_opt_state
 
 #: AdamW settings tuned for the z-space objective: no weight decay (z=0 is
@@ -101,24 +106,32 @@ class FitResult:
         return rows
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
-def _fit_kernel(steps: int, dt_hours: float, version: int,
-                ocfg: OptimizerConfig, z0, arrivals, targets, scales,
-                weights, lo, hi, log_mask, free_mask, fixed, policy_index):
+def _fit_kernel_body(steps: int, dt_hours: float, version: int,
+                     ocfg: OptimizerConfig, z0, arrivals, targets, scales,
+                     weights, lo, hi, log_mask, free_mask, fixed,
+                     policy_index):
     """K restarts, one dispatch: scan(grad(lane-block loss) + vmap(AdamW)).
 
     The restarts are K lanes of the shared grid backend: the loss plays
-    the whole [K, PARAM_DIM] stack through ONE lane-vectorized scan
-    (``objective.lane_trace_loss`` -> ``kernels.ops.policy_scan``; the
-    traced ``policy_index`` switches in a single lane branch, so one jit
-    trace serves every policy without paying the P-way blend), and grad
-    of the summed per-lane losses recovers each restart's gradient
-    exactly (the lanes are independent). AdamW stays vmapped so every
-    restart clips and schedules on its own.
+    the whole [K, PARAM_DIM] stack through ONE lane-vectorized streaming
+    scan (``objective.lane_trace_loss`` -> ``kernels.ops.
+    policy_scan_fold``; the traced ``policy_index`` switches in a single
+    lane branch, so one jit trace serves every policy without paying the
+    P-way blend), and grad of the summed per-lane losses recovers each
+    restart's gradient exactly (the lanes are independent). AdamW stays
+    vmapped so every restart clips and schedules on its own.
 
     ``steps``/``dt_hours``/``ocfg`` are static; ``version`` is the policy
     registry version so late registrations retrace (same contract as the
-    grid kernel). Returns (z_final [K,D], final_loss [K], history [steps,K]).
+    grid kernel). Returns (z_best [K,D], best_loss [K], history
+    [steps,K]) — the BEST-SEEN iterate per restart, not the endpoint:
+    each step's in-loop loss evaluation (which the gradient needs
+    anyway, so tracking it is free — the kernel never pays a separate
+    full-horizon forward) updates a running per-restart argmin in the
+    scan carry. Descent through the near-degenerate valleys these
+    objectives develop (a fast-``max_rps``/slow-``scale_up_hours`` twin
+    imitates its transpose) is not monotone, so the lowest-loss z along
+    the trajectory beats wherever the cosine tail happened to freeze.
     """
     def losses(z):
         return lane_trace_loss(z, arrivals, targets, scales, weights,
@@ -131,22 +144,61 @@ def _fit_kernel(steps: int, dt_hours: float, version: int,
 
     vgrad = jax.value_and_grad(summed, has_aux=True)
     opt0 = jax.vmap(lambda z: init_opt_state({"z": z}, ocfg))(z0)
+    best0 = jnp.full((z0.shape[0],), jnp.inf, jnp.float32)
 
     def one_step(carry, _):
-        z, opt = carry
+        z, opt, z_best, best = carry
         (_, loss), g = vgrad(z)
+        better = loss < best
+        z_best = jnp.where(better[:, None], z, z_best)
+        best = jnp.where(better, loss, best)
 
         def upd(zk, gk, ok):
             new_p, new_o = adamw_update({"z": zk}, {"z": gk}, ok, ocfg)
             return new_p["z"], new_o
 
         z2, opt2 = jax.vmap(upd)(z, g, opt)
-        return (z2, opt2), loss
+        return (z2, opt2, z_best, best), loss
 
-    (z_fin, _), history = jax.lax.scan(one_step, (z0, opt0), None,
-                                       length=steps)
-    final_loss = losses(z_fin)
-    return z_fin, final_loss, history
+    (_, _, z_best, best_loss), history = jax.lax.scan(
+        one_step, (z0, opt0, z0, best0), None, length=steps)
+    return z_best, best_loss, history
+
+
+_fit_kernel = functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))(
+    _fit_kernel_body)
+
+
+@functools.lru_cache(maxsize=16)
+def _sharded_fit_fn(devices: int, steps: int, dt_hours: float, version: int,
+                    ocfg: OptimizerConfig):
+    """Build (and cache) the restart-sharded fit kernel for a D-device
+    mesh. Restarts are fully independent lanes — per-restart losses,
+    per-restart AdamW — so sharding the leading axis changes nothing
+    about any lane's arithmetic. On CPU the results may still drift a
+    few ulps from the unsharded kernel: XLA's SPMD recompilation can
+    contract the loss backward's fused log-residual mul+add chains
+    differently at narrow shards (baking the replicated trace operands
+    in as jaxpr constants restores bitwise equality, but would force a
+    recompile per trace). Parity is pinned at rtol=2e-6 in
+    tests/test_stream_objectives.py."""
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.distributed.sharding import shard_map
+
+    mesh = Mesh(np.asarray(jax.devices()[:devices]), ("restart",))
+    shard, rep = P("restart"), P()
+
+    def body(z0, arrivals, targets, scales, weights, lo, hi, log_mask,
+             free_mask, fixed, policy_index):
+        return _fit_kernel_body(steps, dt_hours, version, ocfg, z0,
+                                arrivals, targets, scales, weights, lo, hi,
+                                log_mask, free_mask, fixed, policy_index)
+
+    in_specs = (shard,) + (rep,) * 10
+    out_specs = (shard, shard, P(None, "restart"))
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False))
 
 
 def _as_operands(trace: ObservedTrace, weights: Optional[Dict[str, float]]):
@@ -167,13 +219,28 @@ def fit(trace: ObservedTrace, policy: str = "fifo", *,
         fixed_values: Optional[Dict[str, float]] = None,
         weights: Optional[Dict[str, float]] = None,
         opt: Optional[OptimizerConfig] = None,
-        name: Optional[str] = None) -> FitResult:
+        name: Optional[str] = None,
+        devices: Optional[int] = None) -> FitResult:
     """Fit ``policy``'s parameter vector to ``trace`` by gradient descent
     through the simulation scan, from ``restarts`` random starts at once.
 
     Start 0 is deterministic: the ``init`` twin's parameters if given,
     else the middle of every parameter box; the rest are Gaussian in
     z-space (i.e. spread across the boxes through the sigmoid bijection).
+
+    Scaling the fit
+    ---------------
+    The loss streams: its flow cumsums and residual accumulators ride the
+    simulation scan's carry and the backward pass is the checkpointed
+    O(sqrt(T)) VJP, so fitting a long trace holds O(K * sqrt(T)) live
+    values instead of O(K * T) series. ``devices=D`` additionally shards
+    the K restarts over a D-device mesh (restarts are independent lanes;
+    the sharded fit matches the single-device one to a few ulps — see
+    ``_sharded_fit_fn`` on why CPU SPMD recompilation keeps it from
+    being bitwise); when
+    K doesn't divide D the fit warns once and falls back to replication.
+    On CPU, export ``XLA_FLAGS=--xla_force_host_platform_device_count=D``
+    before the first jax import to get D devices.
     """
     spec = fit_spec(policy, freeze=freeze, unfreeze=unfreeze,
                     fixed_values=fixed_values, init=init)
@@ -199,12 +266,18 @@ def fit(trace: ObservedTrace, policy: str = "fifo", *,
         z0[0] = 0.0          # mid-box start
 
     ocfg = dataclasses.replace(opt or DEFAULT_FIT_OPT, total_steps=steps)
-    z_fin, final_loss, history = _fit_kernel(
-        int(steps), float(trace.bin_hours), registry_version(), ocfg,
-        jnp.asarray(z0), arrivals, targets, scales, w,
-        jnp.asarray(spec.lo), jnp.asarray(spec.hi),
-        jnp.asarray(spec.log_mask), jnp.asarray(spec.free_mask),
-        jnp.asarray(spec.fixed), jnp.int32(policy_spec(policy).index))
+    statics = (int(steps), float(trace.bin_hours), registry_version(), ocfg)
+    operands = (jnp.asarray(z0), arrivals, targets, scales, w,
+                jnp.asarray(spec.lo), jnp.asarray(spec.hi),
+                jnp.asarray(spec.log_mask), jnp.asarray(spec.free_mask),
+                jnp.asarray(spec.fixed),
+                jnp.int32(policy_spec(policy).index))
+    d = resolve_mesh_axis(devices, int(restarts),
+                          "fit(devices=) restart mesh")
+    if d is None:
+        z_fin, final_loss, history = _fit_kernel(*statics, *operands)
+    else:
+        z_fin, final_loss, history = _sharded_fit_fn(d, *statics)(*operands)
 
     z_fin = np.asarray(z_fin)
     final_loss = np.asarray(final_loss, np.float64)
@@ -252,7 +325,8 @@ def fit_with_holdout(train: ObservedTrace, holdout: ObservedTrace,
                      policy: str = "fifo", **fit_kwargs) -> FitResult:
     """Fit on one trace, validate on another (the measure-on-ramp /
     validate-on-steady workflow): the returned FitResult carries the
-    holdout loss and the generalization gap."""
+    holdout loss and the generalization gap. Extra kwargs — ``devices=D``
+    included — forward to ``fit``."""
     result = fit(train, policy, **fit_kwargs)
     result.holdout_loss = evaluate(
         result.twin, holdout, weights=fit_kwargs.get("weights"))
@@ -269,7 +343,8 @@ def calibrated_twin(source: Union[ObservedTrace, "ExperimentResult"],
     ``source`` is an ``ExperimentResult`` (binned into a trace at
     ``bin_s``-second resolution, with the paper's closed-form fit as the
     warm start) or a prebuilt ``ObservedTrace``. Extra kwargs forward to
-    ``fit``. Use ``fit()`` directly when you want the convergence table.
+    ``fit`` (``devices=D`` shards the restarts over a device mesh). Use
+    ``fit()`` directly when you want the convergence table.
     """
     if isinstance(source, ObservedTrace):
         trace = source

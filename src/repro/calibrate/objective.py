@@ -18,8 +18,13 @@ take fixed values, so the gradient never touches them.
 ``lax.scan`` the what-if simulator uses (``core.simulate.scan_trace``)
 and scores the simulated throughput / latency / drop / cost series
 against an ``ObservedTrace`` with a weighted, per-series-normalized MSE.
-Everything here is pure JAX: ``repro.calibrate.fit`` wraps it in
-``vmap(grad(...))`` and jits once for all restarts.
+The lane-block form the optimizer compiles (``lane_series_loss``)
+streams that score: running flow sums and compensated residual
+accumulators fold into the simulation scan's carry
+(``kernels.ops.policy_scan_fold``), so neither the forward nor the
+checkpointed O(sqrt(T)) backward materializes a [K, T] series.
+Everything here is pure JAX: ``repro.calibrate.fit`` takes grad of the
+summed per-lane losses and jits once for all restarts.
 """
 from __future__ import annotations
 
@@ -32,7 +37,9 @@ import numpy as np
 
 from repro.calibrate.trace import SERIES_KEYS
 from repro.core.simulate import scan_trace
-from repro.core.twin import PARAM_DIM, Twin, policy_spec
+from repro.core.twin import (PARAM_DIM, Twin, fold_triple_add,
+                             fold_triple_finalize, fold_triple_init,
+                             policy_spec)
 
 #: default loss mix: throughput and latency curves carry most signal; the
 #: drop curve pins bounded-queue policies; cost identifies $/hr parameters
@@ -209,50 +216,128 @@ def trace_loss(z, arrivals, targets, scales, weights, policy_index, dt_hours,
 # ---------------------------------------------------------------------------
 # the lane-block loss — K restarts as K lanes of the shared grid backend
 # ---------------------------------------------------------------------------
+#
+# The streamed form folds the loss INTO the simulation scan: the fold
+# carries each lane's running flow sums (the cumulative-staircase match
+# needs exactly the prefix up to the current bin, nothing older) and one
+# twice-compensated residual triple per series. Both the streamed and the
+# materialized paths run the SAME module-level fold functions below over
+# the same per-bin rows, so the loss is bit-identical between them by
+# construction — the fold functions are module-level because they key the
+# kernel's trace caches (``kernels.ops.policy_scan_fold``).
+
+def _cal_fold_init(n):
+    """Per-lane accumulator: 3 running flow sums (processed / dropped /
+    cost — plain f32 adds, shared verbatim by both paths) + 4 compensated
+    squared-log-ratio triples, one per SERIES_KEYS entry."""
+    z = jnp.zeros((n,), jnp.float32)
+    return (z, z, z, fold_triple_init((n,)), fold_triple_init((n,)),
+            fold_triple_init((n,)), fold_triple_init((n,)))
+
+
+def _cal_fold(acc, arrive, outs, ops_lane, xs_row):
+    """One bin of the calibration loss: advance the flow cumsums, score
+    this bin's log-ratio residual per series against the precomputed
+    target row (``xs_row``), accumulate r^2 into the triples. ``ops_lane``
+    carries the per-series eps floors (six decades below each series'
+    magnitude — see ``series_loss``)."""
+    del arrive
+    cum_p, cum_d, cum_c, t_p, t_l, t_d, t_c = acc
+    proc, _queue, lat, cost, drop = outs
+    eps_p, eps_l, eps_d, eps_c = ops_lane
+    tgt_p, tgt_l, tgt_d, tgt_c = xs_row
+    cum_p = cum_p + proc
+    cum_d = cum_d + drop
+    cum_c = cum_c + cost
+    r_p = jnp.log((cum_p + eps_p) / (tgt_p + eps_p))
+    r_l = jnp.log((lat + eps_l) / (tgt_l + eps_l))
+    r_d = jnp.log((cum_d + eps_d) / (tgt_d + eps_d))
+    r_c = jnp.log((cum_c + eps_c) / (tgt_c + eps_c))
+    return (cum_p, cum_d, cum_c,
+            fold_triple_add(t_p, r_p * r_p), fold_triple_add(t_l, r_l * r_l),
+            fold_triple_add(t_d, r_d * r_d), fold_triple_add(t_c, r_c * r_c))
+
+
+def _cal_operands(targets, scales):
+    """Target-side per-bin rows (flow cumsums + per-bin latency) and the
+    per-series eps floors — computed ONCE outside the scan and fed to
+    both the streamed and the materialized path, so how the target
+    staircase was built can never split them."""
+    tgt_p = jnp.cumsum(targets["processed"])
+    tgt_d = jnp.cumsum(targets["dropped"])
+    tgt_c = jnp.cumsum(targets["cost"])
+    xs = (tgt_p, targets["latency"], tgt_d, tgt_c)
+    eps = (tgt_p[-1] * 1e-6 + 1e-12, scales["latency"] * 1e-6 + 1e-12,
+           tgt_d[-1] * 1e-6 + 1e-12, tgt_c[-1] * 1e-6 + 1e-12)
+    return xs, eps
+
+
+def _cal_combine(acc, weights, t_bins):
+    """Finalize the 4 triples -> per-series means -> weighted total, in
+    SERIES_KEYS order (both paths share this code)."""
+    _cum_p, _cum_d, _cum_c, t_p, t_l, t_d, t_c = acc
+    total = jnp.zeros(())
+    for key, triple in zip(SERIES_KEYS, (t_p, t_l, t_d, t_c)):
+        total = total + weights[key] * (fold_triple_finalize(triple) / t_bins)
+    return total
+
 
 def lane_series_loss(params_block, arrivals, targets, scales, weights,
-                     policy_index, dt_hours):
+                     policy_index, dt_hours, stream: bool = True):
     """[K] per-restart losses for a [K, PARAM_DIM] block of candidates.
 
     The K restarts are just K more lanes of the scenario-grid scan: the
     trace's arrivals broadcast across the lane block and the whole stack
-    runs through the shared backend selection (``kernels.ops.
-    policy_scan``) exactly like a what-if grid — with
-    ``differentiable=True`` pinning the pure-jnp lane path, since the
-    Pallas kernel has no VJP and ``fit`` takes grad through this. All
-    restarts share one policy, so ``policy_index`` (a traced scalar; one
-    jit trace serves every policy) selects a single lane branch via
-    ``lax.switch`` — no P-way masked blend in the optimizer hot loop.
-    Same log-ratio / cumulative-flow scoring as ``series_loss``,
-    vectorized over lanes.
+    runs through the shared gradient backend. All restarts share one
+    policy, so ``policy_index`` (a traced scalar; one jit trace serves
+    every policy) selects a single lane branch via ``lax.switch`` — no
+    P-way masked blend in the optimizer hot loop. Same log-ratio /
+    cumulative-flow scoring as ``series_loss``, vectorized over lanes.
+
+    ``stream=True`` (the default, and what ``fit`` compiles) folds the
+    running flow sums and the residual accumulators into the scan carry
+    via ``kernels.ops.policy_scan_fold``, so neither the forward value
+    nor the checkpointed O(sqrt(T)) backward ever holds a [K, T] series.
+    ``stream=False`` materializes the five series through
+    ``kernels.ops.policy_scan`` and replays the SAME fold over them —
+    the O(T)-memory reference the parity tests pin the stream against,
+    bit for bit.
     """
     from repro.kernels import ops    # late: keep calibrate importable
     k = params_block.shape[0]        # without the kernels package loaded
+    arrivals = jnp.asarray(arrivals, jnp.float32)
+    t_bins = arrivals.shape[-1]
+    xs, eps = _cal_operands(targets, scales)
+    if stream:
+        loads_t = jnp.broadcast_to(arrivals[:, None], (t_bins, k))
+        _, acc = ops.policy_scan_fold(
+            params=params_block, dt_hours=dt_hours,
+            policy_index=policy_index, loads_t=loads_t,
+            fold_init=_cal_fold_init, fold_step=_cal_fold,
+            ops_lane=eps, xs=xs)
+        return _cal_combine(acc, weights, t_bins)
     loads = jnp.broadcast_to(arrivals, (k,) + arrivals.shape)
-    _, (proc, _queue, lat, cost, drop) = ops.policy_scan(
+    _, outs = ops.policy_scan(
         loads, params_block, dt_hours=dt_hours, policy_index=policy_index,
         differentiable=True)
-    sim = {"processed": proc, "latency": lat, "dropped": drop, "cost": cost}
-    total = jnp.zeros((k,))
-    for key in SERIES_KEYS:
-        s, t = sim[key], targets[key]
-        if key != "latency":            # flow series: match the running sum
-            s, t = jnp.cumsum(s, axis=1), jnp.cumsum(t)
-            eps = t[-1] * 1e-6 + 1e-12
-        else:
-            eps = scales[key] * 1e-6 + 1e-12
-        r = jnp.log((s + eps) / (t[None, :] + eps))
-        total = total + weights[key] * jnp.mean(r * r, axis=1)
-    return total
+    outs_t = tuple(s.T for s in outs)      # [T, K] rows for the shared fold
+
+    def scan_fold(acc, row):
+        loads_row, outs_row, xs_row = row
+        return _cal_fold(acc, loads_row, outs_row, eps, xs_row), None
+
+    acc, _ = jax.lax.scan(scan_fold, _cal_fold_init(k),
+                          (arrivals, outs_t, xs))
+    return _cal_combine(acc, weights, t_bins)
 
 
 def lane_trace_loss(z_block, arrivals, targets, scales, weights,
                     policy_index, dt_hours, lo, hi, log_mask, free_mask,
-                    fixed):
+                    fixed, stream: bool = True):
     """``trace_loss`` over a [K, PARAM_DIM] restart block: reparameterize
     every lane, then score the block through the shared lane backend."""
     p = jax.vmap(
         lambda z: params_from_z(z, lo, hi, log_mask, free_mask, fixed)
     )(z_block)
     return lane_series_loss(p, arrivals, targets, scales, weights,
-                            policy_index, dt_hours)
+                            policy_index, dt_hours, stream=stream)

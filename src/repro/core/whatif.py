@@ -94,7 +94,8 @@ def calibrated_grid(source, policies: Sequence[str],
 
     ``source`` is an ``ExperimentResult`` or an
     ``repro.calibrate.ObservedTrace``; one twin is calibrated per entry of
-    ``policies`` (extra kwargs forward to ``repro.calibrate.fit``), then
+    ``policies`` (extra kwargs forward to ``repro.calibrate.fit`` —
+    ``devices=D`` shards each fit's restarts over a device mesh), then
     the whole (traffic x fitted twin) grid runs as a single vmapped scan.
     """
     from repro.calibrate import calibrated_twin   # late: calibrate sits
@@ -120,8 +121,10 @@ def optimize_scenario(base: Twin, traffics, slo: Optional[SLO] = None,
     names the free parameters (default: the policy's extras, or priced
     capacity for extra-less policies); ``bounds``/``tie`` refine the
     space; remaining kwargs forward to ``repro.search.search`` (restarts,
-    steps, coarsen, ...). Returns a ``repro.search.SearchResult`` whose
-    ``.twin`` drops straight into ``run_grid`` / ``table2_rows``.
+    steps, coarsen, ..., and ``devices=D`` to shard the restart axis over
+    a device mesh — see "Scaling the search" there). Returns a
+    ``repro.search.SearchResult`` whose ``.twin`` drops straight into
+    ``run_grid`` / ``table2_rows``.
 
     Pass ``faults=`` (a ``repro.faults.FaultSchedule``) and
     ``quantile=`` for the chance-constrained resilience variant: the

@@ -38,6 +38,37 @@ def _warn_replicated(where: str, axis, dim: int, size: int):
         RuntimeWarning, stacklevel=3)
 
 
+def resolve_mesh_axis(devices, dim: int, where: str,
+                      axis: str = "restart") -> Optional[int]:
+    """Validate a user-facing ``devices=`` request and return the mesh
+    size to build, or ``None`` to run unsharded.
+
+    ``None``/1 asks for no mesh; non-positive or more-devices-than-
+    visible raise (the latter naming the ``XLA_FLAGS`` host-device trick,
+    same message family as ``simulate_grid``); a ``dim`` that doesn't
+    divide the mesh falls back to the unsharded path with the same
+    warn-once replication ``RuntimeWarning`` the rule table emits — lost
+    parallelism is visible, never silent, and results are identical
+    either way (the sharded kernels are bit-identical by construction).
+    """
+    if devices is None or devices == 1:
+        return None
+    devices = int(devices)
+    if devices <= 0:
+        raise ValueError(f"devices must be a positive mesh size, "
+                         f"got {devices}")
+    if devices > jax.device_count():
+        raise ValueError(
+            f"devices={devices} but only {jax.device_count()} "
+            f"JAX device(s) are visible; on CPU export "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{devices} before the first jax import")
+    if dim % devices != 0:
+        _warn_replicated(where, axis, dim, devices)
+        return None
+    return devices
+
+
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
               axis_names=None):
     """Version-compat ``shard_map``: the top-level ``jax.shard_map`` API

@@ -123,8 +123,12 @@ def policy_scan(loads, params, onehot=None, dt_hours=1.0, *,
     the fault-layer wrapper (backlog queue, reconnect flood — see
     ``core.twin.fault_lane_policy_step``). The fault SERIES path always
     takes the reference lane scan (plain autodiff when differentiated;
-    the checkpointed VJP and the Pallas series kernel cover the benign
-    fast paths — fault grids lean on the aggregate kernel instead).
+    the Pallas series kernel covers the benign non-diff fast path).
+    Gradient users who don't need the series should go through
+    ``policy_scan_fold`` instead — its in-carry reductions stream on
+    both the benign AND the fault path with the O(√T) backward, which
+    is how the search/calibrate kernels dispatch since the streaming
+    -objective rework.
     """
     if (onehot is None) == (policy_index is None):   # before dispatch, so
         # both backends reject the ambiguity identically (one_hot(None)
@@ -163,6 +167,36 @@ def policy_scan(loads, params, onehot=None, dt_hours=1.0, *,
     return ref.policy_grid_scan(loads, params, onehot, dt_hours,
                                 policy_index=policy_index,
                                 surrogate=surrogate)
+
+
+def policy_scan_fold(loads=None, params=None, onehot=None, dt_hours=1.0,
+                     *, policy_index=None, surrogate=False, caps=None,
+                     loads_t=None, caps_t=None, fold_init, fold_step,
+                     ops_lane=(), xs=()):
+    """Streaming-aggregate GRADIENT scan: fold per-bin policy outputs
+    into a caller-defined accumulator inside the scan carry instead of
+    materializing five [N, T] series — the gradient-path sibling of
+    ``policy_scan_agg``, always the pure-jnp lane path (the Pallas
+    kernels have no VJP).
+
+    ``fold_init(n)`` / ``fold_step(acc, arrive, outs, ops_lane, xs_row)``
+    must be module-level functions (they key trace caches); ``ops_lane``
+    is a pytree of differentiable per-lane operands, ``xs`` a pytree of
+    per-bin operands with leading axis T. Operands may come scenario
+    -minor (``loads_t``/``caps_t`` [T, N]). With a static ``dt_hours``
+    the scan carries the checkpointed O(√T) custom VJP — including the
+    fault layer (``caps=``), which the series path above never streams —
+    so neither direction holds an [N, T] intermediate; a traced bin
+    width falls back to one plain differentiable scan, same numbers.
+    Returns (carry_end [N, CARRY_DIM], acc); fault-backlog residue is
+    folded into ``carry_end[:, 0]`` exactly like ``ref.policy_grid_scan``.
+    """
+    from repro.kernels import policy_vjp
+    return policy_vjp.policy_grid_scan_fold(
+        loads, params, onehot, dt_hours, policy_index=policy_index,
+        surrogate=surrogate, caps=caps, loads_t=loads_t, caps_t=caps_t,
+        fold_init=fold_init, fold_step=fold_step, ops_lane=ops_lane,
+        xs=xs)
 
 
 def policy_scan_agg(loads, params, onehot, dt_hours=1.0, *,

@@ -22,6 +22,15 @@ policy selector index is integer-typed and gets the mandatory ``float0``
 zero. ``dt_hours`` / ``surrogate`` / the selector form are nondiff
 trace constants, exactly as static as they are in the jitted fit/search
 kernels that consume this through ``kernels.ops.policy_scan``.
+
+``policy_grid_scan_fold`` is the streaming-aggregate sibling: instead of
+returning five [N, T] series it folds per-bin outputs into a caller
+-defined in-carry accumulator (compensated triples, running cumsums…)
+and gives THAT scan the same O(√T) checkpointed VJP — the segment
+replays carry the accumulators through, so neither direction ever holds
+an [N, T] intermediate. It also speaks the fault layer (``caps=``),
+which the plain ckpt path never did — chance-constrained search
+gradients stream through here.
 """
 from __future__ import annotations
 
@@ -163,3 +172,227 @@ def policy_grid_scan_ckpt(loads, params, onehot=None, dt_hours=1.0, *,
     carry_end, outs_t = _ckpt_scan(cfg, jnp.asarray(params, jnp.float32),
                                    loads_t, onehot, pidx)
     return carry_end, tuple(o.T for o in outs_t)
+
+
+# ---------------------------------------------------------------------------
+# Streaming fold scan — in-carry reductions, O(√T) checkpointed VJP
+# ---------------------------------------------------------------------------
+
+def _fold_bin_step(cfg, params, onehot, pidx, ops_lane):
+    """The fold bin-step under ``cfg`` = (dt, surrogate, use_onehot,
+    use_caps, fold_init, fold_step): advance the policy lanes one bin
+    (optionally through the fault layer, same arithmetic as
+    ``ref.policy_grid_scan``'s caps path) and fold the per-bin outputs
+    into the caller's accumulator pytree instead of emitting them."""
+    from repro.core.twin import (fault_lane_policy_step, lane_branches,
+                                 lane_policy_step, surrogate_lane_branches)
+    dt_hours, surrogate, use_onehot, use_caps = cfg[:4]
+    fold_step = cfg[5]
+    branches = (surrogate_lane_branches() if surrogate
+                else lane_branches())
+    dt = jnp.asarray(dt_hours, jnp.float32)
+    if use_caps:
+        if use_onehot:
+            def pstep(state, arrive, capmul):
+                return fault_lane_policy_step(state, arrive, capmul,
+                                              params, onehot, dt,
+                                              branches=branches)
+        else:
+            from repro.kernels.ref import _fault_switch_step
+            pstep = _fault_switch_step(pidx, branches, params, dt)
+
+        def step(state, row):
+            carry, fq, acc = state
+            arrive, capmul, xs_row = row
+            (carry, fq), outs = pstep((carry, fq), arrive, capmul)
+            return carry, fq, fold_step(acc, arrive, outs, ops_lane,
+                                        xs_row)
+    else:
+        if use_onehot:
+            def lstep(carry, arrive):
+                return lane_policy_step(carry, arrive, params, onehot, dt,
+                                        branches=branches)
+        else:
+            def lstep(carry, arrive):
+                return jax.lax.switch(pidx, branches, carry, arrive,
+                                      params, dt)
+
+        def step(state, row):
+            carry, fq, acc = state
+            arrive, _, xs_row = row
+            carry, outs = lstep(carry, arrive)
+            return carry, fq, fold_step(acc, arrive, outs, ops_lane,
+                                        xs_row)
+    return step
+
+
+def _fold_scan_impl(cfg, params, loads_t, onehot, pidx, caps_t, ops_lane,
+                    xs):
+    """ONE plain scan over all T bins carrying (policy carry [N,
+    CARRY_DIM], fault backlog [N], fold accumulators) — ys=None, so
+    nothing [T, N]-shaped ever leaves the scan."""
+    from repro.core.twin import CARRY_DIM
+    fold_init = cfg[4]
+    n = loads_t.shape[1]
+    step = _fold_bin_step(cfg, params, onehot, pidx, ops_lane)
+    state0 = (jnp.zeros((n, CARRY_DIM), jnp.float32),
+              jnp.zeros((n,), jnp.float32), fold_init(n))
+    return jax.lax.scan(lambda s, r: (step(s, r), None), state0,
+                        (loads_t, caps_t, xs))[0]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fold_scan(cfg, params, loads_t, onehot, pidx, caps_t, ops_lane, xs):
+    return _fold_scan_impl(cfg, params, loads_t, onehot, pidx, caps_t,
+                           ops_lane, xs)
+
+
+def _fold_fwd(cfg, params, loads_t, onehot, pidx, caps_t, ops_lane, xs):
+    # residuals are just the primal inputs — the backward rebuilds
+    # segment-entry states with one carry-only replay, so the forward
+    # tapes nothing beyond what the caller already holds
+    return _fold_scan(cfg, params, loads_t, onehot, pidx, caps_t,
+                      ops_lane, xs), \
+        (params, loads_t, onehot, pidx, caps_t, ops_lane, xs)
+
+
+def _fold_bwd(cfg, res, g_state):
+    from repro.core.twin import CARRY_DIM
+    params, loads_t, onehot, pidx, caps_t, ops_lane, xs = res
+    fold_init = cfg[4]
+    tmap = jax.tree_util.tree_map
+    t_bins, n = loads_t.shape
+    seg, nseg, tail = _segment_plan(t_bins)
+    body = t_bins - tail
+    rows = (loads_t, caps_t, xs)
+    step = _fold_bin_step(cfg, params, onehot, pidx, ops_lane)
+
+    def seg_scan(state0, params_, onehot_, ops_, seg_rows):
+        # the differentiable segment: same step, operands rebound so
+        # jax.vjp hands back their cotangents alongside the state chain
+        s = _fold_bin_step(cfg, params_, onehot_, pidx, ops_)
+        return jax.lax.scan(lambda st, r: (s(st, r), None), state0,
+                            seg_rows)[0]
+
+    # forward replay, state only: entry states of the nseg body segments
+    # (policy carry + fault backlog + fold accumulators, all O(N))
+    main = tmap(lambda a: a[:body].reshape((nseg, seg) + a.shape[1:]),
+                rows)
+
+    def seg_fwd(state, seg_rows):
+        out = jax.lax.scan(lambda st, r: (step(st, r), None), state,
+                           seg_rows)[0]
+        return out, state                       # ys = the ENTRY state
+
+    state0 = (jnp.zeros((n, CARRY_DIM), jnp.float32),
+              jnp.zeros((n,), jnp.float32), fold_init(n))
+    st_tail, entries = jax.lax.scan(seg_fwd, state0, main)
+
+    g_params = jnp.zeros_like(params)
+    g_onehot = jnp.zeros_like(onehot)
+    g_ops = tmap(jnp.zeros_like, ops_lane)
+    g_rows = tmap(jnp.zeros_like, rows)
+    if tail:
+        tail_rows = tmap(lambda a: a[body:], rows)
+        _, tail_vjp = jax.vjp(seg_scan, st_tail, params, onehot, ops_lane,
+                              tail_rows)
+        g_state, dp, doh, dops, drows = tail_vjp(g_state)
+        g_params, g_onehot = g_params + dp, g_onehot + doh
+        g_ops = tmap(jnp.add, g_ops, dops)
+        g_rows = tmap(lambda g, d: g.at[body:].set(d), g_rows, drows)
+
+    def seg_bwd(state, seg_xs):
+        g_st, g_p, g_oh, g_op = state
+        entry, seg_rows = seg_xs
+        _, vjp_fn = jax.vjp(seg_scan, entry, params, onehot, ops_lane,
+                            seg_rows)
+        d_st, dp, doh, dops, drows = vjp_fn(g_st)
+        return (d_st, g_p + dp, g_oh + doh, tmap(jnp.add, g_op, dops)), \
+            drows
+
+    (g_state, g_params, g_onehot, g_ops), drows = jax.lax.scan(
+        seg_bwd, (g_state, g_params, g_onehot, g_ops), (entries, main),
+        reverse=True)
+    g_rows = tmap(lambda g, d: g.at[:body].set(
+        d.reshape((body,) + d.shape[2:])), g_rows, drows)
+    g_loads, g_caps, g_xs = g_rows
+    return (g_params, g_loads, g_onehot,
+            np.zeros(np.shape(pidx), dtype=jax.dtypes.float0),
+            g_caps, g_ops, g_xs)
+
+
+_fold_scan.defvjp(_fold_fwd, _fold_bwd)
+
+
+def policy_grid_scan_fold(loads=None, params=None, onehot=None,
+                          dt_hours=1.0, *, policy_index=None,
+                          surrogate: bool = False, caps=None,
+                          loads_t=None, caps_t=None, fold_init,
+                          fold_step, ops_lane=(), xs=()):
+    """Streaming-aggregate lane scan: fold per-bin policy outputs into a
+    caller-defined accumulator instead of materializing [N, T] series.
+
+    ``fold_init(n)`` builds the accumulator pytree for ``n`` lanes and
+    ``fold_step(acc, arrive, outs, ops_lane, xs_row)`` folds one bin's
+    outputs ``outs = (processed, queue, latency, cost, dropped)`` (each
+    [N]) into it. ``ops_lane`` is a pytree of differentiable per-lane
+    operands (e.g. SLO limits); ``xs`` a pytree of per-bin operands with
+    leading axis T (e.g. calibration targets). Both must be module-level
+    functions — they ride in the nondiff config of a ``jax.custom_vjp``
+    and key its (and the enclosing jit's) trace cache.
+
+    The primal is one plain scan, per-bin arithmetic source-identical to
+    ``ref.policy_grid_scan`` (+ the shared fold code), including the
+    fault layer when ``caps``/``caps_t`` is given — backlog residue is
+    folded into ``carry_end[:, 0]`` exactly like the reference. The
+    benign and uniform-index fault forms come out bit-identical to
+    materialize-then-fold; the mixed one-hot fault form may wobble a few
+    ulps per bin (the masked blend's mul+add chain contracts to FMA
+    differently across fusion contexts on CPU). The VJP
+    is the O(√T) segment-checkpoint schedule of ``_ckpt_scan``, except
+    the replayed state also carries the accumulators, so the backward
+    tapes one √T-bin segment at a time and NO [N, T] residual — this is
+    what lets chance-constrained search gradients stream.
+
+    Operands may come scenario-minor (``loads_t``/``caps_t`` [T, N]) to
+    keep lane-major [N, T] arrays out of the caller's jaxpr entirely.
+    Returns (carry_end [N, CARRY_DIM], acc). A traced ``dt_hours`` falls
+    back to one plain differentiable scan (O(T) tape), mirroring
+    ``policy_scan``'s reference fallback.
+    """
+    if (onehot is None) == (policy_index is None):
+        raise ValueError("pass exactly one of onehot= (mixed grid) or "
+                         "policy_index= (uniform lane block)")
+    if loads_t is None:
+        loads_t = jnp.asarray(loads, jnp.float32).T
+    use_caps = caps is not None or caps_t is not None
+    if use_caps and caps_t is None:
+        caps_t = jnp.asarray(caps, jnp.float32).T
+    if not use_caps:
+        caps_t = jnp.zeros((loads_t.shape[0], 0), jnp.float32)
+    use_onehot = onehot is not None
+    if use_onehot:
+        onehot = jnp.asarray(onehot, jnp.float32)
+        pidx = jnp.zeros((), jnp.int32)          # inert placeholder
+    else:
+        onehot = jnp.zeros((loads_t.shape[1], 0), jnp.float32)
+        pidx = jnp.asarray(policy_index, jnp.int32)
+    params = jnp.asarray(params, jnp.float32)
+    try:
+        dt_static = float(dt_hours)
+    except (TypeError, jax.errors.TracerArrayConversionError,
+            jax.errors.ConcretizationTypeError):
+        dt_static = None
+    if dt_static is None:
+        cfg = (dt_hours, bool(surrogate), use_onehot, use_caps,
+               fold_init, fold_step)
+        carry, fq, acc = _fold_scan_impl(cfg, params, loads_t, onehot,
+                                         pidx, caps_t, ops_lane, xs)
+    else:
+        cfg = (dt_static, bool(surrogate), use_onehot, use_caps,
+               fold_init, fold_step)
+        carry, fq, acc = _fold_scan(cfg, params, loads_t, onehot, pidx,
+                                    caps_t, ops_lane, xs)
+    if use_caps:
+        carry = carry.at[:, 0].add(fq)
+    return carry, acc

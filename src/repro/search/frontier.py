@@ -87,7 +87,8 @@ def pareto_frontier(space_or_base: Union[SearchSpace, Twin],
                     opt: Optional[OptimizerConfig] = None,
                     penalty_weight: float = DEFAULT_PENALTY_WEIGHT,
                     met_margin: float = 0.005,
-                    coarsen: int = 1) -> Frontier:
+                    coarsen: int = 1,
+                    devices: Optional[int] = None) -> Frontier:
     """Sweep the SLO limit and return cost-to-serve at each target.
 
     All ``len(slo_limits) * restarts`` searches run as lanes of ONE
@@ -95,6 +96,11 @@ def pareto_frontier(space_or_base: Union[SearchSpace, Twin],
     per-target exact re-checks and the monotone assembly happen host-side
     (see module docstring). Targets are processed tightest first
     regardless of input order; the returned points follow that order.
+    The gradient loop streams its reductions (O(lanes·√T) memory — see
+    "Scaling the search" in ``search()``); ``devices=D`` shards the M*K
+    packed restart axis over a D-device mesh, bit-identical to
+    unsharded, with the same warn-once replication fallback when M*K
+    doesn't divide D.
     """
     if len(slo_limits) == 0:
         raise ValueError("pareto_frontier needs at least one SLO limit")
@@ -121,7 +127,7 @@ def pareto_frontier(space_or_base: Union[SearchSpace, Twin],
         space, g_loads, g_bin, scen_w, np.tile(space.z0(k, seed), (m, 1)),
         np.repeat(limits, k), slo_mode,
         min(met_fraction + met_margin, 1.0), penalty_weight,
-        max(base_cost[0], 1.0), g_horizon, steps, ocfg)
+        max(base_cost[0], 1.0), g_horizon, steps, ocfg, devices=devices)
     p_fin = p_fin.reshape(m, k, -1)
 
     points: List[FrontierPoint] = []

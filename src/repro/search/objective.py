@@ -3,8 +3,8 @@
 ``lane_objective`` scores a [L, PARAM_DIM] block of candidate
 configurations against a [L, T] block of traffic scenarios in ONE
 lane-vectorized scan — the same dispatch shape (and the same
-``kernels.ops.policy_scan`` backend selection) twin calibration uses for
-its restarts, with ``surrogate=True`` so hard-gated policy extras
+``kernels.ops`` backend selection) twin calibration uses for its
+restarts, with ``surrogate=True`` so hard-gated policy extras
 (quickscale/autoscale's ceil, batch_window's flush comparison) carry
 gradients. Per lane it returns
 
@@ -21,6 +21,22 @@ hinge is scaled by a caller-supplied reference cost (``penalty_scale``,
 normally the base configuration's exact annual cost) so the penalty is
 meaningful in dollars regardless of problem size.
 
+**The reductions stream.** By default (``stream=True``, and always on
+the ``lane_objective_t`` kernel entry) nothing [L, T]-shaped is ever
+materialized: the four per-lane sums the objective needs — cost, the
+load-weighted compliance-sigmoid numerator/denominator behind
+``smooth_met_fraction``, and the violation-magnitude softplus mass —
+ride the policy scan's carry as twice-compensated f32 triples
+(``core.twin.fold_triple_*``, the PR 4 trick) through
+``kernels.ops.policy_scan_fold``, whose checkpointed O(√T) VJP replays
+√T-bin segments on the backward pass instead of taping the horizon.
+``stream=False`` keeps the series-materializing reference path; both
+run the IDENTICAL per-bin fold code (``_obj_fold_*``) and finalize, so
+their values agree bit for bit — pinned in tests/test_stream_objectives.
+``lane_objective_vectorized`` is the third form: the same math as one
+vectorized [L, T] hinge with plain f32 sums — the fast gradient guide
+the search kernel uses below its streaming size threshold.
+
 This objective is a *gradient guide only*: nothing it computes is ever
 reported. ``repro.search.optimize`` re-checks every candidate through
 the bit-exact streaming-aggregate path (``simulate_grid(
@@ -32,7 +48,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.traffic import HOURS_PER_YEAR
-from repro.core.twin import AGG_SLO_DROP_RATE
+from repro.core.twin import (AGG_SLO_DROP_RATE, fold_triple_add,
+                             fold_triple_finalize, fold_triple_init)
 
 #: softplus hinge softness, in met-fraction units: a razor hinge — the
 #: tail must be ~zero a few tenths of a percent INSIDE feasibility, or
@@ -80,17 +97,124 @@ def smooth_met_fraction(values, loads, slo_limit_lane, width):
     limits as lanes of one dispatch); ``width`` [L, 1] or scalar sigmoid
     width. Each bin contributes a sigmoid of its margin — the
     differentiable stand-in for the aggregate path's exact ``<=``
-    counters.
+    counters. (The streamed objective folds this same numerator /
+    denominator pair into the scan carry instead of calling this.)
     """
     ok = jax.nn.sigmoid((slo_limit_lane[:, None] - values) / width)
     return (ok * loads).sum(axis=1) / jnp.maximum(loads.sum(axis=1), 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# The shared per-bin fold — ONE implementation for both dispatch shapes.
+# The streamed path runs these inside the policy scan's carry; the
+# materialized path scans the same functions over its [L, T] series.
+# Sharing the code (not just the math) is what makes the two paths
+# bit-identical by construction.
+# ---------------------------------------------------------------------------
+
+def _obj_fold_init(n):
+    """(cost, ok·load, load, softplus-excess·load) compensated triples."""
+    return (fold_triple_init(n), fold_triple_init(n),
+            fold_triple_init(n), fold_triple_init(n))
+
+
+def _obj_fold(acc, w, v, cost, limits, width):
+    c_t, o_t, l_t, e_t = acc
+    ok = jax.nn.sigmoid((limits - v) / width)
+    sp = jax.nn.softplus((v - limits) / width)
+    return (fold_triple_add(c_t, cost),
+            fold_triple_add(o_t, ok * w),
+            fold_triple_add(l_t, w),
+            fold_triple_add(e_t, sp * w))
+
+
+def _obj_fold_latency(acc, arrive, outs, ops_lane, xs_row):
+    del xs_row
+    _proc, _q, lat, cost, _drop = outs
+    limits, width = ops_lane
+    return _obj_fold(acc, arrive, lat, cost, limits, width)
+
+
+def _obj_fold_droprate(acc, arrive, outs, ops_lane, xs_row):
+    del xs_row
+    _proc, _q, _lat, cost, drop = outs
+    limits, width = ops_lane
+    v = drop / jnp.maximum(arrive, 1e-9)
+    return _obj_fold(acc, arrive, v, cost, limits, width)
+
+
+def _obj_ops_lane(slo_limit_lane, slo_mode: int, tau):
+    """Per-lane (limits, width) operands of the fold, by SLO mode."""
+    if slo_mode == AGG_SLO_DROP_RATE:
+        width = tau * slo_limit_lane + 1e-4   # rate floor
+        # small absolute allowance: a zero-tolerance limit (drop_rate
+        # <= 0) would otherwise park every compliant bin at sigmoid(0)
+        # = 0.5 and the penalty could never release; the shift keeps
+        # v == limit counting as met (the exact counters' <=) at the
+        # price of a ~3-width optimism the exact re-check absorbs
+        limits = slo_limit_lane + 3e-4
+    else:
+        width = tau * slo_limit_lane + 1e-6
+        limits = slo_limit_lane
+    return limits, width
+
+
+def _obj_combine(acc, carry_end, params_block, met_fraction,
+                 penalty_weight, penalty_scale, horizon_scale, tau):
+    """Folded sums -> (objective [L], (annual_cost [L], met_frac [L]))."""
+    c_t, o_t, l_t, e_t = acc
+    total = fold_triple_finalize(c_t)
+    okl = fold_triple_finalize(o_t)
+    load = fold_triple_finalize(l_t)
+    excess_sum = fold_triple_finalize(e_t)
+    backlog_cost = (carry_end[:, 0]
+                    / jnp.maximum(params_block[:, 0], 1e-9) / 3600.0
+                    * params_block[:, 1])
+    cost_ann = (total + backlog_cost) * horizon_scale
+    frac = okl / jnp.maximum(load, 1e-9)
+    shortfall = met_fraction - frac
+    hinge = jax.nn.softplus(shortfall / HINGE_S) * HINGE_S
+    # violation magnitude in widths, rescaled by tau so it reads as
+    # "per unit of the limit", and gated off in the feasible region —
+    # see EXCESS_WEIGHT
+    excess = tau * excess_sum / jnp.maximum(load, 1e-9)
+    gate = jax.nn.sigmoid(shortfall / HINGE_S)
+    penalty = penalty_weight * penalty_scale * (
+        hinge + EXCESS_WEIGHT * gate * excess)
+    return cost_ann + penalty, (cost_ann, frac)
+
+
+def lane_objective_t(params_block, loads_t_block, dt_hours, policy_index,
+                     slo_limit_lane, slo_mode: int, met_fraction,
+                     penalty_weight, penalty_scale, horizon_scale,
+                     tau=DEFAULT_TAU, surrogate: bool = True,
+                     caps_t_block=None):
+    """Streaming ``lane_objective`` over scenario-minor operands.
+
+    ``loads_t_block`` / ``caps_t_block`` come [T, L] so the search
+    kernel's whole gradient path stays scenario-minor — no [L, T] array
+    exists anywhere in its jaxpr (asserted in tests). Reductions fold
+    into the scan carry via ``kernels.ops.policy_scan_fold``; O(L·√T)
+    live memory in both directions. Same return contract as
+    ``lane_objective``, bit-identical values.
+    """
+    from repro.kernels import ops     # late: keep repro.search importable
+    ops_lane = _obj_ops_lane(slo_limit_lane, slo_mode, tau)
+    step = (_obj_fold_droprate if slo_mode == AGG_SLO_DROP_RATE
+            else _obj_fold_latency)
+    carry_end, acc = ops.policy_scan_fold(
+        params=params_block, dt_hours=dt_hours, policy_index=policy_index,
+        surrogate=surrogate, loads_t=loads_t_block, caps_t=caps_t_block,
+        fold_init=_obj_fold_init, fold_step=step, ops_lane=ops_lane)
+    return _obj_combine(acc, carry_end, params_block, met_fraction,
+                        penalty_weight, penalty_scale, horizon_scale, tau)
 
 
 def lane_objective(params_block, loads_block, dt_hours, policy_index,
                    slo_limit_lane, slo_mode: int, met_fraction,
                    penalty_weight, penalty_scale, horizon_scale,
                    tau=DEFAULT_TAU, surrogate: bool = True,
-                   caps_block=None):
+                   caps_block=None, stream: bool = True):
     """[L] smooth objective values for a lane block (see module docstring).
 
     params_block [L, PARAM_DIM]; loads_block [L, T]; ``policy_index``,
@@ -104,41 +228,84 @@ def lane_objective(params_block, loads_block, dt_hours, policy_index,
     (optional) threads a fault schedule's capacity multipliers through
     the scan (chance-constrained resilience search — each lane is then
     one (candidate, scenario, fault future) triple).
+
+    ``stream=True`` (default) folds the reductions into the scan carry
+    (O(L·√T) memory, forward and backward); ``stream=False`` is the
+    series-materializing reference the parity tests compare against —
+    identical fold code either way, so values match bitwise.
     Returns (objective [L], (annual_cost [L], met_frac [L])).
+    """
+    if stream:
+        caps_t = (None if caps_block is None
+                  else jnp.asarray(caps_block, jnp.float32).T)
+        return lane_objective_t(
+            params_block, jnp.asarray(loads_block, jnp.float32).T,
+            dt_hours, policy_index, slo_limit_lane, slo_mode,
+            met_fraction, penalty_weight, penalty_scale, horizon_scale,
+            tau=tau, surrogate=surrogate, caps_t_block=caps_t)
+    from repro.kernels import ops     # late: keep repro.search importable
+    carry_end, outs = ops.policy_scan(
+        loads_block, params_block, dt_hours=dt_hours,
+        policy_index=policy_index, differentiable=True,
+        surrogate=surrogate, caps=caps_block)
+    ops_lane = _obj_ops_lane(slo_limit_lane, slo_mode, tau)
+    step = (_obj_fold_droprate if slo_mode == AGG_SLO_DROP_RATE
+            else _obj_fold_latency)
+    loads_t = jnp.asarray(loads_block, jnp.float32).T
+    outs_t = tuple(o.T for o in outs)
+    acc0 = _obj_fold_init(loads_t.shape[1])
+
+    def fold(acc, row):
+        arrive, outs_row = row
+        return step(acc, arrive, outs_row, ops_lane, ()), None
+
+    acc, _ = jax.lax.scan(fold, acc0, (loads_t, outs_t))
+    return _obj_combine(acc, carry_end, params_block, met_fraction,
+                        penalty_weight, penalty_scale, horizon_scale, tau)
+
+
+def lane_objective_vectorized(params_block, loads_block, dt_hours,
+                              policy_index, slo_limit_lane, slo_mode: int,
+                              met_fraction, penalty_weight, penalty_scale,
+                              horizon_scale, tau=DEFAULT_TAU,
+                              surrogate: bool = True, caps_block=None):
+    """Small-problem fast path: materialize the [L, T] series and take
+    the hinge reductions as plain vectorized sums.
+
+    Same arguments and return contract as ``lane_objective``, same math
+    — but the compliance sigmoid / violation softplus run ONCE over the
+    whole [L, T] block instead of per bin inside a sequential fold, and
+    the sums are plain f32 ``sum(axis=1)`` instead of compensated
+    triples. Below a couple million lane-bins the transcendentals
+    dominate the streamed path's scan (they get replayed by the
+    checkpointed backward and vectorize poorly at kernel-width lanes),
+    so this form is measurably faster there; above it the [L, T]
+    residuals dominate memory and the streamed path wins both ways.
+    ``repro.search.optimize._run_kernel`` picks between them on GLOBAL
+    problem size. Values differ from the streamed path only by f32
+    summation order — a gradient-guide difference the exact re-check
+    absorbs.
     """
     from repro.kernels import ops     # late: keep repro.search importable
     carry_end, (_proc, _q, lat, cost, drop) = ops.policy_scan(
         loads_block, params_block, dt_hours=dt_hours,
         policy_index=policy_index, differentiable=True,
         surrogate=surrogate, caps=caps_block)
+    limits, width = _obj_ops_lane(slo_limit_lane, slo_mode, tau)
+    w = jnp.asarray(loads_block, jnp.float32)
+    values = (drop / jnp.maximum(w, 1e-9)
+              if slo_mode == AGG_SLO_DROP_RATE else lat)
     total = cost.sum(axis=1)
     backlog_cost = (carry_end[:, 0]
                     / jnp.maximum(params_block[:, 0], 1e-9) / 3600.0
                     * params_block[:, 1])
     cost_ann = (total + backlog_cost) * horizon_scale
-    if slo_mode == AGG_SLO_DROP_RATE:
-        values = drop / jnp.maximum(loads_block, 1e-9)
-        width = tau * slo_limit_lane[:, None] + 1e-4   # rate floor
-        # small absolute allowance: a zero-tolerance limit (drop_rate
-        # <= 0) would otherwise park every compliant bin at sigmoid(0)
-        # = 0.5 and the penalty could never release; the shift keeps
-        # v == limit counting as met (the exact counters' <=) at the
-        # price of a ~3-width optimism the exact re-check absorbs
-        limits = slo_limit_lane + 3e-4
-    else:
-        values = lat
-        width = tau * slo_limit_lane[:, None] + 1e-6
-        limits = slo_limit_lane
-    frac = smooth_met_fraction(values, loads_block, limits, width)
+    frac = smooth_met_fraction(values, w, limits, width[:, None])
     shortfall = met_fraction - frac
     hinge = jax.nn.softplus(shortfall / HINGE_S) * HINGE_S
-    # violation magnitude in widths, rescaled by tau so it reads as
-    # "per unit of the limit", and gated off in the feasible region —
-    # see EXCESS_WEIGHT
-    rel = (values - limits[:, None]) / width
-    w = loads_block
-    excess = tau * (jax.nn.softplus(rel) * w).sum(axis=1) \
-        / jnp.maximum(w.sum(axis=1), 1e-9)
+    rel = (values - limits[:, None]) / width[:, None]
+    excess = (tau * (jax.nn.softplus(rel) * w).sum(axis=1)
+              / jnp.maximum(w.sum(axis=1), 1e-9))
     gate = jax.nn.sigmoid(shortfall / HINGE_S)
     penalty = penalty_weight * penalty_scale * (
         hinge + EXCESS_WEIGHT * gate * excess)

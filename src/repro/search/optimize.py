@@ -53,7 +53,8 @@ from repro.core.twin import (AGG_SLO_DROP_RATE, AGG_SLO_LATENCY, PARAM_DIM,
 from repro.calibrate.objective import params_from_z
 from repro.optim.adamw import adamw_update, init_opt_state
 from repro.search.objective import (CHANCE_W, HINGE_S, annual_scale,
-                                    lane_objective)
+                                    lane_objective_t,
+                                    lane_objective_vectorized)
 from repro.search.space import (Z_CLIP, SearchSpace, apply_ties,
                                 default_space, search_space)
 
@@ -79,29 +80,50 @@ class SearchInfeasibleWarning(UserWarning):
     """No candidate configuration met the SLO (details in the message)."""
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5, 6, 7))
-def _search_kernel(steps: int, n_scen: int, n_fut: int, dt_hours: float,
-                   slo_mode: int, surrogate: bool, version: int,
-                   ocfg: OptimizerConfig,
-                   z0, loads, scen_w, lo, hi, log_mask, free_mask, fixed,
-                   tie_src, tie_coeff, policy_index, slo_limit_k,
-                   met_fraction, penalty_weight, penalty_scale,
-                   horizon_scale, caps=None, quantile=1.0):
+#: lane-bins (global K*S*F*T) above which the search kernel streams its
+#: objective reductions through the scan carry instead of materializing
+#: the [L, T] series. Below the threshold the vectorized hinge is faster
+#: (the streamed fold pays per-bin sigmoid/softplus inside a sequential
+#: scan, replayed by the checkpointed backward); above it the [L, T]
+#: residuals dominate live memory and the streamed path wins wall clock
+#: AND peak temp bytes (BENCH_search.json "stream" rows). Sized so the
+#: multi-start bench (8 x 2184) vectorizes and the chance-constrained
+#: frontier (1024 x 8736) streams.
+_STREAM_MIN_ELEMS = 1 << 21
+
+
+def _search_kernel_body(steps: int, n_scen: int, n_fut: int,
+                        dt_hours: float, slo_mode: int, surrogate: bool,
+                        version: int, ocfg: OptimizerConfig, stream: bool,
+                        z0, loads_t, scen_w, lo, hi, log_mask, free_mask,
+                        fixed, tie_src, tie_coeff, policy_index,
+                        slo_limit_k, met_fraction, penalty_weight,
+                        penalty_scale, horizon_scale, caps_t=None,
+                        quantile=1.0):
     """K restarts x S scenarios (x F fault futures), one dispatch.
 
-    z0 [K, PARAM_DIM]; loads [S*F, T] scenario-major / future-minor;
-    scen_w [S] (normalized); slo_limit_k [K] per-restart SLO limits (a
-    plain search broadcasts one limit; the Pareto frontier packs its
-    whole target vector here). ``steps``/``n_scen``/``n_fut``/
-    ``dt_hours``/``slo_mode``/``ocfg`` are static; ``version`` is the
-    policy-registry version so late registrations retrace (same contract
-    as the grid and fit kernels). Everything else — including
-    ``policy_index`` and the box/tie arrays — is traced, so one compile
-    serves a whole tournament at equal shapes.
+    z0 [K, PARAM_DIM]; loads_t [T, S*F] scenario-MINOR (columns
+    scenario-major / future-minor) — with ``stream=True`` the whole
+    gradient path stays scenario-minor so no [L, T] array ever exists in
+    the jaxpr, forward or backward (the streamed ``lane_objective_t``
+    folds its reductions into the scan carry); ``stream=False`` takes
+    ``lane_objective_vectorized``'s materialized fast path, which wins
+    below ``_STREAM_MIN_ELEMS`` lane-bins. The caller decides ``stream``
+    from GLOBAL problem size (``_run_kernel``), never from local shapes,
+    so sharded and unsharded dispatches always pick the same path and
+    ``devices=D`` stays bit-identical to unsharded.
+    scen_w [S] (normalized); slo_limit_k [K]
+    per-restart SLO limits (a plain search broadcasts one limit; the
+    Pareto frontier packs its whole target vector here). ``steps``/
+    ``n_scen``/``n_fut``/``dt_hours``/``slo_mode``/``ocfg`` are static;
+    ``version`` is the policy-registry version so late registrations
+    retrace (same contract as the grid and fit kernels). Everything else
+    — including ``policy_index`` and the box/tie arrays — is traced, so
+    one compile serves a whole tournament at equal shapes.
 
     ``n_fut == 1`` (no faults) keeps the pre-chaos objective exactly:
     per-restart scenario-weighted sum of the per-lane cost+hinge. With
-    ``n_fut > 1`` (``caps`` [S*F, T] riding along) the objective turns
+    ``n_fut > 1`` (``caps_t`` [T, S*F] riding along) the objective turns
     chance-constrained: expected cost over futures plus a penalty on the
     smoothed probability of meeting the SLO falling below ``quantile`` —
     each future votes sigmoid((frac - met)/CHANCE_W), the per-scenario
@@ -111,12 +133,15 @@ def _search_kernel(steps: int, n_scen: int, n_fut: int, dt_hours: float,
     infeasible futures still pull).
 
     Returns (z_fin [K, D], params_fin [K, D], objective [K],
-    cost_ann [K, S*F], met_frac [K, S*F], history [steps, K]).
+    cost_ann [K, S*F], met_frac [K, S*F], history [steps, K]); the aux
+    triple rides the optimizer scan's carry from the LAST gradient
+    evaluation (z at step ``steps - 1``) — diagnostics only, which saves
+    the full-horizon forward the kernel used to re-dispatch at the end.
     """
     k = z0.shape[0]
     n_lanes = n_scen * n_fut
-    loads_block = jnp.tile(loads, (k, 1))
-    caps_block = None if caps is None else jnp.tile(caps, (k, 1))
+    loads_t_block = jnp.tile(loads_t, (1, k))
+    caps_t_block = None if caps_t is None else jnp.tile(caps_t, (1, k))
     slo_lane = jnp.repeat(slo_limit_k, n_lanes)
 
     def params_of(z):
@@ -127,10 +152,19 @@ def _search_kernel(steps: int, n_scen: int, n_fut: int, dt_hours: float,
     def objective(z):
         p = params_of(z)
         pb = jnp.repeat(p, n_lanes, axis=0)
-        per_lane, (cost_ann, frac) = lane_objective(
-            pb, loads_block, dt_hours, policy_index, slo_lane, slo_mode,
-            met_fraction, penalty_weight, penalty_scale, horizon_scale,
-            surrogate=surrogate, caps_block=caps_block)
+        if stream:
+            per_lane, (cost_ann, frac) = lane_objective_t(
+                pb, loads_t_block, dt_hours, policy_index, slo_lane,
+                slo_mode, met_fraction, penalty_weight, penalty_scale,
+                horizon_scale, surrogate=surrogate,
+                caps_t_block=caps_t_block)
+        else:
+            per_lane, (cost_ann, frac) = lane_objective_vectorized(
+                pb, loads_t_block.T, dt_hours, policy_index, slo_lane,
+                slo_mode, met_fraction, penalty_weight, penalty_scale,
+                horizon_scale, surrogate=surrogate,
+                caps_block=(None if caps_t_block is None
+                            else caps_t_block.T))
         if n_fut == 1:
             per_restart = (per_lane.reshape(k, n_scen) * scen_w) \
                 .sum(axis=1)
@@ -168,10 +202,13 @@ def _search_kernel(steps: int, n_scen: int, n_fut: int, dt_hours: float,
 
     vgrad = jax.value_and_grad(objective, has_aux=True)
     opt0 = jax.vmap(lambda z: init_opt_state({"z": z}, ocfg))(z0)
+    aux0 = (jnp.zeros((k,), jnp.float32),
+            jnp.zeros((k, n_lanes), jnp.float32),
+            jnp.zeros((k, n_lanes), jnp.float32))
 
     def one_step(carry, _):
-        z, opt = carry
-        (_, (per_restart, _, _)), g = vgrad(z)
+        z, opt, _ = carry
+        (_, aux), g = vgrad(z)
 
         def upd(zk, gk, ok):
             new_p, new_o = adamw_update({"z": zk}, {"z": gk}, ok, ocfg)
@@ -179,13 +216,59 @@ def _search_kernel(steps: int, n_scen: int, n_fut: int, dt_hours: float,
             return jnp.clip(new_p["z"], -Z_CLIP, Z_CLIP), new_o
 
         z2, opt2 = jax.vmap(upd)(z, g, opt)
-        return (z2, opt2), per_restart
+        # carry the aux out instead of re-running a full-horizon forward
+        # on z_fin after the scan — these are diagnostics, one AdamW step
+        # behind z_fin, and the exact re-check re-scores the candidates
+        # anyway
+        return (z2, opt2, aux), aux[0]
 
-    (z_fin, _), history = jax.lax.scan(one_step, (z0, opt0), None,
-                                       length=steps)
-    obj_sum, (per_restart, cost_ann, frac) = objective(z_fin)
-    del obj_sum
+    (z_fin, _, (per_restart, cost_ann, frac)), history = jax.lax.scan(
+        one_step, (z0, opt0, aux0), None, length=steps)
     return (z_fin, params_of(z_fin), per_restart, cost_ann, frac, history)
+
+
+_search_kernel = functools.partial(
+    jax.jit,
+    static_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8))(_search_kernel_body)
+
+
+@functools.lru_cache(maxsize=16)
+def _sharded_search_fn(devices: int, steps: int, n_scen: int, n_fut: int,
+                       dt_hours: float, slo_mode: int, surrogate: bool,
+                       version: int, ocfg: OptimizerConfig, stream: bool,
+                       has_caps: bool):
+    """Build (and cache) the jitted ``shard_map`` search kernel for a
+    ``devices``-wide 1-D restart mesh: z0 and slo_limit_k shard over
+    their restart axis, every other operand is replicated, and each
+    device runs ``_search_kernel_body`` on its K/D restarts. Restarts
+    are completely independent in the kernel (per-restart reductions,
+    vmapped AdamW; the grad-convenience ``per_restart.sum()`` splits
+    exactly), so the sharded run is bit-identical to ``devices=None`` —
+    the mesh only divides wall clock and per-device live memory."""
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.distributed.sharding import shard_map
+    mesh = Mesh(np.asarray(jax.devices()[:devices]), ("restart",))
+    shard, rep = P("restart"), P()
+
+    def body(z0, loads_t, scen_w, lo, hi, log_mask, free_mask, fixed,
+             tie_src, tie_coeff, policy_index, slo_limit_k, met_fraction,
+             penalty_weight, penalty_scale, horizon_scale, caps_t,
+             quantile):
+        return _search_kernel_body(
+            steps, n_scen, n_fut, dt_hours, slo_mode, surrogate, version,
+            ocfg, stream,
+            z0, loads_t, scen_w, lo, hi, log_mask, free_mask, fixed,
+            tie_src, tie_coeff, policy_index, slo_limit_k, met_fraction,
+            penalty_weight, penalty_scale, horizon_scale,
+            caps_t if has_caps else None, quantile)
+
+    # shard_map wants a spec per operand, so the benign path threads a
+    # [T, 0] caps placeholder — one body signature serves both modes
+    in_specs = (shard,) + (rep,) * 10 + (shard,) + (rep,) * 6
+    out_specs = (shard, shard, shard, shard, shard, P(None, "restart"))
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False))
 
 
 @dataclass
@@ -276,7 +359,8 @@ def _run_kernel(space: SearchSpace, g_loads: np.ndarray, g_bin: float,
                 slo_mode: int, met: float, penalty_weight: float,
                 penalty_scale: float, g_horizon: float, steps: int,
                 ocfg: OptimizerConfig, *, caps: Optional[np.ndarray] = None,
-                n_fut: int = 1, quantile: float = 1.0):
+                n_fut: int = 1, quantile: float = 1.0,
+                devices: Optional[int] = None):
     """Marshal one ``_search_kernel`` dispatch for a space and return
     ([K, PARAM_DIM] finite candidate vectors, [steps, K] history) —
     diverged restarts fall back to the base configuration's vector.
@@ -284,21 +368,45 @@ def _run_kernel(space: SearchSpace, g_loads: np.ndarray, g_bin: float,
     ``pareto_frontier`` (M*K lane-packed limits). The keyword-only fault
     operands (``caps`` [S*F, T] + ``n_fut``/``quantile``) switch the
     kernel to its chance-constrained objective; ``g_loads`` then has
-    S*F rows, scenario-major / future-minor."""
-    (_, p_fin, _, _, _, history) = _search_kernel(
-        int(steps), g_loads.shape[0] // int(n_fut), int(n_fut),
-        float(g_bin), int(slo_mode),
-        bool(space.needs_surrogate), registry_version(), ocfg,
-        jnp.asarray(z0), jnp.asarray(g_loads), jnp.asarray(scen_w),
-        jnp.asarray(space.lo), jnp.asarray(space.hi),
-        jnp.asarray(space.log_mask), jnp.asarray(space.free_mask),
-        jnp.asarray(space.fixed), jnp.asarray(space.tie_src),
-        jnp.asarray(space.tie_coeff), jnp.int32(space.policy_index),
-        jnp.asarray(slo_limit_k, jnp.float32), jnp.float32(met),
-        jnp.float32(penalty_weight), jnp.float32(penalty_scale),
-        jnp.float32(g_horizon),
-        None if caps is None else jnp.asarray(caps, jnp.float32),
-        jnp.float32(quantile))
+    S*F rows, scenario-major / future-minor. ``devices=D`` shards the
+    restart axis over a D-device mesh (``_sharded_search_fn``),
+    bit-identical to unsharded; a restart count that doesn't divide D
+    falls back with the shared warn-once replication RuntimeWarning.
+
+    The kernel's ``stream`` static (fold reductions into the scan carry
+    vs materialize the [L, T] series) is decided HERE, from the global
+    K*S*F*T lane-bin count against ``_STREAM_MIN_ELEMS`` — never from
+    per-device shapes — so a sharded dispatch and its unsharded twin
+    always run the same objective path and stay bit-identical."""
+    from repro.distributed.sharding import resolve_mesh_axis
+    stream = (z0.shape[0] * g_loads.shape[0] * g_loads.shape[1]
+              >= _STREAM_MIN_ELEMS)
+    statics = (int(steps), g_loads.shape[0] // int(n_fut), int(n_fut),
+               float(g_bin), int(slo_mode), bool(space.needs_surrogate),
+               registry_version(), ocfg, stream)
+    loads_t = jnp.asarray(np.ascontiguousarray(g_loads.T))
+    caps_t = (None if caps is None
+              else jnp.asarray(np.ascontiguousarray(caps.T), jnp.float32))
+    operands = (jnp.asarray(z0), loads_t, jnp.asarray(scen_w),
+                jnp.asarray(space.lo), jnp.asarray(space.hi),
+                jnp.asarray(space.log_mask), jnp.asarray(space.free_mask),
+                jnp.asarray(space.fixed), jnp.asarray(space.tie_src),
+                jnp.asarray(space.tie_coeff),
+                jnp.int32(space.policy_index),
+                jnp.asarray(slo_limit_k, jnp.float32), jnp.float32(met),
+                jnp.float32(penalty_weight), jnp.float32(penalty_scale),
+                jnp.float32(g_horizon))
+    d = resolve_mesh_axis(devices, z0.shape[0],
+                          "search(devices=) restart mesh")
+    if d is None:
+        (_, p_fin, _, _, _, history) = _search_kernel(
+            *statics, *operands, caps_t, jnp.float32(quantile))
+    else:
+        fn = _sharded_search_fn(d, *statics, caps_t is not None)
+        caps_in = (caps_t if caps_t is not None
+                   else jnp.zeros((loads_t.shape[0], 0), jnp.float32))
+        (_, p_fin, _, _, _, history) = fn(
+            *operands, caps_in, jnp.float32(quantile))
     p_fin = np.asarray(p_fin, np.float64)
     bad = ~np.isfinite(p_fin).all(axis=1)
     if bad.any():
@@ -497,7 +605,8 @@ def search(space_or_base: Union[SearchSpace, Twin],
            coarsen: int = 1,
            polish_rounds: int = 3,
            search_params: Optional[Sequence[str]] = None,
-           faults=None, quantile: float = 1.0) -> SearchResult:
+           faults=None, quantile: float = 1.0,
+           devices: Optional[int] = None) -> SearchResult:
     """Find the cheapest configuration of one policy that meets ``slo``.
 
     ``space_or_base`` is a ``SearchSpace`` (full control) or a base
@@ -526,6 +635,29 @@ def search(space_or_base: Union[SearchSpace, Twin],
     cheaper whenever the worst futures are expensive to insure against.
     The result's ``achieved_quantile`` reports the winner's exact
     empirical quantile.
+
+    **Scaling the search.** At scale the gradient loop is a
+    streaming-aggregate scan: every reduction the objective needs folds
+    into the scan carry as compensated triples (``search.objective``),
+    and the checkpointed O(√T) VJP replays √T-bin segments on the
+    backward pass — live memory is O(L·√T) for L = restarts × scenarios
+    × fault futures lanes, NOT O(L·T), so a chance-constrained
+    year-horizon search (K=8 × S=4 × F=32, T=8736) no longer stages
+    ~150 MB of series per AdamW step. Small problems (under
+    ``_STREAM_MIN_ELEMS`` global lane-bins, where the fold's per-bin
+    transcendentals cost more than the series they avoid) keep the
+    vectorized materialized objective — the choice is a compile-time
+    static made from global sizes, invisible to results.
+    ``devices=D`` additionally shards the restart axis over a D-device
+    mesh through the ``distributed/sharding.py`` shim — restarts are
+    independent, so results are **bit-identical** to ``devices=None``
+    and the mesh only divides wall clock and per-device memory. On a
+    multi-core CPU host export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=D`` *before the
+    first jax import*; when ``restarts`` doesn't divide D the search
+    warns once (RuntimeWarning) and runs unsharded. Tournaments
+    (``search_policies(devices=...)``), ``pareto_frontier(devices=...)``
+    and ``whatif.optimize_scenario(devices=...)`` forward here.
     """
     if isinstance(space_or_base, SearchSpace):
         space = space_or_base
@@ -587,7 +719,7 @@ def search(space_or_base: Union[SearchSpace, Twin],
         space, g_loads, g_bin, scen_w, space.z0(restarts, seed),
         np.full((restarts,), slo_limit), slo_mode, met, penalty_weight,
         max(base_cost[0], 1.0), g_horizon, steps, ocfg,
-        caps=g_caps, n_fut=n_fut, quantile=quantile)
+        caps=g_caps, n_fut=n_fut, quantile=quantile, devices=devices)
     cand_twins = [space.twin(p_fin[i], f"{space.policy}-cand{i}")
                   for i in range(restarts)]
     cost, feas, pct, rows = evaluate_exact(cand_twins, loads_np, bin_hours,
