@@ -28,13 +28,17 @@
 #   make faults-bench      chaos-suite overhead — fault-perturbed vs
 #                          benign aggregate grids at 1024/65536 full-year
 #                          rows, 4 futures/base (writes BENCH_faults.json)
+#   make obs-report        run-telemetry console report: instrumented demo
+#                          workload (grid + fit + search) through
+#                          repro.obs — spans, dispatch profiles, counters
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-deps bench bench-grid grid-bench-pallas \
         grid-bench-stream grid-bench-shard grid-bench-device \
-        calibrate-bench search-bench search-bench-stream faults-bench
+        calibrate-bench search-bench search-bench-stream faults-bench \
+        obs-report
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -71,3 +75,6 @@ search-bench-stream:
 
 faults-bench:
 	$(PYTHON) -m benchmarks.run faults
+
+obs-report:
+	$(PYTHON) -m repro.obs

@@ -5,6 +5,8 @@ wall-clock should grow far slower than K (the vmap amortizes dispatch
 and the scan dominates). This measures a shed-policy fit on a 72-bin
 ramp trace across K, emits the harness CSV rows, and writes the records
 to ``BENCH_calibrate.json`` so the perf trajectory has data points.
+Timing runs record through ``repro.obs`` (``obs.timed`` spans); under
+``REPRO_OBS=1`` the fit's own ``calibrate.fit`` spans appear alongside.
 
   PYTHONPATH=src python benchmarks/calibrate_bench.py
   PYTHONPATH=src python -m benchmarks.run calibrate
@@ -13,11 +15,11 @@ from __future__ import annotations
 
 import json
 import os
-import time
 from typing import Dict, List
 
 import jax
 
+from repro import obs
 from repro.calibrate import ObservedTrace, fit
 from repro.core.loadpattern import LoadPattern
 from repro.core.twin import make_twin
@@ -44,9 +46,10 @@ def bench() -> Dict:
         fit(trace, "shed", restarts=k, steps=STEPS, seed=0)
         times = []
         for rep in range(REPEATS):
-            t0 = time.perf_counter()
-            res = fit(trace, "shed", restarts=k, steps=STEPS, seed=rep)
-            times.append(time.perf_counter() - t0)
+            with obs.timed("bench.calibrate_fit", restarts=k) as tm:
+                res = fit(trace, "shed", restarts=k, steps=STEPS,
+                          seed=rep)
+            times.append(tm.elapsed)
         records.append({"restarts": k, "steps": STEPS,
                         "bins": trace.num_bins,
                         "best_loss": float(res.loss),

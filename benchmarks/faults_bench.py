@@ -13,7 +13,9 @@ At N = 65536 this is the acceptance run: a 65,536-scenario full-year
 chaos grid (4 futures per base scenario) completing on this CPU
 container through the blocked aggregate path. Writes
 ``BENCH_faults.json`` with per-size wall-clocks and the fault/benign
-overhead ratio, and emits the harness CSV rows.
+overhead ratio, and emits the harness CSV rows. Timing loops record
+through ``repro.obs`` (``obs.timed``); run under ``REPRO_OBS=1`` to
+also see the engine's ``grid.block`` spans and ``faults.*`` counters.
 
   PYTHONPATH=src python benchmarks/faults_bench.py
   PYTHONPATH=src python -m benchmarks.run faults
@@ -23,13 +25,12 @@ from __future__ import annotations
 
 import json
 import pathlib
-import time
 from typing import Dict, List
 
 import jax
 import numpy as np
 
-from repro import faults
+from repro import faults, obs
 from repro.core.simulate import simulate_grid
 from repro.core.slo import SLO
 from repro.core.traffic import TrafficModel
@@ -79,13 +80,14 @@ def _grid(n_scen: int):
     return _twins(n_scen), matrix, index
 
 
-def _time_best(fn, repeats: int = REPEATS) -> float:
+def _time_best(fn, repeats: int = REPEATS,
+               label: str = "bench.faults") -> float:
     fn()                                  # warm the jit cache
     best = float("inf")
     for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
+        with obs.timed(label) as tm:
+            fn()
+        best = min(best, tm.elapsed)
     return best * 1e3
 
 
@@ -111,8 +113,10 @@ def bench(sizes=SIZES, repeats: int = REPEATS) -> Dict:
         sims = chaos()                      # warm + acceptance sample
         assert len(sims) == n, (len(sims), n)
         assert any(s.fault_hours > 0 for s in sims)
-        benign_ms = _time_best(benign, repeats)
-        chaos_ms = _time_best(chaos, repeats)
+        benign_ms = _time_best(benign, repeats,
+                               label="bench.faults_benign")
+        chaos_ms = _time_best(chaos, repeats,
+                              label="bench.faults_chaos")
         rows.append({
             "rows": n, "base_scenarios": n_base, "futures": N_FUTURES,
             "hours": int(matrix.shape[1]), "scenario_block": block,

@@ -55,6 +55,11 @@ recorded in ``BENCH_grid_shard.json``.
   PYTHONPATH=src python -m benchmarks.run grid-device      # device-res hist
   make grid-bench-pallas / grid-bench-stream / grid-bench-shard /
        grid-bench-device
+
+Every timing loop records through ``repro.obs`` (``obs.timed`` spans) —
+the JSON rows serialize those spans' best-of numbers, and running any
+sweep under ``REPRO_OBS=1`` additionally surfaces the engine's own
+``grid.block`` / ``grid.round`` spans next to them (``obs.render()``).
 """
 from __future__ import annotations
 
@@ -62,7 +67,6 @@ import json
 import os
 import pathlib
 import sys
-import time
 from typing import Dict, List
 
 # the shard/device sweeps need multiple host devices, and XLA only reads
@@ -76,6 +80,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.simulate import _grid_scan, _grid_scan_xla, simulate_grid
 from repro.core.slo import SLO
 from repro.core.traffic import TrafficModel
@@ -155,12 +160,12 @@ def bench() -> Dict:
     vmapped(), looped()          # warm both jit caches
     t_vm, t_loop = [], []
     for _ in range(REPEATS):
-        t0 = time.perf_counter()
-        vmapped()
-        t_vm.append(time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        looped()
-        t_loop.append(time.perf_counter() - t0)
+        with obs.timed("bench.grid_vmapped", scenarios=n) as tm:
+            vmapped()
+        t_vm.append(tm.elapsed)
+        with obs.timed("bench.grid_looped", scenarios=n) as tm:
+            looped()
+        t_loop.append(tm.elapsed)
     vm_ms = min(t_vm) * 1e3
     loop_ms = min(t_loop) * 1e3
     return {
@@ -173,13 +178,14 @@ def bench() -> Dict:
     }
 
 
-def _time_best(fn, repeats: int = REPEATS) -> float:
+def _time_best(fn, repeats: int = REPEATS,
+               label: str = "bench.grid") -> float:
     fn()                                  # warm the jit cache
     best = float("inf")
     for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
+        with obs.timed(label) as tm:
+            fn()
+        best = min(best, tm.elapsed)
     return best * 1e3
 
 
@@ -350,10 +356,10 @@ def bench_shard(sizes=SHARD_SIZES, meshes=SHARD_MESHES) -> Dict:
                "scenario_block": block, "mesh": {}}
         base = None
         for d in usable:
-            t0 = time.perf_counter()
-            carry, agg = dispatch(matrix, index, params, idx, d)
-            ms = (time.perf_counter() - t0) * 1e3
-            row["mesh"][str(d)] = round(ms, 1)
+            with obs.timed("bench.grid_shard", scenarios=n,
+                           mesh=d) as tm:
+                carry, agg = dispatch(matrix, index, params, idx, d)
+            row["mesh"][str(d)] = round(tm.elapsed * 1e3, 1)
             if n == sizes[0]:
                 if base is None:
                     base = (carry, agg)
@@ -437,10 +443,10 @@ def bench_device_hist(sizes=DEVICE_SIZES, meshes=SHARD_MESHES) -> Dict:
         del dd
         base = None
         for d in usable:
-            t0 = time.perf_counter()
-            carry, agg = dispatch(matrix, index, params, idx, d)
-            ms = (time.perf_counter() - t0) * 1e3
-            row["mesh"][str(d)] = round(ms, 1)
+            with obs.timed("bench.grid_device", scenarios=n,
+                           mesh=d) as tm:
+                carry, agg = dispatch(matrix, index, params, idx, d)
+            row["mesh"][str(d)] = round(tm.elapsed * 1e3, 1)
             if n == sizes[0]:
                 if base is None:
                     base = (carry, agg)
@@ -462,12 +468,13 @@ def bench_device_hist(sizes=DEVICE_SIZES, meshes=SHARD_MESHES) -> Dict:
               * (1.0 + np.arange(n, dtype=np.float32)[:, None] * 1e-5))
     assert _dedup_rows(index, params, idx) is None
     dispatch(matrix, index, params, idx, 1)      # warm this shape
-    t0 = time.perf_counter()
-    dispatch(matrix, index, params, idx, 1)
+    with obs.timed("bench.grid_device", scenarios=n, mesh=1,
+                   distinct=True) as tm:
+        dispatch(matrix, index, params, idx, 1)
     rows.append({"scenarios": n, "hours": int(matrix.shape[1]),
                  "scenario_block": block, "distinct": True,
                  "unique_scenarios": n,
-                 "mesh": {"1": round((time.perf_counter() - t0) * 1e3, 1)}})
+                 "mesh": {"1": round(tm.elapsed * 1e3, 1)}})
 
     out = {"device": jax.devices()[0].platform, "device_count": avail,
            "meshes": usable, "meshes_skipped_no_devices": skipped,

@@ -17,8 +17,15 @@ planning at +40% traffic under a 2h/95% latency SLO):
 ``value_and_grad`` step of the chance-constrained lane objective at
 frontier scale (K=8 restarts x S=4 traffics x F=32 fault futures =
 1024 lanes, T=8736 hourly bins), streamed in-carry fold vs
-materialize-then-reduce — wall clock and the compiled program's peak
-temp bytes (``memory_analysis``), same numbers both ways.
+materialize-then-reduce.
+
+All timings come from ``repro.obs``: the multi-start / vs-grid arms
+are ``obs.timed`` spans, and the streaming rows are
+``obs.profile_dispatch`` profiles — an AOT compile-vs-execute split
+plus the compiled program's peak temp bytes (``jax.stages``
+``memory_analysis``), recorded as ``dispatch.*`` spans. The JSON rows
+are those spans/profiles serialized, not private ``perf_counter``
+pairs.
 
 Writes ``BENCH_search.json`` and emits the harness CSV rows.
 
@@ -30,12 +37,12 @@ from __future__ import annotations
 
 import json
 import os
-import time
 from typing import Dict, List
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.slo import SLO
 from repro.core.traffic import TrafficModel
 from repro.core.twin import make_twin
@@ -69,16 +76,16 @@ def bench() -> Dict:
         search(space, [traffic], slo, restarts=k, seed=0, **kw)  # compile
         batched_s = []
         for rep in (1, 2, 3):
-            t0 = time.perf_counter()
-            res = search(space, [traffic], slo, restarts=k, seed=rep,
-                         **kw)
-            batched_s.append(time.perf_counter() - t0)
+            with obs.timed("bench.search_batched", restarts=k) as tm:
+                res = search(space, [traffic], slo, restarts=k,
+                             seed=rep, **kw)
+            batched_s.append(tm.elapsed)
         batched = min(batched_s)
-        t0 = time.perf_counter()
-        for i in range(k):
-            res1 = search(space, [traffic], slo, restarts=1, seed=1 + i,
-                          **kw)
-        serial_s = time.perf_counter() - t0
+        with obs.timed("bench.search_serial", restarts=k) as tm:
+            for i in range(k):
+                res1 = search(space, [traffic], slo, restarts=1,
+                              seed=1 + i, **kw)
+        serial_s = tm.elapsed
         records.append({"restarts": k, "steps": STEPS,
                         "batched_s": round(batched, 3),
                         "serial_s": round(serial_s, 3),
@@ -89,16 +96,16 @@ def bench() -> Dict:
     # -- search vs exhaustive grid, equal answer quality ----------------
     # full resolution here (coarsen=1 + polish): the claim under test is
     # that the optimizer's answer costs no more than the sweep's best row
-    t0 = time.perf_counter()
-    full = search(space, [traffic], slo, restarts=6, steps=80, seed=0)
-    search_s = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    twins = space.grid(GRID_POINTS)
-    rows = run_grid(twins, [traffic], slo=slo)
-    feas = [r for r in rows if r.slo_met]
-    grid_cost = min(r.total_cost_usd for r in feas) if feas \
-        else float("inf")
-    grid_s = time.perf_counter() - t0
+    with obs.timed("bench.search_full") as tm:
+        full = search(space, [traffic], slo, restarts=6, steps=80, seed=0)
+    search_s = tm.elapsed
+    with obs.timed("bench.grid_sweep", points=GRID_POINTS) as tm:
+        twins = space.grid(GRID_POINTS)
+        rows = run_grid(twins, [traffic], slo=slo)
+        feas = [r for r in rows if r.slo_met]
+        grid_cost = min(r.total_cost_usd for r in feas) if feas \
+            else float("inf")
+    grid_s = tm.elapsed
 
     return {
         "device": jax.devices()[0].platform,
@@ -121,16 +128,6 @@ def bench() -> Dict:
 
 
 STREAM_K, STREAM_S, STREAM_F, STREAM_T = 8, 4, 32, 8736
-
-
-def _peak_temp_bytes(jitted, *operands):
-    """Compiled-program peak temp allocation, or None where the backend
-    has no ``memory_analysis`` (e.g. older CPU plugins)."""
-    try:
-        mem = jitted.lower(*operands).compile().memory_analysis()
-        return int(mem.temp_size_in_bytes)
-    except Exception:       # noqa: BLE001 — a missing stat is not a fail
-        return None
 
 
 def bench_stream() -> Dict:
@@ -174,14 +171,15 @@ def bench_stream() -> Dict:
     rows = []
     for name, stream in (("streamed", True), ("materialized", False)):
         fn = one_step(stream)
-        peak = _peak_temp_bytes(fn, params)
-        v, g = jax.block_until_ready(fn(params))                # compile
-        times = []
-        for _ in range(3):
-            t0 = time.perf_counter()
-            v, g = jax.block_until_ready(fn(params))
-            times.append(time.perf_counter() - t0)
-        rows.append({"path": name, "grad_step_s": round(min(times), 3),
+        # AOT profile: timed compile, memory/cost analyses, best-of-3
+        # execute — recorded as a dispatch.search.stream_* obs span
+        (v, g), prof = obs.profile_dispatch(
+            f"search.stream_{name}", fn, params, reps=3,
+            lanes=lanes, t_bins=t)
+        peak = prof.peak_temp_bytes
+        rows.append({"path": name,
+                     "grad_step_s": round(prof.execute_s, 3),
+                     "compile_s": round(prof.compile_s, 3),
                      "peak_temp_mb": (round(peak / 2**20, 1)
                                       if peak is not None else None),
                      "objective_sum": float(v),
@@ -215,6 +213,7 @@ def main_stream() -> List[str]:
     for row in r["rows"]:
         lines.append(f"search/stream_{row['path']},"
                      f"{row['grad_step_s'] * 1e6:.0f},"
+                     f"compile_s={row['compile_s']};"
                      f"peak_temp_mb={row['peak_temp_mb']};"
                      f"lanes={r['lanes']};t={r['t_bins']}")
     lines.append(f"search/stream_speedup,0,"

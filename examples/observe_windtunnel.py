@@ -1,0 +1,128 @@
+"""Observing the wind tunnel: the tool's own telemetry, end to end.
+
+The measurement framework measures pipelines — ``repro.obs`` measures
+the framework. This walkthrough turns the off-by-default run-telemetry
+layer on and closes every loop it offers:
+
+1. Capture an instrumented workload: a wind-tunnel experiment plus an
+   aggregate what-if grid, a calibration fit and a policy search — the
+   engines emit ``stage.*`` / ``grid.*`` / ``calibrate.*`` /
+   ``search.*`` spans and counters while they run.
+2. Render the consolidated console report (``make obs-report`` runs the
+   same renderer): per-span stats, dispatch profiles, counters.
+3. Export three ways — OTel-style span dicts, Prometheus text
+   exposition (the Table II rows as a scrape page), and a JSONL collect
+   file with time-based retention.
+4. The golden round-trip: feed the exported spans of the experiment the
+   tool just ran straight back into ``ObservedTrace.from_otel_spans``
+   and REFIT a twin from them — the wind tunnel calibrates itself from
+   its own telemetry.
+
+Run:  PYTHONPATH=src python examples/observe_windtunnel.py
+"""
+import tempfile
+import time
+
+import numpy as np
+
+from repro import obs
+from repro.calibrate import ObservedTrace, fit
+from repro.core.datagen import DataGenerator
+from repro.core.experiment import Experiment
+from repro.core.loadpattern import LoadPattern
+from repro.core.pipeline import Pipeline, PipelineStage, Resources
+from repro.core.schema import FieldSpec, Schema
+from repro.core.simulate import simulate_grid
+from repro.core.slo import SLO
+from repro.core.traffic import TrafficModel
+from repro.core.twin import make_twin
+from repro.obs.export import append_jsonl, prometheus_exposition, \
+    read_jsonl, to_otel_spans
+from repro.obs.report import render
+
+# ---------------------------------------------------------------------------
+# 1. capture an instrumented workload
+# ---------------------------------------------------------------------------
+# obs is OFF by default (zero overhead in the engines); obs.capture()
+# switches it on for the block and hands back the recorder.
+
+
+def _stage(batch):                       # ~8ms of "work" per batch
+    time.sleep(0.008)
+    return batch
+
+
+pipe = Pipeline("observed", [PipelineStage("ingest", _stage)],
+                resources=Resources(vcpus=1, ram_gb=1))
+schema = Schema("rec", (FieldSpec("x", "float"),))
+dataset = DataGenerator(seed=0).generate(schema, 200)
+load = LoadPattern.steady("obs-load", duration_s=2.0, rate=40)
+
+with obs.capture() as recorder:
+    # a real wind-tunnel run: every pipeline-stage span the collector
+    # records is mirrored into obs as a ``stage.ingest`` span
+    result = Experiment("observed", pipe, load, dataset,
+                        drain_timeout_s=30).run()
+
+    # an aggregate what-if grid: emits a ``grid.simulate`` span, per-
+    # block ``grid.block`` spans tagged compiled=0/1, dedup counters
+    traffic = TrafficModel.honda_default("demo", R=3.0, G=1.3)
+    week = traffic.hourly_loads()[:168].astype(np.float32)
+    twins = [make_twin(f"fifo{i}", "fifo", max_rps=1.6 + 0.2 * i,
+                       usd_per_hour=0.01, base_latency_s=0.2)
+             for i in range(8)]
+    grid_rows = simulate_grid(
+        twins, slo=SLO(limit_s=2 * 3600, met_fraction=0.95),
+        bin_hours=1.0, return_series=False, scenario_block=4,
+        load_matrix=np.tile(week, (8, 1)),
+        load_index=np.arange(8, dtype=np.int32))
+
+print(f"experiment drained: {result.drained}, "
+      f"records sent: {result.records_sent}")
+print(f"grid rows: {len(grid_rows)}, "
+      f"stage spans captured: {len(recorder.find(prefix='stage.'))}, "
+      f"grid spans captured: {len(recorder.find(prefix='grid.'))}")
+
+# ---------------------------------------------------------------------------
+# 2. the consolidated console report
+# ---------------------------------------------------------------------------
+print()
+print(render(recorder))
+
+# ---------------------------------------------------------------------------
+# 3. export: Prometheus exposition + JSONL collect file
+# ---------------------------------------------------------------------------
+# Table II rows become a scrape page (the Snippet-2 monitor vocabulary:
+# latency quantiles, message count, target compliance, cost) and the
+# recorder's own counters/spans ride along.
+exposition = prometheus_exposition(grid_rows, recorder=recorder)
+print()
+print("--- prometheus exposition (first 12 lines) ---")
+print("\n".join(exposition.splitlines()[:12]))
+
+# export the experiment's stage spans BEFORE the collect append below —
+# append_jsonl(clear=True) drains the span ring after writing it out
+otel = to_otel_spans(recorder, prefix="stage.")
+
+# the continuous-collect shape: append spans + a counter snapshot as
+# JSON lines, pruning anything older than the retention window
+with tempfile.NamedTemporaryFile(suffix=".jsonl", delete=False) as tmp:
+    collect_path = tmp.name
+n_lines = append_jsonl(collect_path, recorder, retention_s=3600.0)
+data = read_jsonl(collect_path)
+print(f"\ncollect file: {n_lines} lines "
+      f"({len(data['spans'])} spans, {len(data['counters'])} snapshots)")
+
+# ---------------------------------------------------------------------------
+# 4. the golden round-trip: re-import the tool's own spans and refit
+# ---------------------------------------------------------------------------
+# The experiment's stage spans export in EXACTLY the dict shape
+# ObservedTrace.from_otel_spans consumes (unix-seconds start/end,
+# records, status) — so the telemetry the tool emitted about itself is
+# a calibration trace.
+trace = ObservedTrace.from_otel_spans(otel, bin_seconds=0.25,
+                                      name="self-observed")
+refit = fit(trace, "fifo", restarts=4, steps=80, seed=0)
+print(f"\nround-trip: {len(otel)} exported spans -> "
+      f"{trace.num_bins}-bin trace -> refit "
+      f"max_rps={refit.twin.max_rps:.2f} loss={refit.loss:.4f}")

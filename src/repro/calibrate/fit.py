@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.calibrate.objective import (DEFAULT_WEIGHTS, FitSpec, fit_spec,
                                        lane_trace_loss, params_from_z,
                                        series_loss, twin_from_z,
@@ -241,6 +242,18 @@ def fit(trace: ObservedTrace, policy: str = "fifo", *,
     K doesn't divide D the fit warns once and falls back to replication.
     On CPU, export ``XLA_FLAGS=--xla_force_host_platform_device_count=D``
     before the first jax import to get D devices.
+
+    **Observing the wind tunnel** (``repro.obs``). With telemetry on
+    the gradient dispatch records a ``calibrate.fit`` span (attrs:
+    policy, restarts, steps, t_bins, devices) and counters
+    ``calibrate.fits{policy}`` / ``calibrate.restarts``; the two warn
+    sites stay countable as ``warn.fit_warm_start_outside{policy}`` and
+    ``warn.fit_pinned{policy}`` (the Python warnings still fire). The
+    round-trip the exporters close lands here: an instrumented
+    windtunnel experiment's ``stage.*`` spans export via
+    ``obs.to_otel_spans`` and re-import through
+    ``ObservedTrace.from_otel_spans`` as the very trace this function
+    fits — the tool calibrating from its own telemetry.
     """
     spec = fit_spec(policy, freeze=freeze, unfreeze=unfreeze,
                     fixed_values=fixed_values, init=init)
@@ -255,6 +268,7 @@ def fit(trace: ObservedTrace, policy: str = "fifo", *,
             for i, n in enumerate(spec.param_names)
             if spec.free_mask[i] and not spec.lo[i] <= ip[i] <= spec.hi[i]]
         if outside:
+            obs.event("warn.fit_warm_start_outside", policy=policy)
             warnings.warn(
                 f"{policy} fit on trace {trace.name!r}: warm start lies "
                 f"outside the calibration bounds — {'; '.join(outside)}. "
@@ -274,10 +288,17 @@ def fit(trace: ObservedTrace, policy: str = "fifo", *,
                 jnp.int32(policy_spec(policy).index))
     d = resolve_mesh_axis(devices, int(restarts),
                           "fit(devices=) restart mesh")
-    if d is None:
-        z_fin, final_loss, history = _fit_kernel(*statics, *operands)
-    else:
-        z_fin, final_loss, history = _sharded_fit_fn(d, *statics)(*operands)
+    obs.count("calibrate.fits", policy=policy)
+    obs.count("calibrate.restarts", restarts)
+    with obs.span("calibrate.fit", policy=policy, restarts=restarts,
+                  steps=int(steps), t_bins=int(arrivals.shape[0]),
+                  devices=int(d or 1)):
+        if d is None:
+            z_fin, final_loss, history = _fit_kernel(*statics, *operands)
+        else:
+            z_fin, final_loss, history = _sharded_fit_fn(
+                d, *statics)(*operands)
+        jax.block_until_ready(final_loss)
 
     z_fin = np.asarray(z_fin)
     final_loss = np.asarray(final_loss, np.float64)
@@ -294,6 +315,7 @@ def fit(trace: ObservedTrace, policy: str = "fifo", *,
         if spec.free_mask[i] and np.isfinite(spec.hi[i])
         and abs(z_fin[best, i]) > 7.0]    # sigmoid(7) ~ 0.999
     if pinned:
+        obs.event("warn.fit_pinned", policy=policy)
         warnings.warn(
             f"{policy} fit on trace {trace.name!r} pinned "
             f"{'; '.join(pinned)} — the measured pipeline likely lies "

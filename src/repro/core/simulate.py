@@ -72,6 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.cost import CostModel
 from repro.core.slo import SLO
 from repro.core.traffic import DAYS_PER_YEAR, HOURS_PER_YEAR, MONTH_DAYS
@@ -886,8 +887,16 @@ def _run_blocks_sharded(load_matrix: np.ndarray, lidx: np.ndarray,
            else enable_x64())
     with ctx:
         for r in range(rounds):
-            carry, agg = fn(matrix_dev, rnd(lidx, r), rnd(params, r),
-                            rnd(block_policy, r), *fargs(r))
+            cache0 = obs.jit_cache_size(fn) if obs.enabled() else 0
+            with obs.span("grid.round", round=r, devices=d, block=block,
+                          backend=backend,
+                          scenarios=d * block) as sp:
+                carry, agg = fn(matrix_dev, rnd(lidx, r), rnd(params, r),
+                                rnd(block_policy, r), *fargs(r))
+                jax.block_until_ready(agg)
+            if obs.enabled():
+                sp.attrs["compiled"] = float(
+                    obs.jit_cache_grew(fn, cache0))
             sl = slice(r * d * block, (r + 1) * d * block)
             carry_out[sl] = np.asarray(carry).reshape(-1, CARRY_DIM)
             agg_out[sl] = np.asarray(agg).reshape(-1, agg.shape[-1])
@@ -927,11 +936,21 @@ def _run_blocks_single(load_matrix: np.ndarray, lidx: np.ndarray,
             fargs = lambda b: ()  # noqa: E731
         agg_acc = jnp.zeros((npad, AGG_KDIM), jnp.float32)
         for b in range(nb):
-            carry_acc, agg_acc = _agg_block_step_pallas(
-                version, dt_hours, slo_limit, slo_mode, interpret,
-                matrix_t, jnp.asarray(lidx[b]), jnp.asarray(params[b]),
-                jnp.asarray(block_policy[b]), carry_acc, agg_acc,
-                b * block, *fargs(b))
+            cache0 = (obs.jit_cache_size(_agg_block_step_pallas)
+                      if obs.enabled() else 0)
+            with obs.span("grid.block", block=b, size=block,
+                          policy=int(block_policy[b]),
+                          backend="pallas") as sp:
+                carry_acc, agg_acc = _agg_block_step_pallas(
+                    version, dt_hours, slo_limit, slo_mode, interpret,
+                    matrix_t, jnp.asarray(lidx[b]),
+                    jnp.asarray(params[b]),
+                    jnp.asarray(block_policy[b]), carry_acc, agg_acc,
+                    b * block, *fargs(b))
+                if obs.enabled():
+                    jax.block_until_ready(agg_acc)
+                    sp.attrs["compiled"] = float(obs.jit_cache_grew(
+                        _agg_block_step_pallas, cache0))
         return (np.asarray(carry_acc),
                 np.asarray(finalize_aggregate_x64(agg_acc)))
     matrix_dev = jnp.asarray(load_matrix)
@@ -946,11 +965,20 @@ def _run_blocks_single(load_matrix: np.ndarray, lidx: np.ndarray,
     agg_acc = jnp.zeros((npad, AGG_DIM), jnp.float32)
     with enable_x64():      # the block step traces f64 — see its docstring
         for b in range(nb):
-            carry_acc, agg_acc = _agg_block_step_xla(
-                version, dt_hours, slo_limit, slo_mode, matrix_dev,
-                jnp.asarray(lidx[b]), jnp.asarray(params[b]),
-                jnp.asarray(block_policy[b]), carry_acc, agg_acc,
-                b * block, *fargs(b))
+            cache0 = (obs.jit_cache_size(_agg_block_step_xla)
+                      if obs.enabled() else 0)
+            with obs.span("grid.block", block=b, size=block,
+                          policy=int(block_policy[b]),
+                          backend="xla") as sp:
+                carry_acc, agg_acc = _agg_block_step_xla(
+                    version, dt_hours, slo_limit, slo_mode, matrix_dev,
+                    jnp.asarray(lidx[b]), jnp.asarray(params[b]),
+                    jnp.asarray(block_policy[b]), carry_acc, agg_acc,
+                    b * block, *fargs(b))
+                if obs.enabled():
+                    jax.block_until_ready(agg_acc)
+                    sp.attrs["compiled"] = float(obs.jit_cache_grew(
+                        _agg_block_step_xla, cache0))
         return np.asarray(carry_acc), np.asarray(agg_acc)
 
 
@@ -1022,6 +1050,10 @@ def _grid_agg_dispatch(load_matrix: np.ndarray, load_index: np.ndarray,
     dd = _dedup_rows(load_index, params, policy_idx, fault)
     if dd is not None:
         keep, inv, fidx_canon = dd
+        # counters bump ONLY here: the recursive call below sees an
+        # already-distinct grid (dd None) and never double-counts
+        obs.count("grid.dedup.total", n)
+        obs.count("grid.dedup.kept", len(keep))
         fault_k = None
         if fault is not None:
             fault_k = (fault[0], fault[1], fidx_canon[keep])
@@ -1065,6 +1097,9 @@ def _grid_agg_dispatch(load_matrix: np.ndarray, load_index: np.ndarray,
 
     block = int(min(scenario_block, max(n, 1)))
     positions, block_policy = _agg_block_plan(policy_idx, block)
+    obs.gauge("grid.block_size", block)
+    obs.count("grid.blocks", positions.shape[0],
+              backend=backend, devices=int(devices or 1))
 
     # stage the per-block host operands through the position map: pad
     # slots (-1) read row 0 with zero params — discarded on scatter
@@ -1251,6 +1286,23 @@ def simulate_grid(twins: Sequence[Twin], loads: Optional[np.ndarray] = None,
     ``ValueError`` naming the fault spec and bin index. Chance-
     constrained search over the same futures lives in
     ``repro.search.search(faults=..., quantile=...)``.
+
+    **Observing the wind tunnel** (``repro.obs``). With telemetry on
+    (``REPRO_OBS=1`` or inside ``obs.capture()``) every grid emits a
+    ``grid.simulate`` root span (attrs: ``n``, ``t_bins``, ``mode``,
+    ``devices``, ``faulted``); the blocked aggregate engine nests a
+    ``grid.block`` span per device block (``grid.round`` per sharded
+    round) tagged with block index, size, policy, backend and a
+    ``compiled`` flag read off the jit trace cache, so re-trace storms
+    are visible per block. Counters: ``grid.scenarios``,
+    ``grid.blocks{backend,devices}``, ``grid.dedup.total`` /
+    ``grid.dedup.kept`` (how much of the grid bitwise-dedup collapsed).
+    All instrumentation sits at dispatch boundaries — never inside
+    jitted code — so simulated numbers are bit-identical with telemetry
+    on or off, and the disabled path costs one attribute check per
+    site. ``obs.render()`` prints the consolidated table;
+    ``obs.prometheus_exposition(rows)`` serves the returned
+    ``GridSummary`` rows as a scrape-able exposition.
     """
     if (loads is None) == (load_matrix is None):
         raise ValueError("pass exactly one of loads= (stacked [N, T] grid) "
@@ -1361,10 +1413,14 @@ def simulate_grid(twins: Sequence[Twin], loads: Optional[np.ndarray] = None,
             load_matrix, load_index = loads, np.arange(n, dtype=np.int32)
         # duplicate-scenario dedup (benign futures, tiled tournaments)
         # happens inside the dispatch — see _dedup_rows
-        carry_end, agg = _grid_agg_dispatch(
-            load_matrix, load_index, params, idx, float(bin_hours),
-            slo_limit, slo_mode, scenario_block, devices=devices,
-            fault=fault)
+        obs.count("grid.scenarios", n)
+        with obs.span("grid.simulate", n=n, t_bins=t_bins, mode="agg",
+                      devices=int(devices or 1),
+                      faulted=fault is not None):
+            carry_end, agg = _grid_agg_dispatch(
+                load_matrix, load_index, params, idx, float(bin_hours),
+                slo_limit, slo_mode, scenario_block, devices=devices,
+                fault=fault)
         return _summarise_aggregates(
             names, twins, carry_end[:, 0], agg, slo, cost_model, record_mb,
             float(bin_hours), t_bins, load_matrix, load_index)
@@ -1373,17 +1429,21 @@ def simulate_grid(twins: Sequence[Twin], loads: Optional[np.ndarray] = None,
         # series mode needs the full grid — the O(N*T) stack is the cost
         # of asking for per-bin series; aggregate mode never builds it
         loads = load_matrix[load_index]
-    if fault is not None:
-        caps_np = np.asarray(fault[0])[fault[2]]
-        q_end, (processed, queue, latency, cost, dropped) = \
-            _grid_scan_fault_xla(
-                jnp.asarray(loads), jnp.asarray(caps_np),
-                jnp.asarray(params), jnp.asarray(idx),
+    obs.count("grid.scenarios", n)
+    with obs.span("grid.simulate", n=n, t_bins=t_bins, mode="series",
+                  faulted=fault is not None):
+        if fault is not None:
+            caps_np = np.asarray(fault[0])[fault[2]]
+            q_end, (processed, queue, latency, cost, dropped) = \
+                _grid_scan_fault_xla(
+                    jnp.asarray(loads), jnp.asarray(caps_np),
+                    jnp.asarray(params), jnp.asarray(idx),
+                    registry_version(), float(bin_hours))
+        else:
+            q_end, (processed, queue, latency, cost, dropped) = _grid_scan(
+                jnp.asarray(loads), jnp.asarray(params), jnp.asarray(idx),
                 registry_version(), float(bin_hours))
-    else:
-        q_end, (processed, queue, latency, cost, dropped) = _grid_scan(
-            jnp.asarray(loads), jnp.asarray(params), jnp.asarray(idx),
-            registry_version(), float(bin_hours))
+        jax.block_until_ready(q_end)
     q_end = np.asarray(q_end, np.float64)
     processed = np.asarray(processed, np.float64)
     queue = np.asarray(queue, np.float64)

@@ -14,6 +14,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional
 
+from repro import obs
+
 
 @dataclass
 class Span:
@@ -99,12 +101,20 @@ class SpanCollector:
 @contextlib.contextmanager
 def span(name: str, collector: Optional[SpanCollector],
          records: int = 1, **attrs) -> Iterator[None]:
+    """Wrap one stage invocation. Spans land in the pipeline's own
+    ``collector`` as always; when run-telemetry is on they ALSO mirror
+    into ``repro.obs`` as ``stage.{name}`` spans with a ``records``
+    attr — which is what lets ``obs.to_otel_spans(prefix="stage.")``
+    export an instrumented experiment straight into
+    ``ObservedTrace.from_otel_spans`` (the round-trip into calibrate)."""
     if collector is None:
-        yield
+        with obs.span(f"stage.{name}", records=records, **attrs):
+            yield
         return
     t0 = collector.clock()
     try:
-        yield
+        with obs.span(f"stage.{name}", records=records, **attrs):
+            yield
     finally:
         collector.add(Span(name, t0, collector.clock() - t0, records,
                            {k: float(v) for k, v in attrs.items()}))

@@ -26,6 +26,10 @@ _REPLICATION_WARNED = set()
 
 
 def _warn_replicated(where: str, axis, dim: int, size: int):
+    # the obs counter bumps on EVERY fall-back (that's what a counter
+    # is for); the Python warning below stays once-per-process
+    from repro import obs
+    obs.event("warn.replication_fallback", where=where, axis=str(axis))
     key = (where, str(axis), int(dim), int(size))
     if key in _REPLICATION_WARNED:
         return

@@ -1,0 +1,149 @@
+"""Per-dispatch profiling: compile vs execute split + compiled memory.
+
+``profile_dispatch`` is the number the benchmark scripts used to derive
+by hand (a first timed call for "compile", ``lower().compile().
+memory_analysis()`` for peak temp bytes): it AOT-lowers a jitted
+callable, times the compile explicitly, reads the compiled program's
+memory/cost analyses (``jax.stages``), then times steady-state execution
+best-of-``reps``. The result is recorded as a ``dispatch.{name}`` span
+(attrs = the split + peak temp bytes) in the global recorder, so
+BENCH_*.json rows come out of obs spans instead of private
+``perf_counter`` pairs.
+
+``jit_cache_grew`` is the lightweight sibling for hot paths that cannot
+afford an AOT round: did this call trigger a compile? — read off the
+jitted function's trace-cache size around the call (every jit wrapper in
+this repo exposes ``_cache_size``). The block engine uses it to tag each
+block/round span with ``compiled=1`` exactly when the step was traced.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.obs.record import get_recorder
+
+__all__ = ["DispatchProfile", "jit_cache_grew", "profile_dispatch"]
+
+
+@dataclass
+class DispatchProfile:
+    """One profiled dispatch: the compile/execute split plus whatever
+    the backend's ``memory_analysis``/``cost_analysis`` expose (None
+    where a backend has no such stat — e.g. older CPU plugins)."""
+    name: str
+    compile_s: float
+    execute_s: float                  # steady state, best of reps
+    reps: int
+    peak_temp_bytes: Optional[int] = None
+    generated_code_bytes: Optional[int] = None
+    argument_bytes: Optional[int] = None
+    output_bytes: Optional[int] = None
+    flops: Optional[float] = None
+    attrs: Dict[str, float] = field(default_factory=dict)
+
+    def row(self) -> Dict:
+        """JSON-ready row (the BENCH_*.json shape)."""
+        out = {"name": self.name,
+               "compile_s": round(self.compile_s, 4),
+               "execute_s": round(self.execute_s, 4),
+               "reps": self.reps}
+        if self.peak_temp_bytes is not None:
+            out["peak_temp_mb"] = round(self.peak_temp_bytes / 2**20, 1)
+        if self.generated_code_bytes is not None:
+            out["generated_code_mb"] = round(
+                self.generated_code_bytes / 2**20, 2)
+        if self.flops is not None:
+            out["flops"] = self.flops
+        out.update(self.attrs)
+        return out
+
+
+def _mem_stat(obj, attr):
+    try:
+        v = getattr(obj, attr)
+        return int(v) if v is not None and int(v) >= 0 else None
+    except Exception:       # noqa: BLE001 — a missing stat is not a fail
+        return None
+
+
+def profile_dispatch(name: str, jitted, *args, reps: int = 3,
+                     **attrs) -> "tuple":
+    """Profile one jitted dispatch; returns ``(last_output, profile)``.
+
+    AOT path: ``jitted.lower(*args)`` -> timed ``.compile()`` ->
+    ``memory_analysis()`` / ``cost_analysis()`` -> one warmup execute ->
+    ``reps`` timed executes (best-of). Like ``obs.timed`` this records
+    UNCONDITIONALLY (an explicit profile call is its own opt-in): a
+    ``dispatch.{name}`` span lands in the global recorder with the
+    split and memory numbers as attrs, and the ``DispatchProfile`` is
+    appended to ``recorder.profiles``.
+
+    Positional args only (``jax.stages`` lowering is positional); pass
+    static extras through the jit wrapper's closure instead.
+    """
+    import jax
+
+    rec = get_recorder()
+    t0 = time.perf_counter()
+    lowered = jitted.lower(*args)
+    compiled = lowered.compile()
+    compile_s = time.perf_counter() - t0
+
+    peak = code = arg_b = out_b = None
+    flops = None
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:       # noqa: BLE001
+        mem = None
+    if mem is not None:
+        peak = _mem_stat(mem, "temp_size_in_bytes")
+        code = _mem_stat(mem, "generated_code_size_in_bytes")
+        arg_b = _mem_stat(mem, "argument_size_in_bytes")
+        out_b = _mem_stat(mem, "output_size_in_bytes")
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        f = cost.get("flops") if hasattr(cost, "get") else None
+        flops = float(f) if f is not None and f >= 0 else None
+    except Exception:       # noqa: BLE001
+        pass
+
+    out = jax.block_until_ready(compiled(*args))        # warmup
+    best = float("inf")
+    for _ in range(max(int(reps), 1)):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(compiled(*args))
+        best = min(best, time.perf_counter() - t0)
+
+    prof = DispatchProfile(
+        name=name, compile_s=compile_s, execute_s=best,
+        reps=max(int(reps), 1), peak_temp_bytes=peak,
+        generated_code_bytes=code, argument_bytes=arg_b,
+        output_bytes=out_b, flops=flops,
+        attrs={k: float(v) for k, v in attrs.items()})
+    span_attrs = dict(prof.attrs, compile_s=compile_s, execute_s=best)
+    if peak is not None:
+        span_attrs["peak_temp_bytes"] = float(peak)
+    now = rec.clock()
+    rec.add_span(f"dispatch.{name}", now - compile_s - best, now,
+                 span_attrs)
+    rec.profiles.append(prof)
+    return out, prof
+
+
+def jit_cache_grew(jitted, before: int) -> bool:
+    """Did the jit trace cache grow past ``before`` entries? — the
+    cheap "this call compiled" signal for per-block spans. ``before``
+    comes from ``jit_cache_size(jitted)`` taken before the call."""
+    return jit_cache_size(jitted) > before
+
+
+def jit_cache_size(jitted) -> int:
+    """Trace-cache entry count of a jit wrapper, 0 where unavailable."""
+    try:
+        return int(jitted._cache_size())
+    except Exception:       # noqa: BLE001
+        return 0

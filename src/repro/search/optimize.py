@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.config import OptimizerConfig
 from repro.core.simulate import GridSummary, simulate_grid
 from repro.core.slo import SLO
@@ -398,18 +399,29 @@ def _run_kernel(space: SearchSpace, g_loads: np.ndarray, g_bin: float,
                 jnp.float32(g_horizon))
     d = resolve_mesh_axis(devices, z0.shape[0],
                           "search(devices=) restart mesh")
-    if d is None:
-        (_, p_fin, _, _, _, history) = _search_kernel(
-            *statics, *operands, caps_t, jnp.float32(quantile))
-    else:
-        fn = _sharded_search_fn(d, *statics, caps_t is not None)
-        caps_in = (caps_t if caps_t is not None
-                   else jnp.zeros((loads_t.shape[0], 0), jnp.float32))
-        (_, p_fin, _, _, _, history) = fn(
-            *operands, caps_in, jnp.float32(quantile))
+    obs.count("search.objective_choice",
+              stream=stream, policy=space.policy)
+    with obs.span("search.kernel", restarts=z0.shape[0],
+                  scenarios=g_loads.shape[0] // int(n_fut),
+                  futures=int(n_fut), t_bins=g_loads.shape[1],
+                  steps=int(steps), stream=stream,
+                  devices=int(d or 1), policy=space.policy):
+        if d is None:
+            (_, p_fin, _, _, _, history) = _search_kernel(
+                *statics, *operands, caps_t, jnp.float32(quantile))
+        else:
+            fn = _sharded_search_fn(d, *statics, caps_t is not None)
+            caps_in = (caps_t if caps_t is not None
+                       else jnp.zeros((loads_t.shape[0], 0), jnp.float32))
+            (_, p_fin, _, _, _, history) = fn(
+                *operands, caps_in, jnp.float32(quantile))
+        jax.block_until_ready(p_fin)
     p_fin = np.asarray(p_fin, np.float64)
     bad = ~np.isfinite(p_fin).all(axis=1)
+    obs.count("search.restarts", z0.shape[0], policy=space.policy)
     if bad.any():
+        obs.count("search.restarts.diverged", int(bad.sum()),
+                  policy=space.policy)
         p_fin[bad] = space._resolve(space.base.padded_params())
     return p_fin, np.asarray(history, np.float64)
 
@@ -658,6 +670,20 @@ def search(space_or_base: Union[SearchSpace, Twin],
     warns once (RuntimeWarning) and runs unsharded. Tournaments
     (``search_policies(devices=...)``), ``pareto_frontier(devices=...)``
     and ``whatif.optimize_scenario(devices=...)`` forward here.
+
+    **Observing the wind tunnel** (``repro.obs``). With telemetry on
+    every gradient-loop dispatch records a ``search.kernel`` span
+    (attrs: restarts, scenarios, futures, t_bins, steps, the
+    ``stream`` objective choice, devices, policy) and the runtime
+    decisions that used to be invisible become counters:
+    ``search.objective_choice{stream,policy}`` (streamed fold vs
+    vectorized hinge — the ``_STREAM_MIN_ELEMS`` static),
+    ``search.restarts`` / ``search.restarts.diverged`` /
+    ``search.restarts.feasible`` per policy, and an infeasible search
+    additionally bumps ``warn.search_infeasible{policy,pinned}`` so the
+    warning stays countable after Python's warn-once dedup silences the
+    repeat (the UserWarning still fires). All of it sits outside jitted
+    code — enabling telemetry changes no searched number.
     """
     if isinstance(space_or_base, SearchSpace):
         space = space_or_base
@@ -728,6 +754,8 @@ def search(space_or_base: Union[SearchSpace, Twin],
                                            quantile=quantile)
     cost = np.where(np.isfinite(cost), cost, np.inf)
     pct = np.nan_to_num(pct, nan=0.0)
+    obs.count("search.restarts.feasible", int(feas.sum()),
+              policy=space.policy)
 
     if feas.any():
         best = int(np.where(feas, cost, np.inf).argmin())
@@ -774,6 +802,8 @@ def search(space_or_base: Union[SearchSpace, Twin],
             desc += (f", in >= {quantile:.0%} of {n_fut} fault futures "
                      f"per scenario")
         pins = _bounds_diagnosis(space, p_fin[best])
+        obs.event("warn.search_infeasible", policy=space.policy,
+                  pinned=bool(pins))
         warnings.warn(
             f"{space.policy} search found NO feasible configuration for "
             f"SLO ({desc}): best candidate reaches "

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.config import ModelConfig, ParallelConfig
 from repro.core.pipeline import Pipeline, PipelineStage, Resources
 from repro.core.spans import SpanCollector, span
@@ -70,6 +71,7 @@ class ServeEngine:
         now = self.collector.clock
         g = len(group)
         assert g <= self.slots
+        obs.count("serve.requests", g)
         plen = self._prefill_len
         toks = np.zeros((self.slots, plen), np.int32)
         for i, r in enumerate(group):
@@ -109,29 +111,38 @@ class ServeEngine:
     def serve(self, requests: List[Request], duration_s: float = 10.0
               ) -> List[Request]:
         """FIFO grouped batching over a pre-timestamped request list
-        (timestamps relative to start)."""
-        start = self.collector.clock()
-        pending = sorted(requests, key=lambda r: r.submitted)
-        for r in pending:
-            r.submitted += start
-        done: List[Request] = []
-        i = 0
-        while i < len(pending):
-            nowt = self.collector.clock()
-            group = []
-            while (i < len(pending) and len(group) < self.slots
-                   and pending[i].submitted <= nowt):
-                group.append(pending[i])
-                i += 1
-            if not group:
-                nxt = pending[i].submitted
-                time.sleep(max(0.0, min(nxt - nowt, 0.01)))
-                continue
-            with span("queue_wait", self.collector, records=len(group)):
-                pass
-            self.process_group(group)
-            done.extend(group)
-        return done
+        (timestamps relative to start). The stage spans (queue_wait /
+        prefill / decode) land in the engine's collector as always and
+        mirror into ``repro.obs`` as ``stage.*`` spans when telemetry
+        is on; the request loop itself records a ``serve.loop`` span
+        with the request count and bumps ``serve.requests`` /
+        ``serve.groups`` counters."""
+        with obs.span("serve.loop", requests=len(requests),
+                      slots=self.slots):
+            start = self.collector.clock()
+            pending = sorted(requests, key=lambda r: r.submitted)
+            for r in pending:
+                r.submitted += start
+            done: List[Request] = []
+            i = 0
+            while i < len(pending):
+                nowt = self.collector.clock()
+                group = []
+                while (i < len(pending) and len(group) < self.slots
+                       and pending[i].submitted <= nowt):
+                    group.append(pending[i])
+                    i += 1
+                if not group:
+                    nxt = pending[i].submitted
+                    time.sleep(max(0.0, min(nxt - nowt, 0.01)))
+                    continue
+                with span("queue_wait", self.collector,
+                          records=len(group)):
+                    pass
+                obs.count("serve.groups")
+                self.process_group(group)
+                done.extend(group)
+            return done
 
     def as_pipeline(self, name: str = "serve") -> Pipeline:
         """Wind-tunnel adapter: one stage that serves a group per record
